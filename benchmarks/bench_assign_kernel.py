@@ -1,0 +1,45 @@
+"""Beyond-paper: the assignment kernel family (CGSim assignJob == MoE router,
+DESIGN.md §3) — jnp oracle vs Pallas(interpret) on simulator- and
+router-shaped problems.  On CPU the interpret-mode kernel measures semantics,
+not speed; the oracle timing is the deployable-jnp datapoint."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.assign.ops import assign
+from repro.kernels.assign.ref import assign_ref
+
+from .common import csv_row, timed
+
+
+def main():
+    cases = [
+        ("jobs_x_sites", 4096, 64, 1),      # simulator dispatch shape
+        ("tokens_x_experts_granite", 8192, 32, 8),
+        ("tokens_x_experts_kimi", 4096, 384, 8),
+    ]
+    print("# assignment kernel (jobs->sites == tokens->experts)")
+    for name, N, E, k in cases:
+        rng = np.random.default_rng(0)
+        scores = jnp.asarray(rng.normal(size=(N, E)).astype(np.float32))
+        sizes = jnp.ones((N,), jnp.float32)
+        caps = jnp.full((E,), max(4.0, N * k / E * 1.25), jnp.float32)
+        f_ref = jax.jit(lambda s: assign_ref(s, sizes, caps, k=k))
+        t_ref = timed(f_ref, scores)
+        print(csv_row(f"assign_ref_{name}", t_ref * 1e6, f"N={N};E={E};k={k}"))
+        # interpret-mode correctness spot check vs oracle on this shape
+        out_k = assign(scores, sizes, caps, k=k, use_kernel=True)
+        out_r = assign(scores, sizes, caps, k=k, use_kernel=False)
+        ok = all(
+            np.allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+            for a, b in zip(out_k, out_r)
+        )
+        print(csv_row(f"assign_pallas_match_{name}", 0.0, f"allclose={ok}"))
+
+
+if __name__ == "__main__":
+    main()

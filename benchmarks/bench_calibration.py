@@ -1,0 +1,49 @@
+"""Paper Fig. 3 + §4.2: calibration across 50 WLCG-like sites.
+
+Headline reproduction: geometric-mean relative MAE of job walltime for
+single-core and multi-core jobs, before -> after calibration (paper: 76% ->
+17%), and the four-optimizer comparison (brute force / random / BO / CMA-ES;
+paper: random search wins)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import atlas_like_platform, synthetic_panda_jobs
+from repro.core.calibration import calibrate, closed_form_objective, make_synthetic_problem
+
+from .common import csv_row
+
+
+def run(n_jobs: int = 3000, n_sites: int = 50, seed: int = 2):
+    jobs = synthetic_panda_jobs(n_jobs, seed=0, duration=30 * 86400.0)
+    sites = atlas_like_platform(n_sites, seed=1)
+    # misconfig_sigma tuned so the uncalibrated error sits at the paper's ~76%
+    prob = make_synthetic_problem(jobs, sites, seed=seed, misconfig_sigma=1.05,
+                                  noise_sigma=0.15)
+    _, _, e0 = closed_form_objective(prob, prob.sites0.speed)
+    out = {"initial": (float(e0), 0.0)}
+    for method in ("grid", "random", "cma_es", "gp_bo"):
+        t0 = time.perf_counter()
+        r = calibrate(prob, method, seed=seed + 1)
+        jax.block_until_ready(r.err)
+        out[method] = (float(r.err), time.perf_counter() - t0)
+    return out
+
+
+def main():
+    out = run()
+    print("# Fig 3 calibration: geomean relative MAE across 50 sites")
+    e0 = out["initial"][0]
+    print(csv_row("calibration_initial", 0.0, f"geomean_err={e0:.3f}"))
+    for m in ("grid", "random", "cma_es", "gp_bo"):
+        err, wall = out[m]
+        print(csv_row(f"calibration_{m}", wall * 1e6, f"geomean_err={err:.3f}"))
+    best = min(("grid", "random", "cma_es", "gp_bo"), key=lambda m: out[m][0])
+    print(f"# paper: 76% -> 17%, random search best.  ours: {e0*100:.0f}% -> "
+          f"{out['random'][0]*100:.0f}% (random); best method: {best}")
+
+
+if __name__ == "__main__":
+    main()

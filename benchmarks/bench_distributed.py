@@ -1,0 +1,50 @@
+"""Paper abstract claim: "distributed workloads achieving 6x better
+performance compared to single-site execution" — simulated makespan of a
+fixed PanDA-like workload on 1 site vs spread over 50 sites."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import (
+    atlas_like_platform,
+    compute_metrics,
+    get_policy,
+    simulate,
+    synthetic_panda_jobs,
+)
+
+from .common import csv_row
+
+
+def run(n_jobs: int = 2000):
+    jobs = synthetic_panda_jobs(n_jobs, seed=0, duration=3600.0)
+    pol = get_policy("shortest_wait")
+    grid50 = atlas_like_platform(50, seed=1)
+    # single MEDIAN site (atlas_like_platform(1) would make it a Tier-1):
+    # the paper compares the grid against a representative single site
+    from repro.core import make_sites
+    import numpy as np
+    cores = int(np.median(np.asarray(grid50.cores)))
+    single = make_sites(cores=[cores], speed=[float(np.median(np.asarray(grid50.speed)))],
+                        memory=[2.0 * cores], bw_in=[1.25e9], bw_out=[1.25e9])
+    res1 = simulate(jobs, single, pol, jax.random.PRNGKey(0), max_rounds=5 * n_jobs)
+    res50 = simulate(jobs, grid50, pol, jax.random.PRNGKey(0), max_rounds=5 * n_jobs)
+    return res1, res50
+
+
+def main():
+    res1, res50 = run()
+    m1, m50 = compute_metrics(res1), compute_metrics(res50)
+    speedup = float(res1.makespan) / float(res50.makespan)
+    print("# distributed vs single-site (fixed workload)")
+    print(csv_row("single_site_makespan", float(res1.makespan) * 1e6,
+                  f"util={float(m1.core_utilization):.2f}"))
+    print(csv_row("grid50_makespan", float(res50.makespan) * 1e6,
+                  f"util={float(m50.core_utilization):.2f}"))
+    print(csv_row("distributed_speedup", 0.0, f"x{speedup:.1f}"))
+    print(f"# paper: ~6x; ours: {speedup:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper Fig. 4(b): multi-site scaling — wall time vs number of sites at a
+fixed density of 200 jobs/site (1..50 sites; paper: <50 s -> ~400 s,
+near-linear)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import atlas_like_platform, get_policy, simulate, synthetic_panda_jobs
+
+from .common import csv_row
+
+
+def run(site_counts=(1, 5, 10, 25, 50), jobs_per_site: int = 200, iters: int = 2,
+        quantum: float = 0.0):
+    pol = get_policy("panda_dispatch")
+    rows = []
+    for s in site_counts:
+        n = s * jobs_per_site
+        jobs = synthetic_panda_jobs(n, seed=0, duration=6 * 3600.0)
+        sites = atlas_like_platform(s, seed=1)
+        res = simulate(jobs, sites, pol, jax.random.PRNGKey(0), max_rounds=4 * n + 16,
+                       quantum=quantum)
+        jax.block_until_ready(res.makespan)
+        ts = []
+        for i in range(iters):
+            t0 = time.perf_counter()
+            res = simulate(jobs, sites, pol, jax.random.PRNGKey(i), max_rounds=4 * n + 16,
+                           quantum=quantum)
+            jax.block_until_ready(res.makespan)
+            ts.append(time.perf_counter() - t0)
+        rows.append((s, float(np.median(ts)), float(res.makespan)))
+    return rows
+
+
+def main():
+    print("# Fig 4(b) multi-site scaling (200 jobs/site)")
+    for mode, quantum in (("exact", 0.0), ("quantum30s", 30.0)):
+        rows = run(quantum=quantum)
+        s0, t0, _ = rows[0]
+        for s, wall, makespan in rows:
+            alpha = np.log(wall / t0) / np.log(s / s0) if s > s0 else 1.0
+            print(csv_row(f"site_scaling_{mode}_s{s}", wall * 1e6, f"alpha={alpha:.2f}"))
+        s_hi, t_hi, _ = rows[-1]
+        alpha = np.log(t_hi / t0) / np.log(s_hi / s0)
+        print(f"# {mode}: exponent {alpha:.2f} (50 sites in {t_hi:.2f}s; "
+              f"paper ~400s, near-linear)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure (+ beyond-paper).
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from . import (
+    bench_assign_kernel,
+    bench_calibration,
+    bench_distributed,
+    bench_ensemble,
+    bench_events,
+    bench_job_scaling,
+    bench_site_scaling,
+)
+
+SUITES = {
+    "fig4a_job_scaling": bench_job_scaling.main,
+    "fig4b_site_scaling": bench_site_scaling.main,
+    "fig3_calibration": bench_calibration.main,
+    "abstract_6x_distributed": bench_distributed.main,
+    "table1_events": bench_events.main,
+    "assign_kernel": bench_assign_kernel.main,
+    "ensemble_vmap": bench_ensemble.main,
+}
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    failures = []
+    for name, fn in SUITES.items():
+        if only and only != name:
+            continue
+        print(f"\n=== {name} ===")
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            print(f"FAILED {name}: {type(e).__name__}: {e}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from results/.
+
+    PYTHONPATH=src python -m benchmarks.summarize_results [--dryrun DIR] [--roofline DIR]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import re
+
+
+def fmt_bytes(b):
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024 or unit == "TB":
+            return f"{b:.1f}{unit}" if unit != "B" else f"{int(b)}B"
+        b /= 1024
+
+
+def dryrun_table(d):
+    rows = []
+    for f in sorted(glob.glob(f"{d}/*.json")):
+        if f.endswith("skips.json"):
+            continue
+        r = json.load(open(f))
+        if not r.get("ok"):
+            rows.append((r.get("mesh", "?"), r["arch"], r["shape"], "FAIL", "", "", ""))
+            continue
+        m = re.search(r"argument_size_in_bytes=(\d+)", r["memory_analysis"])
+        t = re.search(r"temp_size_in_bytes=(\d+)", r["memory_analysis"])
+        args_gb = int(m.group(1)) / 2**30 if m else -1
+        temp_gb = int(t.group(1)) / 2**30 if t else -1
+        coll = r.get("coll_breakdown", {})
+        sched = " ".join(
+            f"{k.split('-')[0][:2]}{k.split('-')[1][:1] if '-' in k else ''}:{fmt_bytes(v)}"
+            for k, v in coll.items() if v > 0
+        )
+        rows.append((r["mesh"], r["arch"], r["shape"], "ok",
+                     f"{args_gb:.2f}", f"{temp_gb:.2f}", sched))
+    out = ["| mesh | arch | shape | compile | args GB/dev | temp GB/dev | collective schedule (module-once) |",
+           "|---|---|---|---|---|---|---|"]
+    for r in sorted(rows):
+        out.append("| " + " | ".join(str(x) for x in r) + " |")
+    return "\n".join(out)
+
+
+def roofline_table(d):
+    out = ["| arch | shape | kind | compute s | memory s | collective s | bound | step s | roofline frac | useful ratio |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    rows = []
+    for f in sorted(glob.glob(f"{d}/*.json")):
+        r = json.load(open(f))
+        if not r.get("ok"):
+            rows.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | | | |")
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | {r['bottleneck']} | "
+            f"{r['step_s']:.4f} | {r['roofline_frac']:.3f} | {r['useful_ratio']:.2f} |"
+        )
+    return "\n".join(out + sorted(rows))
+
+
+def perf_table(d):
+    out = []
+    for f in sorted(glob.glob(f"{d}/*.jsonl")):
+        out.append(f"\n**{f.split('/')[-1].replace('.jsonl','').replace('__',' x ')}**\n")
+        out.append("| variant | compute s | memory s | collective s | bound | step s | frac |")
+        out.append("|---|---|---|---|---|---|---|")
+        for line in open(f):
+            r = json.loads(line)
+            if not r.get("ok"):
+                out.append(f"| {r.get('variant','?')} | FAIL: {r.get('error','')[:60]} | | | | | |")
+                continue
+            out.append(
+                f"| {r['variant']} {r.get('overrides','')} | {r['compute_s']:.4f} | "
+                f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | {r['bottleneck']} | "
+                f"{r['step_s']:.4f} | {r['roofline_frac']:.3f} |"
+            )
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun")
+    ap.add_argument("--roofline", default="results/roofline")
+    ap.add_argument("--perf", default="results/perf")
+    ap.add_argument("--section", default="all")
+    args = ap.parse_args()
+    if args.section in ("all", "dryrun"):
+        print("## §Dry-run\n")
+        print(dryrun_table(args.dryrun))
+    if args.section in ("all", "roofline"):
+        print("\n## §Roofline\n")
+        print(roofline_table(args.roofline))
+    if args.section in ("all", "perf"):
+        print("\n## §Perf variants\n")
+        print(perf_table(args.perf))
+
+
+if __name__ == "__main__":
+    main()

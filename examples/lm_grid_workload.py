@@ -1,0 +1,71 @@
+"""The DESIGN.md §4 bridge: schedule the LM fleet on the simulated grid.
+
+Each (arch x shape) roofline record becomes a batch of grid jobs (FLOPs ->
+work, checkpoint volume -> stage-in bytes); CGSim-JAX then answers a real
+capacity-planning question: how does the training/serving fleet behave on a
+WLCG-like platform under different allocation policies?
+
+    PYTHONPATH=src python examples/lm_grid_workload.py [results/roofline]
+"""
+import glob
+import json
+import sys
+
+import jax
+
+from repro.core import (
+    atlas_like_platform,
+    compute_metrics,
+    from_records,
+    get_policy,
+    simulate,
+    summary_str,
+)
+from repro.core.workload import lm_job_records
+
+
+def load_cells(roofline_dir: str) -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(f"{roofline_dir}/*.json")):
+        rec = json.load(open(path))
+        if not rec.get("ok"):
+            continue
+        cells.append(
+            dict(
+                name=f"{rec['arch']}:{rec['shape']}",
+                flops=rec["hlo_flops"] * rec["n_devices"],  # global per step
+                bytes=rec["hlo_bytes"],
+                cores=8,
+                memory_gb=32.0,
+                bytes_in=5e9,   # checkpoint + data shard stage-in
+                steps=20,
+            )
+        )
+    return cells
+
+
+def main():
+    roofline_dir = sys.argv[1] if len(sys.argv) > 1 else "results/roofline"
+    cells = load_cells(roofline_dir)
+    if not cells:  # sweep not run yet: synthesize a representative fleet
+        cells = [
+            dict(name="llama3-405b:train_4k", flops=2.5e18, cores=8, memory_gb=32,
+                 bytes_in=5e9, steps=20),
+            dict(name="kimi-k2:train_4k", flops=2.0e17, cores=8, memory_gb=32,
+                 bytes_in=5e9, steps=20),
+            dict(name="mamba2:decode_32k", flops=5e13, cores=1, memory_gb=8,
+                 bytes_in=1e9, steps=100),
+        ]
+    print(f"fleet: {len(cells)} cells -> grid jobs")
+
+    records = lm_job_records(cells, jobs_per_cell=6, seed=0)
+    jobs = from_records(records)
+    sites = atlas_like_platform(25, seed=1)
+    for policy in ("random", "shortest_wait", "data_locality"):
+        res = simulate(jobs, sites, get_policy(policy), jax.random.PRNGKey(0),
+                       max_rounds=200_000)
+        print(f"  {policy:>14s}: {summary_str(compute_metrics(res))}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Batched serving demo: prefill a prompt batch, decode greedily.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-2b --small
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke
+from repro.models import build_model
+from repro.serve import generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.small else get_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ks = jax.random.split(jax.random.PRNGKey(1), 2)
+    batch = {"tokens": jax.random.randint(ks[0], (args.batch, args.prompt_len), 0, cfg.vocab_size)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            ks[1], (args.batch, cfg.n_frames, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            ks[1], (args.batch, cfg.n_patches, cfg.d_model), jnp.bfloat16
+        )
+
+    t0 = time.time()
+    out = generate(
+        model, params, batch, max_new=args.max_new,
+        cache_len=args.prompt_len + args.max_new + 8,
+    )
+    dt = time.time() - t0
+    toks = args.batch * args.max_new
+    print(f"arch={cfg.name}  generated {out.shape} in {dt:.1f}s "
+          f"({toks / dt:.1f} tok/s incl. compile)")
+    print("sample token ids:", out[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

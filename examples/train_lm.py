@@ -1,0 +1,73 @@
+"""End-to-end training driver: data pipeline -> model -> fault-tolerant loop
+with async checkpointing (and optional failure injection).
+
+Default: a ~100M-parameter mamba2-family model for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300            # full
+    PYTHONPATH=src python examples/train_lm.py --small --steps 10     # smoke
+    PYTHONPATH=src python examples/train_lm.py --arch deepseek-7b --small
+    PYTHONPATH=src python examples/train_lm.py --inject 50,120        # chaos
+"""
+import argparse
+import tempfile
+
+import numpy as np
+
+from repro.configs import get_config, get_smoke
+from repro.data import DataConfig, TokenPipeline
+from repro.ft import FailureInjector, train_with_restarts
+from repro.models import build_model, param_count
+from repro.train.optimizer import AdamWConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--small", action="store_true", help="reduced smoke config")
+    ap.add_argument("--inject", default="", help="comma-separated failure steps")
+    ap.add_argument("--compress", action="store_true", help="int8 grad compression")
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.small else get_config(args.arch)
+    if args.arch == "mamba2-130m" and not args.small:
+        # ~100M-param training target on CPU: trim depth, keep the family
+        cfg = cfg.replace(n_layers=12)
+    model = build_model(cfg)
+    pipe = TokenPipeline(
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch)
+    )
+    injector = None
+    if args.inject:
+        injector = FailureInjector(at_steps=tuple(int(s) for s in args.inject.split(",")))
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="repro_ckpt_")
+    print(f"arch={cfg.name} steps={args.steps} ckpt={ckpt_dir}")
+    report = train_with_restarts(
+        model,
+        pipe,
+        total_steps=args.steps,
+        ckpt_dir=ckpt_dir,
+        ckpt_every=max(args.steps // 10, 5),
+        opt_cfg=AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 2),
+                            total_steps=args.steps),
+        compress=args.compress,
+        injector=injector,
+    )
+    n_params = param_count(model.init(__import__("jax").random.PRNGKey(0)))
+    losses = np.asarray(report.losses)
+    print(
+        f"\nparams={n_params:,}  steps={report.steps_done}  restarts={report.restarts}\n"
+        f"loss: first={losses[0]:.3f} min={losses.min():.3f} last={losses[-1]:.3f}\n"
+        f"step time: median={np.median(report.step_times):.2f}s  "
+        f"slow-step watchdog hits={report.slow_steps}"
+    )
+    assert losses[-1] < losses[0], "training did not reduce the loss"
+
+
+if __name__ == "__main__":
+    main()

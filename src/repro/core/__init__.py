@@ -1,0 +1,43 @@
+"""CGSim-JAX core: the paper's contribution as a vectorized JAX system.
+
+A SimGrid-class grid simulator whose whole state is dense arrays: an
+event-round engine (``engine.simulate``), a plugin policy system
+(``policies``), CGSim's JSON input layer (``platform``), PanDA-shaped
+workloads (``workload``), calibration optimizers (``calibration``), the
+event-level ML dataset (``events``) and monitoring (``monitor``).
+"""
+from .types import (  # noqa: F401
+    ASSIGNED,
+    DONE,
+    FAILED,
+    PENDING,
+    QUEUED,
+    RUNNING,
+    STATE_NAMES,
+    EngineState,
+    EventLog,
+    JobsState,
+    SimResult,
+    SiteState,
+    make_jobs,
+    make_log,
+    make_sites,
+)
+from .engine import simulate, simulate_ensemble, service_time, walltimes, queue_times  # noqa: F401
+from .platform import (  # noqa: F401
+    ExecutionParams,
+    atlas_like_platform,
+    deactivate_sites,
+    dump_platform,
+    load_platform,
+)
+from .policies import (  # noqa: F401
+    AllocationPlugin,
+    Policy,
+    get_policy,
+    make_policy,
+    register,
+    with_capacity_assign,
+)
+from .workload import from_records, lm_job_records, synthetic_panda_jobs  # noqa: F401
+from .metrics import Metrics, compute_metrics, summary_str  # noqa: F401

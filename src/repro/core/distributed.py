@@ -1,0 +1,133 @@
+"""Distributed simulation — beyond the paper's single-process scaling.
+
+CGSim runs on one laptop core; its multi-site scaling is wall-time-linear in
+sites.  Because our engine state is dense arrays, the *simulator itself*
+shards: jobs over the ``data`` mesh axis (and calibration replicas over the
+whole mesh).  We deliberately use pjit/SPMD rather than hand-rolled actors:
+the engine body's min-reductions become ``all-reduce(min)``, the per-site
+``segment_sum`` updates become scatter+``psum``, inserted by XLA.  The
+collective schedule is inspected by the dry-run (EXPERIMENTS.md §Dry-run).
+
+Sharding map:
+  jobs.* [J]      -> P(axis)       one shard of jobs per device
+  sites.* [S]     -> replicated    every device sees the whole grid
+  scalars, rng    -> replicated
+
+Ensemble (calibration) map:
+  candidates [K,S] -> P(axis, None)  independent sims per device (no comms)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .engine import simulate
+from .types import JobsState, SimResult, SiteState
+
+
+def job_shardings(mesh: Mesh, axis: str, jobs: JobsState, sites: SiteState):
+    """NamedShardings for (jobs, sites, rng) under job-parallel simulation."""
+    jsh = jax.tree.map(lambda _: NamedSharding(mesh, P(axis)), jobs)
+    ssh = jax.tree.map(lambda _: NamedSharding(mesh, P()), sites)
+    return jsh, ssh, NamedSharding(mesh, P())
+
+
+def shard_jobs(jobs: JobsState, sites: SiteState, mesh: Mesh, axis: str = "data"):
+    """Place a workload on the mesh for job-parallel simulation.
+
+    Pads the job capacity to a multiple of the axis size (padding rows are
+    DONE/invalid so they never participate)."""
+    n_dev = mesh.shape[axis]
+    J = jobs.capacity
+    pad = (-J) % n_dev
+    if pad:
+        from .types import make_jobs
+        import numpy as np
+
+        # rebuild with a padded capacity; existing rows preserved
+        raw = {k: np.asarray(v)[:J] for k, v in jobs._asdict().items()}
+        jobs = make_jobs(
+            job_id=raw["job_id"],
+            arrival=raw["arrival"],
+            work=raw["work"],
+            cores=raw["cores"],
+            memory=raw["memory"],
+            bytes_in=raw["bytes_in"],
+            bytes_out=raw["bytes_out"],
+            priority=raw["priority"],
+            capacity=J + pad,
+        )._replace(
+            state=jnp.pad(jnp.asarray(raw["state"]), (0, pad), constant_values=4),
+            valid=jnp.pad(jnp.asarray(raw["valid"]), (0, pad), constant_values=False),
+        )
+    jsh, ssh, _ = job_shardings(mesh, axis, jobs, sites)
+    return jax.device_put(jobs, jsh), jax.device_put(sites, ssh)
+
+
+def simulate_distributed(
+    jobs: JobsState,
+    sites: SiteState,
+    policy,
+    rng: jax.Array,
+    mesh: Mesh,
+    *,
+    axis: str = "data",
+    **kw,
+) -> SimResult:
+    """Job-parallel simulation: identical semantics to ``engine.simulate``
+    (same event rounds, same FIFO), with XLA SPMD distributing each round."""
+    jobs_d, sites_d = shard_jobs(jobs, sites, mesh, axis)
+    with jax.set_mesh(mesh):
+        return simulate(jobs_d, sites_d, policy, rng, **kw)
+
+
+def lower_distributed(
+    jobs: JobsState,
+    sites: SiteState,
+    policy,
+    mesh: Mesh,
+    *,
+    axis: str = "data",
+    **kw,
+):
+    """Lower+compile the engine for a mesh from ShapeDtypeStructs only —
+    the simulator's own multi-pod dry-run (no allocation)."""
+    jsh, ssh, rsh = job_shardings(mesh, axis, jobs, sites)
+    jobs_s = jax.tree.map(lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s), jobs, jsh)
+    sites_s = jax.tree.map(lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s), sites, ssh)
+    rng_s = jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=rsh)
+
+    def fn(j, s, r):
+        return simulate(j, s, policy, r, **kw)
+
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(fn).lower(jobs_s, sites_s, rng_s)
+        return lowered, lowered.compile()
+
+
+def simulate_ensemble_distributed(
+    jobs: JobsState,
+    sites: SiteState,
+    policy,
+    rng: jax.Array,
+    speed_candidates: jax.Array,  # [K, S]
+    mesh: Mesh,
+    *,
+    axis: str = "data",
+    **kw,
+) -> SimResult:
+    """K independent sims (calibration ensemble), candidates sharded over the
+    mesh axis — embarrassingly parallel, zero collectives in steady state."""
+    K = speed_candidates.shape[0]
+    n_dev = mesh.shape[axis]
+    if K % n_dev:
+        raise ValueError(f"candidates {K} must divide over {n_dev} devices")
+    cand = jax.device_put(speed_candidates, NamedSharding(mesh, P(axis, None)))
+    keys = jax.device_put(jax.random.split(rng, K), NamedSharding(mesh, P(axis, None)))
+
+    def one(speed, key):
+        return simulate(jobs, sites._replace(speed=speed), policy, key, **kw)
+
+    with jax.set_mesh(mesh):
+        return jax.vmap(one)(cand, keys)

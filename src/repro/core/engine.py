@@ -1,0 +1,363 @@
+"""Vectorized discrete-event engine.
+
+SimGrid runs one event at a time through coroutine actors.  On an accelerator
+we instead run *event rounds*: a ``lax.while_loop`` whose body advances the
+clock to the next event time (an O(J) min-reduction) and applies every
+transition that fires at that instant as masked dense updates:
+
+  round(t*):
+    1. completions   — running jobs with t_finish <= t*  → DONE/FAILED/resubmit
+    2. arrivals      — pending jobs with arrival  <= t*  → QUEUED at the server
+    3. assignment    — the policy plugin scores QUEUED jobs against sites;
+                       feasible best-site rows become ASSIGNED (site queue)
+    4. starts        — per-site FIFO-with-capacity: sort ASSIGNED rows by
+                       (site, -priority, arrival), start the per-site prefix
+                       whose cumulative core/memory demand fits free resources
+    5. bookkeeping   — service times, failure sampling, counters, event log
+
+FIFO-with-capacity ≡ sort + segmented prefix-sum + mask is the central
+de-actorification trick (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .types import (
+    ASSIGNED,
+    DONE,
+    FAILED,
+    N_STATES,
+    PENDING,
+    QUEUED,
+    RUNNING,
+    EngineState,
+    EventLog,
+    JobsState,
+    SimResult,
+    SiteState,
+    make_log,
+)
+
+INF = jnp.float32(jnp.inf)
+
+
+def service_time(
+    jobs: JobsState, sites: SiteState, site: jax.Array, share_in: jax.Array, share_out: jax.Array
+) -> jax.Array:
+    """Deterministic-at-start service time model (DESIGN.md §2 network note).
+
+    t = latency + stage_in + compute + stage_out, where stage bandwidth is the
+    site link shared among the ``share`` jobs staging concurrently, and the
+    compute term uses an Amdahl-style multicore speedup
+    ``c / (1 + gamma (c - 1))`` so ``par_gamma`` can be calibrated per site.
+    """
+    lat = sites.latency[site]
+    bw_in = sites.bw_in[site] / jnp.maximum(share_in, 1.0)
+    bw_out = sites.bw_out[site] / jnp.maximum(share_out, 1.0)
+    c = jobs.cores.astype(jnp.float32)
+    gamma = sites.par_gamma[site]
+    speedup = c / (1.0 + gamma * jnp.maximum(c - 1.0, 0.0))
+    compute = jobs.work / (sites.speed[site] * jnp.maximum(speedup, 1e-9))
+    return lat + jobs.bytes_in / bw_in + compute + jobs.bytes_out / bw_out
+
+
+def _segment_exclusive_base(values: jax.Array, seg_ids: jax.Array, num_segments: int):
+    """For values sorted by seg_ids: per-element cumulative sum *within* its segment."""
+    total_cum = jnp.cumsum(values)
+    seg_totals = jax.ops.segment_sum(values, seg_ids, num_segments=num_segments)
+    seg_base = jnp.concatenate([jnp.zeros((1,), values.dtype), jnp.cumsum(seg_totals)[:-1]])
+    return total_cum - seg_base[seg_ids]
+
+
+def default_assign(scores: jax.Array, queued: jax.Array, feasible: jax.Array, sites=None):
+    """Reference assignment: best feasible site per queued job (site-queue mode).
+
+    Returns (site[J] int32 with -1 for unassigned, assigned_mask[J]).
+    Capacity-constrained assignment is provided by ``repro.kernels.assign``.
+    """
+    neg = jnp.float32(-jnp.inf)
+    masked = jnp.where(feasible, scores, neg)
+    best = jnp.argmax(masked, axis=-1).astype(jnp.int32)
+    best_val = jnp.max(masked, axis=-1)
+    ok = queued & jnp.isfinite(best_val)
+    return jnp.where(ok, best, -1), ok
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "policy",
+        "max_rounds",
+        "log_rows",
+        "max_retries",
+        "monitor_every",
+        "quantum",
+    ),
+)
+def simulate(
+    jobs0: JobsState,
+    sites0: SiteState,
+    policy,
+    rng: jax.Array,
+    *,
+    max_rounds: int = 100_000,
+    horizon: float = float("inf"),
+    log_rows: int = 0,
+    max_retries: int = 3,
+    monitor_every: int = 1,
+    quantum: float = 0.0,
+) -> SimResult:
+    """Run the grid simulation to completion (or ``max_rounds``/``horizon``).
+
+    ``quantum`` > 0 batches all events inside [t*, t* + quantum] into one
+    round (SimGrid-style time-precision knob): timestamps quantize to the
+    window but each round retires many events — the lever that turns
+    O(events) rounds into O(horizon/quantum) for dense workloads (paper
+    Fig. 4 scaling regime).
+    """
+    S = sites0.capacity
+    J = jobs0.capacity
+    policy_state0 = policy.init(jobs0, sites0)
+    log0 = make_log(log_rows, S)
+
+    def cond(st: EngineState):
+        active = (
+            (st.jobs.state == PENDING)
+            | (st.jobs.state == QUEUED)
+            | (st.jobs.state == ASSIGNED)
+            | (st.jobs.state == RUNNING)
+        )
+        return (
+            (~st.halted)
+            & jnp.any(active & st.jobs.valid)
+            & (st.round < max_rounds)
+            & (st.clock <= horizon)
+        )
+
+    def body(st: EngineState) -> EngineState:
+        jobs, sites = st.jobs, st.sites
+        rng, k_fail, k_frac, k_policy = jax.random.split(st.rng, 4)
+
+        # ---- 1. advance the clock to the next event ------------------------
+        arr_t = jnp.where((jobs.state == PENDING) & jobs.valid, jobs.arrival, INF)
+        fin_t = jnp.where(jobs.state == RUNNING, jobs.t_finish, INF)
+        t_next = jnp.minimum(arr_t.min(), fin_t.min())
+        if quantum > 0.0:
+            t_next = t_next + quantum
+        clock = jnp.where(jnp.isfinite(t_next), jnp.maximum(st.clock, t_next), st.clock)
+
+        # ---- 2. completions -------------------------------------------------
+        comp = (jobs.state == RUNNING) & (jobs.t_finish <= clock)
+        comp_site = jnp.where(comp, jobs.site, S)  # padded segment for non-events
+        freed_cores = jax.ops.segment_sum(
+            jnp.where(comp, jobs.cores, 0), comp_site, num_segments=S + 1
+        )[:S]
+        freed_mem = jax.ops.segment_sum(
+            jnp.where(comp, jobs.memory, 0.0), comp_site, num_segments=S + 1
+        )[:S]
+        failed_now = comp & jobs.will_fail
+        resubmit = failed_now & (jobs.retries < max_retries)
+        perm_fail = failed_now & ~resubmit
+        done_now = comp & ~jobs.will_fail
+
+        new_state = jobs.state
+        new_state = jnp.where(done_now, DONE, new_state)
+        new_state = jnp.where(perm_fail, FAILED, new_state)
+        new_state = jnp.where(resubmit, QUEUED, new_state)  # PanDA-style resubmission
+        jobs = jobs._replace(
+            state=new_state,
+            retries=jobs.retries + resubmit.astype(jnp.int32),
+            site=jnp.where(resubmit, -1, jobs.site),
+            t_finish=jnp.where(resubmit, INF, jobs.t_finish),
+        )
+        sites = sites._replace(
+            free_cores=sites.free_cores + freed_cores,
+            free_memory=sites.free_memory + freed_mem,
+            n_finished=sites.n_finished
+            + jax.ops.segment_sum(done_now.astype(jnp.int32), comp_site, num_segments=S + 1)[:S],
+            n_failed=sites.n_failed
+            + jax.ops.segment_sum(failed_now.astype(jnp.int32), comp_site, num_segments=S + 1)[:S],
+        )
+
+        # ---- 3. arrivals -----------------------------------------------------
+        arrived = (jobs.state == PENDING) & (jobs.arrival <= clock) & jobs.valid
+        jobs = jobs._replace(state=jnp.where(arrived, QUEUED, jobs.state))
+
+        # ---- 4. policy assignment (the plugin hot spot) ----------------------
+        queued = jobs.state == QUEUED
+        # static feasibility: job can ever fit the site
+        feasible = (
+            sites.active[None, :]
+            & (jobs.cores[:, None] <= sites.cores[None, :])
+            & (jobs.memory[:, None] <= sites.memory[None, :])
+        )
+        pstate = st.policy_state
+        scores = policy.score(jobs, sites, pstate, clock, k_policy)  # [J, S]
+        site_pick, assigned_now = policy.assign(scores, queued, feasible, sites)
+        assigned_now = assigned_now & queued
+        jobs = jobs._replace(
+            state=jnp.where(assigned_now, ASSIGNED, jobs.state),
+            site=jnp.where(assigned_now, site_pick, jobs.site),
+            t_assign=jnp.where(assigned_now, clock, jobs.t_assign),
+        )
+        asg_site = jnp.where(assigned_now, site_pick, S)
+        sites = sites._replace(
+            n_assigned=sites.n_assigned
+            + jax.ops.segment_sum(assigned_now.astype(jnp.int32), asg_site, num_segments=S + 1)[:S]
+        )
+
+        # ---- 5. starts: per-site FIFO with capacity --------------------------
+        cand = jobs.state == ASSIGNED
+        sort_site = jnp.where(cand, jobs.site, S).astype(jnp.int32)
+        order = jnp.lexsort(
+            (jnp.arange(J), jobs.arrival, -jobs.priority, sort_site)
+        )
+        site_s = sort_site[order]
+        cand_s = cand[order]
+        cores_s = jnp.where(cand_s, jobs.cores[order], 0).astype(jnp.int32)
+        mem_s = jnp.where(cand_s, jobs.memory[order], 0.0)
+        cum_cores = _segment_exclusive_base(cores_s, site_s, S + 1)
+        cum_mem = _segment_exclusive_base(mem_s, site_s, S + 1)
+        fits = (
+            cand_s
+            & (cum_cores <= sites.free_cores[jnp.minimum(site_s, S - 1)])
+            & (cum_mem <= sites.free_memory[jnp.minimum(site_s, S - 1)] + 1e-6)
+            & (site_s < S)
+        )
+        started = jnp.zeros((J,), bool).at[order].set(fits)
+
+        start_site = jnp.where(started, jobs.site, S)
+        used_cores = jax.ops.segment_sum(
+            jnp.where(started, jobs.cores, 0), start_site, num_segments=S + 1
+        )[:S]
+        used_mem = jax.ops.segment_sum(
+            jnp.where(started, jobs.memory, 0.0), start_site, num_segments=S + 1
+        )[:S]
+        n_start_per_site = jax.ops.segment_sum(
+            started.astype(jnp.int32), start_site, num_segments=S + 1
+        )[:S]
+        share = n_start_per_site[jnp.minimum(jobs.site, S - 1)].astype(jnp.float32)
+        t_serv = service_time(jobs, sites, jnp.minimum(jobs.site, S - 1), share, share)
+
+        u_fail = jax.random.uniform(k_fail, (J,))
+        will_fail = started & (u_fail < sites.fail_rate[jnp.minimum(jobs.site, S - 1)])
+        # a failing attempt dies partway through its service time
+        frac = jax.random.uniform(k_frac, (J,), minval=0.05, maxval=1.0)
+        t_fin = clock + jnp.where(will_fail, t_serv * frac, t_serv)
+
+        jobs = jobs._replace(
+            state=jnp.where(started, RUNNING, jobs.state),
+            t_start=jnp.where(started, clock, jobs.t_start),
+            t_finish=jnp.where(started, t_fin, jobs.t_finish),
+            will_fail=jnp.where(started, will_fail, jobs.will_fail),
+        )
+        sites = sites._replace(
+            free_cores=sites.free_cores - used_cores,
+            free_memory=sites.free_memory - used_mem,
+        )
+
+        pstate = policy.on_step(pstate, jobs, sites, comp, started, clock)
+
+        # ---- 6. halt detection & event log -----------------------------------
+        n_started = started.sum()
+        n_completed = comp.sum()
+        progressed = (n_started > 0) | (n_completed > 0) | jnp.any(arrived)
+        halted = (~jnp.isfinite(t_next)) & ~progressed
+
+        log = st.log
+        if log_rows > 0:
+            slot = jnp.mod(log.cursor, log_rows)
+            write = jnp.mod(st.round, monitor_every) == 0
+            counts = jax.vmap(
+                lambda s: jnp.sum((jobs.state == s) & jobs.valid).astype(jnp.int32)
+            )(jnp.arange(N_STATES))
+            q_site = jnp.where(jobs.state == ASSIGNED, jobs.site, S)
+            r_site = jnp.where(jobs.state == RUNNING, jobs.site, S)
+            site_queued = jax.ops.segment_sum(
+                jnp.ones((J,), jnp.int32), q_site, num_segments=S + 1
+            )[:S]
+            site_running = jax.ops.segment_sum(
+                jnp.ones((J,), jnp.int32), r_site, num_segments=S + 1
+            )[:S]
+
+            def wr(buf, val):
+                return jnp.where(write, buf.at[slot].set(val), buf)
+
+            log = EventLog(
+                time=wr(log.time, clock),
+                round_idx=wr(log.round_idx, st.round),
+                counts=wr(log.counts, counts),
+                n_started=wr(log.n_started, n_started.astype(jnp.int32)),
+                n_completed=wr(log.n_completed, n_completed.astype(jnp.int32)),
+                site_free=wr(log.site_free, sites.free_cores),
+                site_queued=wr(log.site_queued, site_queued),
+                site_running=wr(log.site_running, site_running),
+                cursor=log.cursor + write.astype(jnp.int32),
+            )
+
+        return EngineState(
+            clock=clock,
+            round=st.round + 1,
+            jobs=jobs,
+            sites=sites,
+            rng=rng,
+            policy_state=pstate,
+            log=log,
+            halted=halted,
+        )
+
+    st0 = EngineState(
+        clock=jnp.float32(0.0),
+        round=jnp.int32(0),
+        jobs=jobs0,
+        sites=sites0,
+        rng=rng,
+        policy_state=policy_state0,
+        log=log0,
+        halted=jnp.array(False),
+    )
+    st = jax.lax.while_loop(cond, body, st0)
+    pstate = policy.on_end(st.policy_state, st.jobs, st.sites, st.clock)
+    return SimResult(
+        makespan=st.clock,
+        rounds=st.round,
+        jobs=st.jobs,
+        sites=st.sites,
+        log=st.log,
+        policy_state=pstate,
+    )
+
+
+def simulate_ensemble(
+    jobs0: JobsState,
+    sites0: SiteState,
+    policy,
+    rng: jax.Array,
+    *,
+    speed_candidates: jax.Array,  # f32[K, S] per-site speeds to evaluate
+    **kw,
+) -> SimResult:
+    """vmap the full simulation over K per-site speed vectors (calibration inner loop)."""
+
+    def one(speed, key):
+        sites = sites0._replace(speed=speed)
+        return simulate(jobs0, sites, policy, key, **kw)
+
+    keys = jax.random.split(rng, speed_candidates.shape[0])
+    return jax.vmap(one)(speed_candidates, keys)
+
+
+def walltimes(result: SimResult) -> jax.Array:
+    """Per-job walltime (t_finish - t_start); inf for jobs that never ran."""
+    return result.jobs.t_finish - result.jobs.t_start
+
+
+def queue_times(result: SimResult) -> jax.Array:
+    return result.jobs.t_start - result.jobs.arrival
+
+
+AssignFn = Callable[[jax.Array, jax.Array, jax.Array, SiteState], tuple]

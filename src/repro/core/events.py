@@ -1,0 +1,180 @@
+"""Event-level dataset generation (paper §4.3.2, Table 1).
+
+CGSim records every job state transition alongside concurrent site metrics so
+the runs double as ML training data.  Inside jit we only keep the per-job
+timestamps (they fully determine the transition stream); this module expands
+them into Table-1-style rows and ML feature matrices in numpy post-processing
+— the paper's "output layer" (SQLite/CSV) becomes CSV/JSON/columnar exports.
+"""
+from __future__ import annotations
+
+import csv
+import io
+import json
+
+import numpy as np
+
+from .types import DONE, FAILED, SimResult
+
+# transition kinds, in tie-break order at equal timestamps: completions free
+# cores before same-instant assigns/starts consume them (engine round order)
+K_FINISH, K_ASSIGN, K_START = 0, 1, 2
+KIND_NAMES = {K_ASSIGN: "assigned", K_START: "running", K_FINISH: "finished"}
+
+
+def transition_rows(result: SimResult, site_names=None) -> list[dict]:
+    """Expand a SimResult into one row per job state transition (Table 1).
+
+    Each row: event_id, time, job_id, state, site, site available cores,
+    site pending (queued) jobs, site assigned (running) jobs, site finished.
+
+    Note: for resubmitted jobs only the final attempt's timestamps survive in
+    ``JobsState``, so the stream contains one assign/start/finish triplet per
+    job (failed intermediate attempts are visible in ``sites.n_failed``).
+    """
+    jobs = jax_to_np(result.jobs)
+    sites = jax_to_np(result.sites)
+    S = len(sites["cores"])
+    name = lambda s: (site_names[s] if site_names else f"site{s}")
+
+    evs = []
+    J = len(jobs["arrival"])
+    for j in range(J):
+        if not jobs["valid"][j]:
+            continue
+        sid = int(jobs["site"][j])
+        if np.isfinite(jobs["t_assign"][j]):
+            evs.append((float(jobs["t_assign"][j]), K_ASSIGN, j, sid))
+        if np.isfinite(jobs["t_start"][j]):
+            evs.append((float(jobs["t_start"][j]), K_START, j, sid))
+        if np.isfinite(jobs["t_finish"][j]):
+            evs.append((float(jobs["t_finish"][j]), K_FINISH, j, sid))
+    evs.sort(key=lambda e: (e[0], e[1], e[2]))
+
+    free = sites["cores"].astype(np.int64).copy()
+    queued = np.zeros(S, np.int64)   # in site queue, not yet running
+    running = np.zeros(S, np.int64)
+    finished = np.zeros(S, np.int64)
+    rows = []
+    for eid, (t, kind, j, sid) in enumerate(evs):
+        if sid < 0:
+            continue
+        if kind == K_ASSIGN:
+            queued[sid] += 1
+        elif kind == K_START:
+            queued[sid] -= 1
+            running[sid] += 1
+            free[sid] -= int(jobs["cores"][j])
+        else:
+            running[sid] -= 1
+            free[sid] += int(jobs["cores"][j])
+            finished[sid] += 1
+        state = KIND_NAMES[kind]
+        if kind == K_FINISH and jobs["state"][j] == FAILED:
+            state = "failed"
+        rows.append(
+            dict(
+                event_id=eid,
+                time=round(t, 3),
+                job_id=int(jobs["job_id"][j]),
+                state=state,
+                site=name(sid),
+                avail_cores=int(free[sid]),
+                pending_jobs=int(queued[sid]),
+                assigned_jobs=int(running[sid]),
+                finished_jobs=int(finished[sid]),
+            )
+        )
+    return rows
+
+
+def to_csv(rows: list[dict]) -> str:
+    if not rows:
+        return ""
+    buf = io.StringIO()
+    w = csv.DictWriter(buf, fieldnames=list(rows[0]))
+    w.writeheader()
+    w.writerows(rows)
+    return buf.getvalue()
+
+
+def to_json(rows: list[dict]) -> str:
+    return json.dumps(rows)
+
+
+def ml_dataset(result: SimResult) -> dict[str, np.ndarray]:
+    """Feature/label matrices for surrogate training (paper §1: "datasets
+    suitable for modern machine learning approaches").
+
+    Features (per finished/failed job): work, cores, memory, bytes_in/out,
+    priority, site one-hot stats (speed, cores, bw, queue pressure at assign).
+    Labels: walltime, queue_time, failed.
+    """
+    jobs = jax_to_np(result.jobs)
+    sites = jax_to_np(result.sites)
+    done = np.isin(jobs["state"], [DONE, FAILED]) & jobs["valid"]
+    sid = np.clip(jobs["site"], 0, len(sites["cores"]) - 1)
+
+    feats = np.stack(
+        [
+            np.log1p(jobs["work"]),
+            jobs["cores"].astype(np.float64),
+            jobs["memory"],
+            np.log1p(jobs["bytes_in"]),
+            np.log1p(jobs["bytes_out"]),
+            jobs["priority"],
+            sites["speed"][sid],
+            sites["cores"][sid].astype(np.float64),
+            np.log1p(sites["bw_in"][sid]),
+            sites["par_gamma"][sid],
+            sites["fail_rate"][sid],
+        ],
+        axis=-1,
+    )[done]
+    wall = (jobs["t_finish"] - jobs["t_start"])[done]
+    queue = (jobs["t_start"] - jobs["arrival"])[done]
+    failed = (jobs["state"] == FAILED)[done]
+    return dict(
+        features=feats.astype(np.float32),
+        walltime=wall.astype(np.float32),
+        queue_time=queue.astype(np.float32),
+        failed=failed,
+        feature_names=np.array(
+            [
+                "log_work", "cores", "memory_gb", "log_bytes_in", "log_bytes_out",
+                "priority", "site_speed", "site_cores", "site_log_bw", "site_gamma",
+                "site_fail_rate",
+            ]
+        ),
+    )
+
+
+def log_frames(result: SimResult) -> list[dict]:
+    """Per-round monitoring snapshots captured in-sim (EventLog ring buffer)."""
+    log = jax_to_np(result.log)
+    n = int(log["cursor"])
+    rows = min(n, len(log["time"]))
+    out = []
+    for i in range(rows):
+        if log["round_idx"][i] < 0:
+            continue
+        out.append(
+            dict(
+                round=int(log["round_idx"][i]),
+                time=float(log["time"][i]),
+                counts={k: int(v) for k, v in zip(
+                    ("pending", "queued", "assigned", "running", "finished", "failed"),
+                    log["counts"][i],
+                )},
+                started=int(log["n_started"][i]),
+                completed=int(log["n_completed"][i]),
+                site_free=log["site_free"][i].tolist(),
+                site_queued=log["site_queued"][i].tolist(),
+                site_running=log["site_running"][i].tolist(),
+            )
+        )
+    return out
+
+
+def jax_to_np(tree) -> dict[str, np.ndarray]:
+    return {k: np.asarray(v) for k, v in tree._asdict().items()}

@@ -1,0 +1,75 @@
+"""Operational metrics (paper §1: queue time, CPU efficiency, failure rate,
+throughput) computed from a finished ``SimResult``."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .types import DONE, FAILED, SimResult
+
+
+class Metrics(NamedTuple):
+    makespan: jax.Array
+    n_done: jax.Array
+    n_failed: jax.Array
+    failure_rate: jax.Array
+    mean_walltime: jax.Array
+    mean_queue_time: jax.Array
+    p95_queue_time: jax.Array
+    throughput: jax.Array        # finished jobs / simulated second
+    core_utilization: jax.Array  # busy core-seconds / (total cores x makespan)
+    cpu_efficiency: jax.Array    # compute seconds / walltime seconds (I/O overhead)
+
+
+def compute_metrics(result: SimResult) -> Metrics:
+    jobs, sites = result.jobs, result.sites
+    done = (jobs.state == DONE) & jobs.valid
+    failed = (jobs.state == FAILED) & jobs.valid
+    n_done = done.sum()
+    n_failed = failed.sum()
+
+    wall = jnp.where(done, jobs.t_finish - jobs.t_start, 0.0)
+    queue = jnp.where(done, jobs.t_start - jobs.arrival, 0.0)
+    mean_wall = wall.sum() / jnp.maximum(n_done, 1)
+    mean_queue = queue.sum() / jnp.maximum(n_done, 1)
+    q_sorted = jnp.sort(jnp.where(done, jobs.t_start - jobs.arrival, -jnp.inf))
+    idx = jnp.clip(
+        (jobs.capacity - n_done) + (0.95 * n_done).astype(jnp.int32), 0, jobs.capacity - 1
+    )
+    p95_queue = jnp.maximum(q_sorted[idx], 0.0)
+
+    busy = jnp.where(done | failed, (jobs.t_finish - jobs.t_start) * jobs.cores, 0.0).sum()
+    total_cores = jnp.where(sites.active, sites.cores, 0).sum().astype(jnp.float32)
+    makespan = jnp.maximum(result.makespan, 1e-9)
+    util = busy / jnp.maximum(total_cores * makespan, 1e-9)
+
+    # share of walltime spent computing (vs staging) under the service model
+    compute_t = jnp.where(done, jobs.work / jnp.maximum(
+        result.sites.speed[jnp.clip(jobs.site, 0, sites.capacity - 1)]
+        * jobs.cores.astype(jnp.float32), 1e-9), 0.0)
+    eff = compute_t.sum() / jnp.maximum(wall.sum(), 1e-9)
+
+    return Metrics(
+        makespan=result.makespan,
+        n_done=n_done,
+        n_failed=n_failed,
+        failure_rate=n_failed / jnp.maximum(n_done + n_failed, 1),
+        mean_walltime=mean_wall,
+        mean_queue_time=mean_queue,
+        p95_queue_time=p95_queue,
+        throughput=n_done / makespan,
+        core_utilization=util,
+        cpu_efficiency=jnp.minimum(eff, 1.0),
+    )
+
+
+def summary_str(m: Metrics) -> str:
+    return (
+        f"makespan={float(m.makespan):.1f}s done={int(m.n_done)} failed={int(m.n_failed)} "
+        f"fail_rate={float(m.failure_rate):.3f} mean_wall={float(m.mean_walltime):.1f}s "
+        f"mean_queue={float(m.mean_queue_time):.1f}s p95_queue={float(m.p95_queue_time):.1f}s "
+        f"throughput={float(m.throughput) * 3600.0:.1f} jobs/h "
+        f"util={float(m.core_utilization):.3f} cpu_eff={float(m.cpu_efficiency):.3f}"
+    )

@@ -1,0 +1,85 @@
+"""Real-time monitoring (paper §4.3.3, Fig. 5) — terminal edition.
+
+CGSim ships a web dashboard showing per-site node pressure with job-level
+hover details.  Headless here, so the same observables render as (a) ANSI
+terminal frames during a run and (b) JSON frame streams any dashboard can
+consume.  ``watch()`` wraps the engine: it splits the horizon into segments
+and re-enters the jitted simulator between frames, so monitoring costs
+nothing inside the hot loop.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+import numpy as np
+
+from .events import log_frames
+from .types import SimResult, STATE_NAMES
+
+BAR = " ▁▂▃▄▅▆▇█"
+
+
+def pressure_bar(used: int, total: int, width: int = 20) -> str:
+    if total <= 0:
+        return " " * width
+    frac = min(max(used / total, 0.0), 1.0)
+    full = int(frac * width)
+    return "█" * full + "·" * (width - full)
+
+
+def render_frame(frame: dict, sites_cores, site_names=None, max_sites: int = 24) -> str:
+    """One dashboard frame: global counts + per-site node pressure."""
+    c = frame["counts"]
+    lines = [
+        f"t={frame['time']:>12.1f}s  round={frame['round']:>7d}  "
+        + "  ".join(f"{k}={c[k]}" for k in STATE_NAMES),
+    ]
+    free = np.asarray(frame["site_free"])
+    queued = np.asarray(frame["site_queued"])
+    running = np.asarray(frame["site_running"])
+    total = np.asarray(sites_cores)
+    order = np.argsort(-(total - free))[:max_sites]
+    for s in order:
+        if total[s] <= 0:
+            continue
+        name = site_names[s] if site_names else f"site{s:03d}"
+        used = int(total[s] - free[s])
+        lines.append(
+            f"  {name:>12s} |{pressure_bar(used, int(total[s]))}| "
+            f"{used:>6d}/{int(total[s]):<6d} cores  run={int(running[s]):>5d} queue={int(queued[s]):>5d}"
+        )
+    return "\n".join(lines)
+
+
+def render_run(result: SimResult, site_names=None, every: int = 1, out=sys.stdout) -> None:
+    frames = log_frames(result)
+    cores = np.asarray(result.sites.cores)
+    for i, frame in enumerate(frames):
+        if i % every:
+            continue
+        out.write(render_frame(frame, cores, site_names) + "\n\n")
+
+
+def frames_json(result: SimResult) -> str:
+    """JSON frame stream for an external dashboard (the web-UI contract)."""
+    return json.dumps(log_frames(result))
+
+
+def utilization_timeline(result: SimResult) -> np.ndarray:
+    """[T, S] core-utilization per logged frame — sparkline/heatmap feed."""
+    frames = log_frames(result)
+    cores = np.maximum(np.asarray(result.sites.cores, dtype=np.float64), 1.0)
+    rows = [(cores - np.asarray(f["site_free"], dtype=np.float64)) / cores for f in frames]
+    return np.stack(rows) if rows else np.zeros((0, cores.size))
+
+
+def sparkline(values: np.ndarray, width: int = 60) -> str:
+    if values.size == 0:
+        return ""
+    idx = np.linspace(0, values.size - 1, width).astype(int)
+    v = values[idx]
+    lo, hi = float(v.min()), float(v.max())
+    span = (hi - lo) or 1.0
+    chars = [BAR[int((x - lo) / span * (len(BAR) - 1))] for x in v]
+    return "".join(chars) + f"  [{lo:.2f}..{hi:.2f}]"

@@ -1,0 +1,237 @@
+"""Workload-allocation policies — the CGSim plugin mechanism, JAX-native.
+
+CGSim plugins are C++ shared libraries implementing an abstract class
+(Fig. 2 of the paper): ``getResourceInformation`` / ``assignJob`` /
+``onJobEnd`` / ``onSimulationEnd``.  Here a plugin is a ``Policy`` pytree of
+pure functions with the same four extension points (plus the assignment
+combinator), so user policies compile into the simulator without touching the
+core — and remain ``vmap``-able for calibration ensembles.
+
+    paper hook               | Policy field
+    -------------------------+----------------------------------------
+    getResourceInformation   | init(jobs, sites) -> policy_state
+    assignJob                | score(jobs, sites, state, clock, rng) -> f32[J, S]
+                             | assign(scores, queued, feasible, sites) -> (site, mask)
+    onJobEnd                 | on_step(state, jobs, sites, completed, started, clock)
+    onSimulationEnd          | on_end(state, jobs, sites, clock)
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .engine import default_assign
+from .types import ASSIGNED, QUEUED, RUNNING, JobsState, SiteState
+
+NEG = jnp.float32(-1e30)
+
+
+class Policy(NamedTuple):
+    name: str
+    init: Callable
+    score: Callable
+    assign: Callable
+    on_step: Callable
+    on_end: Callable
+
+
+def _no_state(jobs, sites):
+    return ()
+
+
+def _keep_state(state, *_):
+    return state
+
+
+def make_policy(name: str, score: Callable, *, init=None, assign=None, on_step=None, on_end=None) -> Policy:
+    return Policy(
+        name=name,
+        init=init or _no_state,
+        score=score,
+        assign=assign or default_assign,
+        on_step=on_step or _keep_state,
+        on_end=on_end or _keep_state,
+    )
+
+
+# --------------------------------------------------------------------------
+# site-load helpers shared by several policies
+# --------------------------------------------------------------------------
+
+def site_backlog(jobs: JobsState, sites: SiteState):
+    """Per-site queued core-demand and outstanding work (running + queued)."""
+    S = sites.capacity
+    q_site = jnp.where(jobs.state == ASSIGNED, jobs.site, S)
+    r_site = jnp.where((jobs.state == RUNNING) | (jobs.state == ASSIGNED), jobs.site, S)
+    q_cores = jax.ops.segment_sum(jobs.cores, q_site, num_segments=S + 1)[:S]
+    out_work = jax.ops.segment_sum(jobs.work, r_site, num_segments=S + 1)[:S]
+    return q_cores.astype(jnp.float32), out_work
+
+
+# --------------------------------------------------------------------------
+# built-in policies (the paper ships a simple example; we ship a family)
+# --------------------------------------------------------------------------
+
+def random_policy(seed_salt: int = 0) -> Policy:
+    def score(jobs, sites, state, clock, rng):
+        J, S = jobs.capacity, sites.capacity
+        return jax.random.uniform(jax.random.fold_in(rng, seed_salt), (J, S))
+
+    return make_policy("random", score)
+
+
+def round_robin() -> Policy:
+    """Deterministic round-robin by job id (stateless, vmap-safe)."""
+
+    def score(jobs, sites, state, clock, rng):
+        S = sites.capacity
+        idx = jnp.arange(S)[None, :]
+        want = jnp.mod(jnp.maximum(jobs.job_id, 0), jnp.maximum(sites.active.sum(), 1))[:, None]
+        return -jnp.mod(idx - want, S).astype(jnp.float32)
+
+    return make_policy("round_robin", score)
+
+
+def fastest_site() -> Policy:
+    def score(jobs, sites, state, clock, rng):
+        return jnp.broadcast_to(sites.speed[None, :], (jobs.capacity, sites.capacity))
+
+    return make_policy("fastest_site", score)
+
+
+def least_loaded() -> Policy:
+    """Prefer the site with the most free-core headroom after its queue drains."""
+
+    def score(jobs, sites, state, clock, rng):
+        q_cores, _ = site_backlog(jobs, sites)
+        head = (sites.free_cores.astype(jnp.float32) - q_cores) / jnp.maximum(
+            sites.cores.astype(jnp.float32), 1.0
+        )
+        return jnp.broadcast_to(head[None, :], (jobs.capacity, sites.capacity))
+
+    return make_policy("least_loaded", score)
+
+
+def data_locality() -> Policy:
+    """Minimize stage-in cost (CGSim data-movement policy hook)."""
+
+    def score(jobs, sites, state, clock, rng):
+        t_in = sites.latency[None, :] + jobs.bytes_in[:, None] / sites.bw_in[None, :]
+        return -t_in
+
+    return make_policy("data_locality", score)
+
+
+def shortest_wait() -> Policy:
+    """Greedy expected-completion-time (backlog drain + own service estimate)."""
+
+    def score(jobs, sites, state, clock, rng):
+        _, out_work = site_backlog(jobs, sites)
+        cap_rate = sites.speed * jnp.maximum(sites.cores.astype(jnp.float32), 1.0)
+        drain = out_work / jnp.maximum(cap_rate, 1e-9)
+        mine = jobs.work[:, None] / jnp.maximum(
+            sites.speed[None, :] * jobs.cores[:, None].astype(jnp.float32), 1e-9
+        )
+        stage = sites.latency[None, :] + jobs.bytes_in[:, None] / sites.bw_in[None, :]
+        return -(drain[None, :] + mine + stage)
+
+    return make_policy("shortest_wait", score)
+
+
+def panda_dispatch(w_speed=1.0, w_free=1.0, w_queue=2.0, w_fail=4.0) -> Policy:
+    """PanDA-flavoured weighted dispatch (brokerage mixes capability, load,
+    reliability) — the default policy for the ATLAS case study."""
+
+    def score(jobs, sites, state, clock, rng):
+        q_cores, _ = site_backlog(jobs, sites)
+        cores_f = jnp.maximum(sites.cores.astype(jnp.float32), 1.0)
+        norm_speed = sites.speed / jnp.maximum(sites.speed.max(), 1e-9)
+        free_frac = sites.free_cores.astype(jnp.float32) / cores_f
+        queue_frac = q_cores / cores_f
+        s = (
+            w_speed * norm_speed
+            + w_free * free_frac
+            - w_queue * queue_frac
+            - w_fail * sites.fail_rate
+        )
+        return jnp.broadcast_to(s[None, :], (jobs.capacity, sites.capacity))
+
+    return make_policy("panda_dispatch", score)
+
+
+def with_capacity_assign(policy: Policy, assign_fn) -> Policy:
+    """Swap in a capacity-constrained assigner (e.g. ``repro.kernels.assign``):
+    jobs beyond a site's free cores stay QUEUED at the main server instead of
+    piling into site queues."""
+
+    def assign(scores, queued, feasible, sites):
+        return assign_fn(scores, queued, feasible, sites)
+
+    return policy._replace(name=policy.name + "+capacity", assign=assign)
+
+
+REGISTRY: dict[str, Callable[..., Policy]] = {
+    "random": random_policy,
+    "round_robin": round_robin,
+    "fastest_site": fastest_site,
+    "least_loaded": least_loaded,
+    "data_locality": data_locality,
+    "shortest_wait": shortest_wait,
+    "panda_dispatch": panda_dispatch,
+}
+
+
+def get_policy(name: str, **params) -> Policy:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown policy {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name](**params)
+
+
+def register(name: str):
+    """Decorator: plug a user policy factory into the registry (paper §3.3)."""
+
+    def deco(fn):
+        REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+# --------------------------------------------------------------------------
+# Abstract-class adapter mirroring the paper's Fig. 2 C++ API, for users who
+# prefer subclassing over composing functions.
+# --------------------------------------------------------------------------
+
+class AllocationPlugin:
+    """Subclass and override, then call ``.build()`` to get a Policy.
+
+    Mirrors CGSim's abstract plugin class: ``get_resource_information`` is
+    called once with the platform; ``assign_job`` must produce per-site scores
+    for every queued job; ``on_job_end``/``on_simulation_end`` are optional.
+    """
+
+    name = "custom"
+
+    def get_resource_information(self, jobs: JobsState, sites: SiteState):
+        return ()
+
+    def assign_job(self, jobs, sites, state, clock, rng):  # -> f32[J, S]
+        raise NotImplementedError
+
+    def on_job_end(self, state, jobs, sites, completed, started, clock):
+        return state
+
+    def on_simulation_end(self, state, jobs, sites, clock):
+        return state
+
+    def build(self) -> Policy:
+        return Policy(
+            name=self.name,
+            init=self.get_resource_information,
+            score=self.assign_job,
+            assign=default_assign,
+            on_step=self.on_job_end,
+            on_end=self.on_simulation_end,
+        )

@@ -1,0 +1,232 @@
+"""Core state types for the vectorized grid simulator.
+
+CGSim models a computing grid as sites (SimGrid netzones) of hosts plus a
+central main server that dispatches jobs.  Here the whole simulation state is
+a fixed-capacity struct-of-arrays pytree so every simulator advance is dense,
+masked algebra (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.float32(jnp.inf)
+
+# --- job lifecycle states (CGSim: pending/assigned/running/finished/failed) ---
+PENDING = 0   # not yet arrived at the main server
+QUEUED = 1    # at the main server, awaiting a site assignment ("pending list")
+ASSIGNED = 2  # placed in a site queue, awaiting free cores
+RUNNING = 3   # executing on site cores
+DONE = 4
+FAILED = 5    # terminally failed (retries exhausted)
+N_STATES = 6
+
+STATE_NAMES = ("pending", "queued", "assigned", "running", "finished", "failed")
+
+
+class JobsState(NamedTuple):
+    """Struct-of-arrays over a fixed job capacity J (padded with inactive rows)."""
+
+    job_id: jax.Array     # i32[J] external id (e.g. PanDA job id)
+    arrival: jax.Array    # f32[J] seconds
+    work: jax.Array       # f32[J] compute demand (HS23-normalised core-seconds)
+    cores: jax.Array      # i32[J] cores required (1 or 8 for ATLAS single/multicore)
+    memory: jax.Array     # f32[J] GB resident
+    bytes_in: jax.Array   # f32[J] stage-in volume
+    bytes_out: jax.Array  # f32[J] stage-out volume
+    priority: jax.Array   # f32[J] higher starts first within a site queue
+    state: jax.Array      # i32[J] lifecycle state
+    site: jax.Array       # i32[J] assigned site, -1 if none
+    t_assign: jax.Array   # f32[J] time assigned to a site (inf until set)
+    t_start: jax.Array    # f32[J] time execution started
+    t_finish: jax.Array   # f32[J] time execution finished/failed
+    retries: jax.Array    # i32[J] resubmission count
+    will_fail: jax.Array  # bool[J] sampled at start: this attempt fails
+    valid: jax.Array      # bool[J] row is a real job (padding rows are False)
+
+    @property
+    def capacity(self) -> int:
+        return self.arrival.shape[-1]
+
+
+class SiteState(NamedTuple):
+    """Struct-of-arrays over a fixed site capacity S."""
+
+    cores: jax.Array        # i32[S] total cores
+    speed: jax.Array        # f32[S] per-core work units / second  (CALIBRATION TARGET)
+    memory: jax.Array       # f32[S] GB
+    bw_in: jax.Array        # f32[S] ingress bandwidth bytes/s (shared by staging jobs)
+    bw_out: jax.Array       # f32[S] egress bandwidth bytes/s
+    latency: jax.Array      # f32[S] per-transfer latency seconds
+    par_gamma: jax.Array    # f32[S] Amdahl contention: speedup = c / (1 + gamma*(c-1))
+    fail_rate: jax.Array    # f32[S] per-attempt failure probability
+    active: jax.Array       # bool[S] site exists / is up (elasticity + padding)
+    free_cores: jax.Array   # i32[S]
+    free_memory: jax.Array  # f32[S]
+    n_assigned: jax.Array   # i32[S] cumulative jobs assigned
+    n_finished: jax.Array   # i32[S] cumulative finished
+    n_failed: jax.Array     # i32[S] cumulative failed attempts
+
+    @property
+    def capacity(self) -> int:
+        return self.cores.shape[-1]
+
+
+class EventLog(NamedTuple):
+    """Fixed-shape ring buffer of per-round snapshots (CGSim Table 1 / dashboard feed).
+
+    ``site_free``/``site_running``/``site_queued`` are per-site columns so the
+    monitor can render node pressure; ``counts`` are global per-state tallies.
+    """
+
+    time: jax.Array          # f32[R]
+    round_idx: jax.Array     # i32[R]
+    counts: jax.Array        # i32[R, N_STATES]
+    n_started: jax.Array     # i32[R] jobs started this round
+    n_completed: jax.Array   # i32[R]
+    site_free: jax.Array     # i32[R, S]
+    site_queued: jax.Array   # i32[R, S] jobs sitting in each site queue
+    site_running: jax.Array  # i32[R, S]
+    cursor: jax.Array        # i32[] next write slot (wraps)
+
+    @property
+    def rows(self) -> int:
+        return self.time.shape[-1]
+
+
+class EngineState(NamedTuple):
+    clock: jax.Array        # f32[]
+    round: jax.Array        # i32[]
+    jobs: JobsState
+    sites: SiteState
+    rng: jax.Array          # PRNGKey
+    policy_state: object    # policy-defined pytree
+    log: EventLog
+    halted: jax.Array       # bool[] no further progress possible
+
+
+class SimResult(NamedTuple):
+    makespan: jax.Array     # f32[] clock at termination
+    rounds: jax.Array       # i32[]
+    jobs: JobsState
+    sites: SiteState
+    log: EventLog
+    policy_state: object
+
+
+def make_jobs(
+    *,
+    job_id,
+    arrival,
+    work,
+    cores,
+    memory,
+    bytes_in,
+    bytes_out,
+    priority=None,
+    capacity: int | None = None,
+) -> JobsState:
+    """Build a JobsState from per-job vectors, padding to ``capacity`` rows."""
+    arrival = jnp.asarray(arrival, jnp.float32)
+    n = arrival.shape[0]
+    cap = capacity or n
+    if cap < n:
+        raise ValueError(f"capacity {cap} < number of jobs {n}")
+
+    def pad_f(x, fill=0.0):
+        x = jnp.asarray(x, jnp.float32)
+        return jnp.pad(x, (0, cap - n), constant_values=fill)
+
+    def pad_i(x, fill=0):
+        x = jnp.asarray(x, jnp.int32)
+        return jnp.pad(x, (0, cap - n), constant_values=fill)
+
+    if priority is None:
+        priority = jnp.zeros((n,), jnp.float32)
+    valid = jnp.arange(cap) < n
+    return JobsState(
+        job_id=pad_i(job_id, -1),
+        arrival=pad_f(arrival, jnp.inf),
+        work=pad_f(work),
+        cores=pad_i(cores, 1),
+        memory=pad_f(memory),
+        bytes_in=pad_f(bytes_in),
+        bytes_out=pad_f(bytes_out),
+        priority=pad_f(priority),
+        state=jnp.where(valid, PENDING, DONE).astype(jnp.int32),
+        site=jnp.full((cap,), -1, jnp.int32),
+        t_assign=jnp.full((cap,), jnp.inf, jnp.float32),
+        t_start=jnp.full((cap,), jnp.inf, jnp.float32),
+        t_finish=jnp.full((cap,), jnp.inf, jnp.float32),
+        retries=jnp.zeros((cap,), jnp.int32),
+        will_fail=jnp.zeros((cap,), bool),
+        valid=valid,
+    )
+
+
+def make_sites(
+    *,
+    cores,
+    speed,
+    memory,
+    bw_in,
+    bw_out,
+    latency=None,
+    par_gamma=None,
+    fail_rate=None,
+    capacity: int | None = None,
+) -> SiteState:
+    cores = jnp.asarray(cores, jnp.int32)
+    n = cores.shape[0]
+    cap = capacity or n
+
+    def pad_f(x, fill=0.0):
+        x = jnp.broadcast_to(jnp.asarray(x, jnp.float32), (n,))
+        return jnp.pad(x, (0, cap - n), constant_values=fill)
+
+    def pad_i(x, fill=0):
+        x = jnp.broadcast_to(jnp.asarray(x, jnp.int32), (n,))
+        return jnp.pad(x, (0, cap - n), constant_values=fill)
+
+    if latency is None:
+        latency = jnp.zeros((n,), jnp.float32)
+    if par_gamma is None:
+        par_gamma = jnp.zeros((n,), jnp.float32)
+    if fail_rate is None:
+        fail_rate = jnp.zeros((n,), jnp.float32)
+    active = jnp.arange(cap) < n
+    cores_p = pad_i(cores)
+    mem_p = pad_f(memory)
+    return SiteState(
+        cores=cores_p,
+        speed=pad_f(speed, 1.0),
+        memory=mem_p,
+        bw_in=pad_f(bw_in, 1.0),
+        bw_out=pad_f(bw_out, 1.0),
+        latency=pad_f(latency),
+        par_gamma=pad_f(par_gamma),
+        fail_rate=pad_f(fail_rate),
+        active=active,
+        free_cores=cores_p,
+        free_memory=mem_p,
+        n_assigned=jnp.zeros((cap,), jnp.int32),
+        n_finished=jnp.zeros((cap,), jnp.int32),
+        n_failed=jnp.zeros((cap,), jnp.int32),
+    )
+
+
+def make_log(rows: int, n_sites: int) -> EventLog:
+    r = max(rows, 1)
+    return EventLog(
+        time=jnp.full((r,), jnp.nan, jnp.float32),
+        round_idx=jnp.full((r,), -1, jnp.int32),
+        counts=jnp.zeros((r, N_STATES), jnp.int32),
+        n_started=jnp.zeros((r,), jnp.int32),
+        n_completed=jnp.zeros((r,), jnp.int32),
+        site_free=jnp.zeros((r, n_sites), jnp.int32),
+        site_queued=jnp.zeros((r, n_sites), jnp.int32),
+        site_running=jnp.zeros((r, n_sites), jnp.int32),
+        cursor=jnp.zeros((), jnp.int32),
+    )

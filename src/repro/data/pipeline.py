@@ -1,0 +1,92 @@
+"""Deterministic synthetic token pipeline.
+
+Production shape without production data: an infinite, seeded, host-sharded
+token stream.  ``batch_at(step)`` is a pure function of (seed, step, shard),
+so restart-after-failure resumes bit-identically (checkpoint stores only the
+step counter), and every data-parallel host reads a disjoint shard.
+
+The generator produces Zipfian token draws with document boundaries (BOS) and
+a repeated-ngram structure so losses actually decrease during the examples'
+short training runs.
+"""
+from __future__ import annotations
+
+from typing import Iterator, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class DataConfig(NamedTuple):
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_hosts: int = 1
+    host_id: int = 0
+    bos_id: int = 1
+    mean_doc_len: int = 512
+    zipf_a: float = 1.2
+
+
+def _zipf_probs(cfg: DataConfig) -> np.ndarray:
+    ranks = np.arange(1, cfg.vocab_size + 1, dtype=np.float64)
+    p = ranks ** -cfg.zipf_a
+    return (p / p.sum()).astype(np.float64)
+
+
+class TokenPipeline:
+    """Host-side numpy generation (cheap), device batches on demand."""
+
+    def __init__(self, cfg: DataConfig):
+        if cfg.global_batch % cfg.n_hosts:
+            raise ValueError("global_batch must divide over hosts")
+        self.cfg = cfg
+        self._probs = _zipf_probs(cfg)
+        self.local_batch = cfg.global_batch // cfg.n_hosts
+
+    def batch_at(self, step: int) -> dict:
+        cfg = self.cfg
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, step, cfg.host_id])
+        )
+        B, S = self.local_batch, cfg.seq_len
+        toks = rng.choice(cfg.vocab_size, size=(B, S), p=self._probs)
+        # structure: periodic bigram echo (learnable signal)
+        toks[:, 2::2] = toks[:, 1:-1:2]
+        # document boundaries
+        n_docs = max(1, S // cfg.mean_doc_len)
+        for b in range(B):
+            cuts = rng.choice(S, size=n_docs, replace=False)
+            toks[b, cuts] = cfg.bos_id
+        return {"tokens": jnp.asarray(toks, jnp.int32)}
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def prefetch(it: Iterator[dict], depth: int = 2) -> Iterator[dict]:
+    """Thread-backed prefetcher overlapping host generation with device step."""
+    import queue
+    import threading
+
+    q: "queue.Queue" = queue.Queue(maxsize=depth)
+    stop = object()
+
+    def worker():
+        try:
+            for item in it:
+                q.put(item)
+        finally:
+            q.put(stop)
+
+    threading.Thread(target=worker, daemon=True).start()
+    while True:
+        item = q.get()
+        if item is stop:
+            return
+        yield item

@@ -1,0 +1,1 @@
+from .driver import FailureInjector, InjectedFailure, RunReport, train_with_restarts  # noqa: F401

@@ -1,0 +1,70 @@
+"""Jitted wrappers: the assignment kernel as (a) a simulator dispatch
+combinator and (b) an MoE routing primitive."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .assign import assign_pallas
+from .ref import assign_ref
+
+# interpret=True on CPU (this container); compiled Mosaic on real TPU.
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "use_kernel"))
+def assign(scores, sizes, caps, *, k: int = 1, block_n: int = 256, use_kernel: bool = True):
+    """Capacity-constrained greedy assignment (see assign.py for semantics)."""
+    if use_kernel:
+        return assign_pallas(scores, sizes, caps, k=k, block_n=block_n, interpret=_INTERPRET)
+    return assign_ref(scores, sizes, caps, k=k, block_n=block_n)
+
+
+def make_capacity_assign(jobs_cores: jax.Array | None = None, *, use_kernel: bool = False, block_n: int = 256):
+    """Build an engine-compatible ``Policy.assign`` fn: jobs -> sites under
+    free-core capacity; jobs beyond capacity stay QUEUED at the main server.
+
+    ``use_kernel=False`` uses the jnp oracle inside the engine's while_loop
+    (pallas interpret mode inside while_loop is CPU-slow; on TPU flip it on).
+    """
+
+    def assign_fn(scores, queued, feasible, sites):
+        NEG = jnp.float32(-1e30)
+        masked = jnp.where(feasible & queued[:, None], scores, NEG)
+        sizes = jnp.ones((scores.shape[0],), jnp.float32) if jobs_cores is None else (
+            jobs_cores.astype(jnp.float32)
+        )
+        sizes = jnp.where(queued, sizes, 0.0)
+        caps = jnp.where(sites.active, sites.free_cores, 0).astype(jnp.float32)
+        idx, gate, admit, pos = assign(
+            masked, sizes, caps, k=1, block_n=block_n, use_kernel=use_kernel
+        )
+        ok = admit[:, 0] & queued
+        return jnp.where(ok, idx[:, 0], -1), ok
+
+    return assign_fn
+
+
+@functools.partial(jax.jit, static_argnames=("k", "capacity", "use_kernel", "block_n"))
+def moe_route(router_logits, *, k: int, capacity: int, use_kernel: bool = True, block_n: int = 256):
+    """Token->expert routing for the MoE layer.
+
+    router_logits f32[T, E] -> (expert i32[T,k], combine f32[T,k],
+    slot i32[T,k], keep bool[T,k]) where ``slot`` is the token's position in
+    its expert's capacity buffer.  Combine weights are renormalised over kept
+    slots (Switch/GShard convention).
+    """
+    T, E = router_logits.shape
+    sizes = jnp.ones((T,), jnp.float32)
+    caps = jnp.full((E,), float(capacity), jnp.float32)
+    idx, gate, admit, pos = assign(
+        router_logits, sizes, caps, k=k, block_n=block_n, use_kernel=use_kernel
+    )
+    keep = admit
+    combine = gate * keep
+    norm = jnp.maximum(combine.sum(-1, keepdims=True), 1e-9)
+    combine = combine / norm * gate.sum(-1, keepdims=True).clip(0.0, 1.0)
+    slot = pos.astype(jnp.int32)
+    return idx, combine, slot, keep

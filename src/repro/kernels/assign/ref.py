@@ -1,0 +1,79 @@
+"""Pure-jnp oracle for capacity-constrained greedy assignment.
+
+Semantics ("block-sequential greedy", DESIGN.md §3): items are processed in
+blocks of ``block_n`` in array order; within a block, slot s of *all* block
+items is resolved before slot s+1 (slot-major), and admission consumes
+capacity in item order via a weighted prefix sum.  With ``block_n >= N`` this
+is exactly GShard slot-major routing; with ``k == 1`` it is exact FIFO
+admission regardless of block size (the simulator dispatch case).
+
+Inputs
+  scores  f32[N, E]  raw policy/router logits; -inf marks infeasible pairs
+  sizes   f32[N]     capacity units an item consumes (1 for tokens, cores for jobs)
+  caps    f32[E]     per-bin capacity in the same units
+Outputs
+  bin_idx i32[N, k]  chosen bin per slot (-1 if infeasible)
+  gate    f32[N, k]  softmax(scores) value of the chosen bin
+  admit   bool[N, k] admitted under capacity
+  pos     f32[N, k]  units consumed in the chosen bin *before* this item
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def assign_ref(scores, sizes, caps, *, k: int = 1, block_n: int = 256):
+    N, E = scores.shape
+    scores = scores.astype(jnp.float32)
+    sizes = sizes.astype(jnp.float32)
+    caps = caps.astype(jnp.float32)
+
+    # row softmax over feasible bins only
+    feas = scores > NEG_INF / 2
+    m = jnp.max(jnp.where(feas, scores, -jnp.inf), axis=-1, keepdims=True)
+    p = jnp.where(feas, jnp.exp(scores - m), 0.0)
+    denom = jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    gates_full = p / denom
+
+    nb = -(-N // block_n)
+    pad = nb * block_n - N
+    scores_p = jnp.pad(scores, ((0, pad), (0, 0)), constant_values=NEG_INF)
+    sizes_p = jnp.pad(sizes, ((0, pad),))
+    gates_p = jnp.pad(gates_full, ((0, pad), (0, 0)))
+    scores_b = scores_p.reshape(nb, block_n, E)
+    sizes_b = sizes_p.reshape(nb, block_n)
+    gates_b = gates_p.reshape(nb, block_n, E)
+
+    def block_step(used, blk):
+        s, sz, g = blk  # [bn, E], [bn], [bn, E]
+        masked = s
+        outs = []
+        for _ in range(k):
+            best_val = jnp.max(masked, axis=-1)
+            iota = jnp.arange(E)[None, :]
+            is_best = masked >= best_val[:, None]
+            idx = jnp.min(jnp.where(is_best, iota, E), axis=-1)  # first argmax
+            ok = best_val > NEG_INF / 2
+            onehot = (iota == idx[:, None]) & ok[:, None]
+            w = onehot * sz[:, None]
+            cum_excl = jnp.cumsum(w, axis=0) - w  # [bn, E] units before me per bin
+            pos = (cum_excl * onehot).sum(-1) + used[idx]  # at my bin + block carry
+            admit = ok & (pos + sz <= caps[idx] + 1e-6)
+            # claims accumulate whether or not admitted: FIFO head-of-line
+            # blocking, the same semantics as the engine's start phase
+            used = used + w.sum(0)
+            gate = jnp.take_along_axis(g, idx[:, None], axis=-1)[:, 0]
+            outs.append((jnp.where(ok, idx, -1), gate * ok, admit, pos * ok))
+            masked = jnp.where(onehot, NEG_INF, masked)
+        stack = lambda i: jnp.stack([o[i] for o in outs], axis=-1)
+        return used, (stack(0).astype(jnp.int32), stack(1), stack(2), stack(3))
+
+    used0 = jnp.zeros((E,), jnp.float32)
+    _, (bin_idx, gate, admit, pos) = jax.lax.scan(
+        block_step, used0, (scores_b, sizes_b, gates_b)
+    )
+    unblk = lambda x: x.reshape(nb * block_n, k)[:N]
+    return unblk(bin_idx), unblk(gate), unblk(admit), unblk(pos)

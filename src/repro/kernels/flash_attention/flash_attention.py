@@ -1,0 +1,149 @@
+"""Pallas TPU kernel: causal / sliding-window GQA flash attention (forward).
+
+Online-softmax tiling (Flash-Attention style, adapted to TPU): grid
+(B, Hq, nQ, nK) with the KV dimension fastest so the output block is
+revisited consecutively; running max / denominator / accumulator live in
+VMEM scratch in f32.  Block shapes default to 128x128 — MXU-aligned on the
+v5e target and (128x128x4B) x ~6 buffers ≈ 400 KB of VMEM, far under budget;
+block_k scales to 512 for long-context prefill without spilling.
+
+Fully-masked tiles (future tiles under causality, tiles behind the sliding
+window) are skipped with ``pl.when`` — for long_500k local attention this is
+what turns O(S^2) into O(S x window).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref,  # [1,1,bq,D], [1,1,bk,D], [1,1,bk,D], [1,1,bq,D]
+    acc_ref, m_ref, l_ref,       # scratch: [bq,D] f32, [bq,1] f32, [bq,1] f32
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    block_q: int,
+    block_k: int,
+    kv_offset: int,
+):
+    iq, ik = pl.program_id(2), pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # tile-level skip tests (absolute positions; q is right-aligned to kv end)
+    q_lo = iq * block_q + kv_offset
+    q_hi = q_lo + block_q - 1
+    k_lo = ik * block_k
+    k_hi = k_lo + block_k - 1
+    live = jnp.bool_(True)
+    if causal:
+        live &= k_lo <= q_hi                    # not entirely in the future
+    if window > 0:
+        live &= k_hi > q_lo - window            # not entirely behind the window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # [bq, D]
+        k = k_ref[0, 0].astype(jnp.float32)               # [bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [bq, bk]
+
+        rows = jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0) + q_lo
+        cols = jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1) + k_lo
+        mask = jnp.ones_like(s, dtype=bool)
+        if causal:
+            mask &= cols <= rows
+        if window > 0:
+            mask &= cols > rows - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                                # [bq, 1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                             # [bq, bk]
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)                    # [bq, 1]
+        l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # [B, Hq, S, D]
+    k: jax.Array,  # [B, Hkv, Skv, D]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    B, Hq, S, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    scale = float(scale if scale is not None else D ** -0.5)
+
+    pad_q = (-S) % block_q
+    pad_k = (-Skv) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    Sq, Skvp = S + pad_q, Skv + pad_k
+    nq, nk = Sq // block_q, Skvp // block_k
+    kv_offset = Skv - S  # right-align q positions to the kv end (decode/prefill)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            scale=scale,
+            causal=causal,
+            window=window,
+            block_q=block_q,
+            block_k=block_k,
+            kv_offset=kv_offset,
+        ),
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik, g=G: (b, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik, g=G: (b, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :S]

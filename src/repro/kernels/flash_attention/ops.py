@@ -1,0 +1,202 @@
+"""Attention entry points.
+
+``flash_attention`` — the Pallas kernel (TPU target; interpret-mode on CPU).
+``chunked_attention`` — same online-softmax math as a lax.scan over KV
+chunks: differentiable, SPMD-partitionable, remat-friendly.  Models use this
+path inside pjit (a pallas_call does not SPMD-partition automatically across
+the 512-device mesh); the kernel is the single-device hot-spot implementation
+and is validated against the same oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+from .ref import attention_ref
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "scale", "block_q", "block_k")
+)
+def flash_attention(q, k, v, *, causal=True, window=0, scale=None, block_q=128, block_k=128):
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=_INTERPRET,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "scale", "chunk", "unroll")
+)
+def chunked_attention(q, k, v, *, causal=True, window=0, scale=None, chunk=512,
+                      unroll=False):
+    """Online-softmax attention, scanned over KV chunks.
+
+    q [B,Hq,S,D], k/v [B,Hkv,Skv,D] (Skv >= S, q right-aligned).  Peak live
+    logits are [B,Hq,S,chunk] — bounded regardless of Skv.  ``unroll``
+    replaces the scan with a Python loop (exact cost_analysis accounting for
+    the roofline measurement pass).
+    """
+    B, Hq, S, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    G = Hq // Hkv
+    scale_ = scale if scale is not None else D ** -0.5
+
+    pad = (-Skv) % chunk
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    n_chunks = (Skv + pad) // chunk
+    kc = kp.reshape(B, Hkv, n_chunks, chunk, D).transpose(2, 0, 1, 3, 4)
+    vc = vp.reshape(B, Hkv, n_chunks, chunk, D).transpose(2, 0, 1, 3, 4)
+
+    qf = q.astype(jnp.float32) * scale_
+    q_pos = jnp.arange(S) + (Skv - S)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        kci, vci, c0 = inputs
+        kg = jnp.repeat(kci, G, axis=1).astype(jnp.float32)   # [B,Hq,chunk,D]
+        vg = jnp.repeat(vci, G, axis=1).astype(jnp.float32)
+        s = jnp.einsum("bhsd,bhtd->bhst", qf, kg)             # [B,Hq,S,chunk]
+        kv_pos = c0 + jnp.arange(chunk)
+        mask = kv_pos[None, :] < Skv
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        if window > 0:
+            mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask[None, None], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(-1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum("bhst,bhtd->bhsd", p, vg)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hq, S, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hq, S, 1), jnp.float32)
+    acc0 = jnp.zeros((B, Hq, S, D), jnp.float32)
+    offsets = jnp.arange(n_chunks) * chunk
+    if unroll:
+        carry = (m0, l0, acc0)
+        for i in range(n_chunks):
+            carry, _ = step(carry, (kc[i], vc[i], offsets[i]))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0), (kc, vc, offsets))
+    return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "chunk", "q_block", "unroll"),
+)
+def qblock_attention(q, k, v, *, causal=True, window=0, scale=None, chunk=512,
+                     q_block=1024, unroll=False):
+    """Two-level flash schedule in jnp: outer loop over q blocks, inner
+    online-softmax loop over kv chunks, with causal/window *block skipping*
+    (the Pallas kernel's schedule, expressed as HLO).
+
+    vs ``chunked_attention`` this (a) halves causal attention FLOPs by
+    skipping fully-masked tiles and (b) shrinks the softmax carry traffic
+    from [B,H,S,D] per kv step to [B,H,q_block,D] per tile — the §Perf
+    memory-term lever for long-context prefill.
+    """
+    B, Hq, S, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    G = Hq // Hkv
+    scale_ = scale if scale is not None else D ** -0.5
+
+    pad_q = (-S) % q_block
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    nq = (S + pad_q) // q_block
+    pad_k = (-Skv) % chunk
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    nk = (Skv + pad_k) // chunk
+    kc = kp.reshape(B, Hkv, nk, chunk, D)
+    vc = vp.reshape(B, Hkv, nk, chunk, D)
+    off = Skv - S  # q right-aligned
+
+    def q_tile(iq, q_blk):
+        q_lo = iq * q_block + off
+        q_pos = q_lo + jnp.arange(q_block)
+        qf = q_blk.astype(jnp.float32) * scale_
+
+        def kv_step(carry, ik):
+            m, l, acc = carry
+            kci = jax.lax.dynamic_index_in_dim(kc, ik, 2, keepdims=False)
+            vci = jax.lax.dynamic_index_in_dim(vc, ik, 2, keepdims=False)
+            kg = jnp.repeat(kci, G, axis=1).astype(jnp.float32)
+            vg = jnp.repeat(vci, G, axis=1).astype(jnp.float32)
+            s = jnp.einsum("bhsd,bhtd->bhst", qf, kg)
+            kv_pos = ik * chunk + jnp.arange(chunk)
+            mask = kv_pos[None, :] < Skv
+            if causal:
+                mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+            if window > 0:
+                mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+            s = jnp.where(mask[None, None], s, -jnp.inf)
+            m_cur = jnp.max(s, -1, keepdims=True)
+            m_new = jnp.maximum(m, m_cur)
+            p = jnp.where(mask[None, None], jnp.exp(s - m_new), 0.0)
+            alpha = jnp.exp(m - m_new)
+            return (m_new, l * alpha + p.sum(-1, keepdims=True),
+                    acc * alpha + jnp.einsum("bhst,bhtd->bhsd", p, vg)), None
+
+        m0 = jnp.full((B, Hq, q_block, 1), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, Hq, q_block, 1), jnp.float32)
+        a0 = jnp.zeros((B, Hq, q_block, D), jnp.float32)
+        # tile skipping: causal upper bound / window lower bound
+        q_hi = q_lo + q_block - 1
+        ik_hi = min((int(q_hi) // chunk) + 1, nk) if causal else nk
+        ik_lo = max((int(q_lo) - window + 1) // chunk, 0) if window > 0 else 0
+        if unroll:
+            carry = (m0, l0, a0)
+            for ik in range(ik_lo, ik_hi):
+                carry, _ = kv_step(carry, ik)
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m0, l0, a0), jnp.arange(ik_lo, ik_hi)
+            )
+        return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+    tiles = [q_tile(iq, qp[:, :, iq * q_block:(iq + 1) * q_block]) for iq in range(nq)]
+    out = jnp.concatenate(tiles, axis=2)
+    return out[:, :, :S]
+
+
+def decode_attention(q, k, v, *, window=0, kv_len=None, scale=None):
+    """Single-token decode: q [B,Hq,1,D] against a [B,Hkv,Skv,D] cache.
+
+    ``kv_len`` (i32[B] or scalar) masks the still-empty tail of the cache;
+    ``window`` restricts to the last ``window`` live positions.
+    """
+    B, Hq, _, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    G = Hq // Hkv
+    scale_ = scale if scale is not None else D ** -0.5
+    kg = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vg = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32) * scale_, kg)  # [B,Hq,1,Skv]
+    pos = jnp.arange(Skv)[None, None, None, :]
+    if kv_len is None:
+        live = jnp.ones((1, 1, 1, Skv), bool)
+    else:
+        kl = jnp.asarray(kv_len).reshape(-1, 1, 1, 1)
+        live = pos < kl
+        if window > 0:
+            live &= pos >= kl - window
+    s = jnp.where(live, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, vg).astype(q.dtype)
+
+
+__all__ = ["flash_attention", "chunked_attention", "decode_attention", "attention_ref"]

@@ -1,0 +1,34 @@
+"""Dense pure-jnp oracle for (causal | sliding-window) GQA attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0, scale: float | None = None):
+    """q [B,Hq,S,D], k/v [B,Hkv,Skv,D] -> [B,Hq,S,D].
+
+    window > 0 keeps only kv in (q_pos - window, q_pos] (local attention);
+    softmax in f32 regardless of input dtype.
+    """
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    Skv = k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+
+    kq = jnp.repeat(k, G, axis=1)
+    vq = jnp.repeat(v, G, axis=1)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32), kq.astype(jnp.float32))
+    logits = logits * scale
+
+    q_pos = jnp.arange(S)[:, None] + (Skv - S)  # right-aligned when Skv > S
+    kv_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((S, Skv), bool)
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window > 0:
+        mask &= kv_pos > q_pos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jnp.exp(logits - logits.max(-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhst,bhtd->bhsd", p, vq.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,123 @@
+"""Multi-pod dry-run: ``.lower().compile()`` every (architecture x input
+shape x mesh) cell on placeholder devices; record memory_analysis,
+cost_analysis and the collective schedule for EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+
+The XLA_FLAGS lines below MUST run before any other import touches jax.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs import ARCHS, SHAPES, get_skips, runnable_cells
+from .mesh import make_production_mesh
+from .roofline import analyze, model_flops_for_cell
+from .specs import build_cell, input_specs
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    n_dev = mesh.size
+    cell = build_cell(arch, shape, mesh)
+    fn, specs, donate = input_specs(cell, mesh)
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(fn, donate_argnums=donate).lower(*specs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        if verbose:
+            print(f"[{mesh_name}] {arch} x {shape}: lower {t_lower:.1f}s compile {t_compile:.1f}s")
+            print("  memory_analysis:", mem)
+        spec = SHAPES[shape]
+        rf = analyze(
+            arch=arch,
+            shape=shape,
+            mesh_name=mesh_name,
+            n_devices=n_dev,
+            compiled=compiled,
+            model_flops_total=model_flops_for_cell(cell.cfg, spec, cell.kind),
+        )
+        if verbose:
+            print("  cost_analysis: flops/dev=%.3e bytes/dev=%.3e coll/dev=%.3e" % (
+                rf.hlo_flops, rf.hlo_bytes, rf.coll_bytes))
+            print("  terms: compute=%.4fs memory=%.4fs collective=%.4fs -> %s-bound, "
+                  "roofline_frac=%.3f" % (
+                      rf.compute_s, rf.memory_s, rf.collective_s, rf.bottleneck,
+                      rf.roofline_frac))
+    out = json.loads(rf.to_json())
+    out.update(
+        lower_s=t_lower,
+        compile_s=t_compile,
+        memory_analysis=str(mem),
+        microbatches=cell.microbatches,
+        seq_shard=cell.cfg.seq_shard,
+        kind=cell.kind,
+        ok=True,
+    )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCHS) + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="every runnable cell")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = runnable_cells()
+    else:
+        archs = [args.arch] if args.arch else list(ARCHS)
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        cells = [
+            (a, s) for a in archs for s in shapes if s not in get_skips(a)
+        ]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch, shape in cells:
+        for multi in meshes:
+            tag = f"{'2x16x16' if multi else '16x16'}__{arch}__{shape}".replace("/", "_")
+            path = os.path.join(args.out, tag + ".json")
+            if args.skip_existing and os.path.exists(path):
+                print("skip", tag)
+                continue
+            try:
+                rec = run_cell(arch, shape, multi_pod=multi)
+            except Exception as e:  # noqa: BLE001 - record and continue
+                rec = dict(arch=arch, shape=shape, mesh="2x16x16" if multi else "16x16",
+                           ok=False, error=f"{type(e).__name__}: {e}",
+                           traceback=traceback.format_exc()[-4000:])
+                failures.append(tag)
+                print("FAIL", tag, rec["error"])
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+    skipped = [(a, s, r) for a in ARCHS for s, r in get_skips(a).items()]
+    with open(os.path.join(args.out, "skips.json"), "w") as f:
+        json.dump([{"arch": a, "shape": s, "reason": r} for a, s, r in skipped], f, indent=1)
+    print(f"done; {len(failures)} failures", failures if failures else "")
+
+
+if __name__ == "__main__":
+    main()

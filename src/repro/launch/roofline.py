@@ -1,0 +1,169 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / peak_FLOP/s          (per chip)
+    memory term     = HLO_bytes / HBM_bw               (per chip)
+    collective term = collective_bytes / link_bw       (per chip)
+
+``compiled.cost_analysis()`` reports the per-partition (per-chip) module, so
+terms divide by single-chip constants.  collective_bytes comes from parsing
+the post-SPMD per-device HLO: we sum the byte cost of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute with the
+standard ring-cost factors (all-reduce counts twice: reduce-scatter +
+all-gather phases).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass
+
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute",
+)
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-op-kind byte totals from a post-optimization per-device HLO dump."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # result-shape tokens appear before ' <op>(' — match op use, not name
+        for kind in _COLLECTIVES:
+            if f" {kind}(" in stripped or f" {kind}-start(" in stripped:
+                lhs = stripped.split("=", 1)
+                if len(lhs) != 2:
+                    continue
+                # result shape(s) sit at the start of the RHS
+                rhs = lhs[1].strip()
+                shape_end = rhs.find(kind)
+                out[kind] += _shape_bytes(rhs[:shape_end])
+                break
+    return out
+
+
+# ring-cost multipliers: bytes actually moved per device per op result-byte
+_COST_FACTOR = {
+    "all-gather": 1.0,          # (n-1)/n ~ 1 of the gathered result
+    "all-reduce": 2.0,          # reduce-scatter + all-gather phases
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    hlo_flops: float            # per device
+    hlo_bytes: float            # per device
+    coll_bytes: float           # per device (cost-weighted)
+    coll_breakdown: dict
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float          # 6*N_active*D (train) / 2*N_active*D (serve)
+    useful_ratio: float         # model_flops_per_device / hlo_flops
+    peak_bytes_per_device: float
+    step_s: float               # max of the three terms
+    roofline_frac: float        # model-flops-time / step_s (perf score)
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self), indent=1)
+
+
+def analyze(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    n_devices: int,
+    compiled,
+    model_flops_total: float,
+    peak_bytes: float | None = None,
+) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    flops = float(ca.get("flops", 0.0))
+    bytes_ = float(ca.get("bytes accessed", 0.0))
+    breakdown = collective_bytes(compiled.as_text())
+    coll = sum(_COST_FACTOR[k] * v for k, v in breakdown.items())
+
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = bytes_ / HBM_BW
+    collective_s = coll / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    model_flops_dev = model_flops_total / n_devices
+    step_s = max(terms.values())
+    ideal_s = model_flops_dev / PEAK_FLOPS_BF16
+    if peak_bytes is None:
+        try:
+            ma = compiled.memory_analysis()
+            peak_bytes = float(
+                getattr(ma, "temp_size_in_bytes", 0)
+                + getattr(ma, "argument_size_in_bytes", 0)
+                + getattr(ma, "output_size_in_bytes", 0)
+                - getattr(ma, "alias_size_in_bytes", 0)
+            )
+        except Exception:
+            peak_bytes = -1.0
+    return Roofline(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        n_devices=n_devices,
+        hlo_flops=flops,
+        hlo_bytes=bytes_,
+        coll_bytes=coll,
+        coll_breakdown=breakdown,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops=model_flops_total,
+        useful_ratio=(model_flops_dev / flops) if flops else 0.0,
+        peak_bytes_per_device=peak_bytes,
+        step_s=step_s,
+        roofline_frac=(ideal_s / step_s) if step_s else 0.0,
+    )
+
+
+def model_flops_for_cell(cfg, shape_spec, kind: str) -> float:
+    """6*N_active*tokens for train; 2*N_active*tokens for serving steps."""
+    if kind == "train":
+        tokens = shape_spec.global_batch * shape_spec.seq_len
+        return cfg.model_flops_per_token(backward=True) * tokens
+    if kind == "prefill":
+        tokens = shape_spec.global_batch * shape_spec.seq_len
+        return cfg.model_flops_per_token(backward=False) * tokens
+    # decode: one token per sequence; attention reads the cache (memory-bound,
+    # not counted in 2N) — 2*N_active per new token
+    tokens = shape_spec.global_batch
+    return cfg.model_flops_per_token(backward=False) * tokens

@@ -1,0 +1,129 @@
+"""input_specs(): ShapeDtypeStruct stand-ins (weak-type-correct, shardable,
+zero allocation) for every (arch x shape) dry-run cell, plus the step
+function that cell lowers."""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, get_config, get_plan
+from ..models import build_model
+from ..parallel.sharding import batch_axes, cache_shardings, params_shardings
+from ..serve.serve_step import make_decode_step, make_prefill_step
+from ..train.optimizer import AdamWConfig
+from ..train.train_step import init_train_state, make_train_step
+
+
+def round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+class Cell(NamedTuple):
+    arch: str
+    shape: str
+    cfg: object
+    plan: object
+    kind: str
+    microbatches: int
+
+
+def build_cell(arch: str, shape: str, mesh: Mesh) -> Cell:
+    cfg = get_config(arch)
+    plan = get_plan(arch, shape)
+    spec = SHAPES[shape]
+    # Megatron-style vocab padding so [V, d] tables shard over 'model'
+    # (documented fidelity note: pad ids are never targets)
+    model_par = mesh.shape.get("model", 1)
+    cfg = cfg.replace(vocab_size=round_up(cfg.vocab_size, max(16, model_par)))
+    if plan.seq_shard and spec.kind == "train":
+        cfg = cfg.replace(seq_shard=True)
+    dp = 1
+    for a in ("pod", "data"):
+        dp *= mesh.shape.get(a, 1)
+    mb = plan.microbatches
+    if spec.kind == "train" and dp < 32:
+        mb = min(mb * (32 // dp), spec.global_batch)  # keep per-shard footprint
+    return Cell(arch, shape, cfg, plan, spec.kind, mb)
+
+
+def _struct(sharding):
+    return lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=sharding) if not isinstance(
+        x, jax.ShapeDtypeStruct
+    ) else jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=sharding)
+
+
+def _to_structs(abstract, shardings):
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s), abstract, shardings
+    )
+
+
+def _batch_spec_for(B: int, mesh: Mesh):
+    axes = batch_axes(mesh)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    return axes if (axes and B % total == 0) else None
+
+
+def input_specs(cell: Cell, mesh: Mesh):
+    """Returns (fn, specs_tuple, donate) for jax.jit(...).lower(*specs)."""
+    cfg, spec = cell.cfg, SHAPES[cell.shape]
+    model = build_model(cfg)
+    B, S = spec.global_batch, spec.seq_len
+    Baxes = _batch_spec_for(B, mesh)
+
+    def tok_struct(b, s):
+        return jax.ShapeDtypeStruct((b, s), jnp.int32, sharding=NamedSharding(mesh, P(Baxes, None)))
+
+    def emb_struct(b, t):
+        return jax.ShapeDtypeStruct(
+            (b, t, cfg.d_model), jnp.dtype(cfg.dtype),
+            sharding=NamedSharding(mesh, P(Baxes, None, None)),
+        )
+
+    def batch_structs(b, s):
+        batch = {"tokens": tok_struct(b, s)}
+        if cfg.family == "encdec":
+            batch["frames"] = emb_struct(b, cfg.n_frames)
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = emb_struct(b, cfg.n_patches)
+        return batch
+
+    if cell.kind == "train":
+        opt_8bit = getattr(cell.plan, "opt_8bit", False)
+        abs_state = jax.eval_shape(
+            lambda: init_train_state(model, jax.random.PRNGKey(0), opt_8bit=opt_8bit)
+        )
+        state_structs = _to_structs(abs_state, params_shardings(abs_state, mesh))
+        step = make_train_step(model, AdamWConfig(), microbatches=cell.microbatches,
+                               opt_8bit=opt_8bit)
+        fn = lambda state, batch: step(state, batch)
+        return fn, (state_structs, batch_structs(B, S)), (0,)
+
+    abs_params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    psh = params_shardings(abs_params, mesh)
+    params_structs = _to_structs(abs_params, psh)
+
+    if cell.kind == "prefill":
+        cache_len = S
+        abs_cache = jax.eval_shape(lambda: model.init_cache(B, cache_len))
+        csh = cache_shardings(abs_cache, mesh, shard_len=cell.plan.shard_cache_len, batch=Baxes)
+        cache_structs = _to_structs(abs_cache, csh)
+        step = make_prefill_step(model)
+        fn = lambda params, batch, cache: step(params, batch, cache)
+        return fn, (params_structs, batch_structs(B, S), cache_structs), (2,)
+
+    # decode: one new token against a cache of seq_len (or the plan override)
+    cache_len = cell.plan.decode_cache_len or S
+    abs_cache = jax.eval_shape(lambda: model.init_cache(B, cache_len))
+    # pretend the cache is full: len scalar is part of the pytree
+    csh = cache_shardings(abs_cache, mesh, shard_len=cell.plan.shard_cache_len, batch=Baxes)
+    cache_structs = _to_structs(abs_cache, csh)
+    decode = make_decode_step(model)
+    fn = lambda params, tok, cache: decode(params, tok, cache)
+    return fn, (params_structs, tok_struct(B, 1), cache_structs), (2,)

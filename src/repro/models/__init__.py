@@ -1,0 +1,4 @@
+"""LM workload layer: architecture families used by the grid simulator's
+workload model and the multi-pod dry-run (DESIGN.md §4)."""
+from .config import ModelConfig  # noqa: F401
+from .model import Model, build_model, param_count  # noqa: F401

@@ -1,0 +1,151 @@
+"""GQA attention block: train (chunked flash), prefill (cache fill), decode.
+
+Cross-attention (whisper decoder) reuses the same projections with external
+KV and no causal mask.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.flash_attention.ops import chunked_attention, decode_attention, qblock_attention
+from .config import ModelConfig
+from .layers import apply_rope, dense_init
+
+
+def init_attention(key, cfg: ModelConfig, dtype):
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, hq * dh, dtype=dtype),
+        "wk": dense_init(ks[1], d, hkv * dh, dtype=dtype),
+        "wv": dense_init(ks[2], d, hkv * dh, dtype=dtype),
+        "wo": dense_init(ks[3], hq * dh, d, scale=(hq * dh) ** -0.5 / (2 * cfg.n_layers) ** 0.5, dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig):
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+def _causal_attn(q, k, v, cfg: ModelConfig):
+    if cfg.attention_impl == "qblock":
+        return qblock_attention(
+            q, k, v, causal=True, window=cfg.window, chunk=cfg.attn_chunk,
+            q_block=cfg.attn_q_block, unroll=not cfg.scan_layers)
+    return chunked_attention(q, k, v, causal=True, window=cfg.window,
+                             chunk=cfg.attn_chunk, unroll=not cfg.scan_layers)
+
+
+def attention_train(p, x, cfg: ModelConfig, *, positions=None, rope: bool = True):
+    """Full-sequence causal (optionally windowed) attention."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg)
+    if rope:
+        pos = positions if positions is not None else jnp.arange(S)
+        q = apply_rope(q, pos, theta=cfg.rope_theta)
+        k = apply_rope(k, pos, theta=cfg.rope_theta)
+    o = _causal_attn(q, k, v, cfg)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.d_head)
+    return o @ p["wo"]
+
+
+def attention_bidir(p, x, cfg: ModelConfig):
+    """Encoder self-attention (whisper encoder): no mask, no rope."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg)
+    o = chunked_attention(q, k, v, causal=False, window=0, chunk=cfg.attn_chunk,
+                          unroll=not cfg.scan_layers)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.d_head)
+    return o @ p["wo"]
+
+
+def cross_attention(p, x, kv_cache, cfg: ModelConfig):
+    """Decoder cross-attn over precomputed encoder K/V ([B,Hkv,T,dh] pair)."""
+    B, S, _ = x.shape
+    q = (x @ p["wq"] + (p["bq"] if cfg.qkv_bias else 0.0)).reshape(
+        B, S, cfg.n_heads, cfg.d_head
+    ).transpose(0, 2, 1, 3)
+    k, v = kv_cache
+    o = chunked_attention(q, k, v, causal=False, window=0, chunk=cfg.attn_chunk,
+                          unroll=not cfg.scan_layers)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.d_head)
+    return o @ p["wo"]
+
+
+def encode_cross_kv(p, enc_out, cfg: ModelConfig):
+    B, T, _ = enc_out.shape
+    k = (enc_out @ p["wk"] + (p["bk"] if cfg.qkv_bias else 0.0)).reshape(
+        B, T, cfg.n_kv_heads, cfg.d_head
+    ).transpose(0, 2, 1, 3)
+    v = (enc_out @ p["wv"] + (p["bv"] if cfg.qkv_bias else 0.0)).reshape(
+        B, T, cfg.n_kv_heads, cfg.d_head
+    ).transpose(0, 2, 1, 3)
+    return k, v
+
+
+# ------------------------------------------------------------- serving -----
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    shape = (batch, cfg.n_kv_heads, max_len, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attention_prefill(p, x, cfg: ModelConfig, cache, *, start: int = 0, rope: bool = True):
+    """Run causal attention over a prompt chunk and fill the cache in place."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg)
+    if rope:
+        pos = start + jnp.arange(S)
+        q = apply_rope(q, pos, theta=cfg.rope_theta)
+        k = apply_rope(k, pos, theta=cfg.rope_theta)
+    o = _causal_attn(q, k, v, cfg)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.d_head)
+    cache = {
+        "k": jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, start, 0)),
+        "v": jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, start, 0)),
+    }
+    return o @ p["wo"], cache
+
+
+def attention_decode(p, x_t, cfg: ModelConfig, cache, kv_len, *, rope: bool = True):
+    """One token: append K/V at position ``kv_len`` and attend to the prefix.
+
+    x_t [B, 1, d]; kv_len scalar i32 (tokens already in the cache).
+
+    If the cache buffer is no longer than the attention window, it is treated
+    as a *rolling* buffer (writes wrap modulo the buffer, every live entry is
+    in-window) — long_500k decode allocates only ``window`` slots.
+    """
+    B = x_t.shape[0]
+    L = cache["k"].shape[2]
+    rolling = cfg.window > 0 and L <= cfg.window
+    q, k, v = _project_qkv(p, x_t, cfg)
+    if rope:
+        pos = jnp.full((1,), kv_len, jnp.int32)
+        q = apply_rope(q, pos, theta=cfg.rope_theta)
+        k = apply_rope(k, pos, theta=cfg.rope_theta)
+    slot = jnp.mod(kv_len, L) if rolling else kv_len
+    cache_k = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, slot, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, slot, 0))
+    if rolling:
+        o = decode_attention(q, cache_k, cache_v, kv_len=jnp.minimum(kv_len + 1, L))
+    else:
+        o = decode_attention(q, cache_k, cache_v, window=cfg.window, kv_len=kv_len + 1)
+    o = o.transpose(0, 2, 1, 3).reshape(B, 1, cfg.n_heads * cfg.d_head)
+    return o @ p["wo"], {"k": cache_k, "v": cache_v}

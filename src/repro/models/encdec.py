@@ -1,0 +1,195 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The conv/mel audio frontend is a STUB per the brief: ``frames`` arrive as
+precomputed [B, T_frames, d_model] embeddings (input_specs provides them).
+Encoder: bidirectional attention blocks.  Decoder: causal self-attention +
+cross-attention + GELU MLP, with learned positions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .transformer import maybe_scan
+from .attention import (
+    attention_bidir,
+    attention_decode,
+    attention_prefill,
+    attention_train,
+    cross_attention,
+    encode_cross_kv,
+    init_attention,
+    init_kv_cache,
+)
+from .config import ModelConfig
+from .layers import embed_init, layernorm
+from .mlp import init_mlp, mlp_forward
+
+AUX_KEYS = ("moe_lb_loss", "moe_z_loss", "moe_drop_frac")
+
+
+def _ln_init(d, dtype):
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def _ln(x, p, eps):
+    return layernorm(x, p["w"], p["b"], eps=eps)
+
+
+def init_params(rng, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    ks = jax.random.split(rng, 8)
+
+    def enc_block(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "ln1": _ln_init(d, dtype),
+            "attn": init_attention(k1, cfg, dtype),
+            "ln2": _ln_init(d, dtype),
+            "mlp": init_mlp(k2, cfg, dtype=dtype),
+        }
+
+    def dec_block(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "ln1": _ln_init(d, dtype),
+            "self_attn": init_attention(k1, cfg, dtype),
+            "ln2": _ln_init(d, dtype),
+            "cross_attn": init_attention(k2, cfg, dtype),
+            "ln3": _ln_init(d, dtype),
+            "mlp": init_mlp(k3, cfg, dtype=dtype),
+        }
+
+    enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_dec_layers)
+    return {
+        "embed": embed_init(ks[2], cfg.vocab_size, d, dtype),
+        "pos_dec": embed_init(ks[3], 4096, d, dtype),  # learned decoder positions
+        "enc": jax.vmap(enc_block)(enc_keys),
+        "dec": jax.vmap(dec_block)(dec_keys),
+        "enc_norm": _ln_init(d, dtype),
+        "dec_norm": _ln_init(d, dtype),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames [B, T, d] (stub frontend output) -> encoder states."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+
+    def body(x, p):
+        h = attention_bidir(p["attn"], _ln(x, p["ln1"], cfg.norm_eps), cfg)
+        x = x + h
+        x = x + mlp_forward(p["mlp"], _ln(x, p["ln2"], cfg.norm_eps), cfg)
+        return x, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = maybe_scan(body_fn, x, params["enc"], cfg, cfg.n_enc_layers)
+    return _ln(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _decoder_pos_embed(params, tokens, start):
+    S = tokens.shape[1]
+    pos = start + jnp.arange(S)
+    return params["pos_dec"][jnp.clip(pos, 0, params["pos_dec"].shape[0] - 1)]
+
+
+def forward(params, cfg: ModelConfig, tokens, frames):
+    """Teacher-forced: encode frames, decode tokens -> (logits, aux)."""
+    from ..parallel.sharding import constrain_batch
+
+    enc = encode(params, cfg, frames)
+    x = constrain_batch(params["embed"][tokens] + _decoder_pos_embed(params, tokens, 0))
+
+    def body(x, p):
+        x = x + attention_train(
+            p["self_attn"], _ln(x, p["ln1"], cfg.norm_eps), cfg, rope=False
+        )
+        kv = encode_cross_kv(p["cross_attn"], enc, cfg)
+        x = x + cross_attention(p["cross_attn"], _ln(x, p["ln2"], cfg.norm_eps), kv, cfg)
+        x = x + mlp_forward(p["mlp"], _ln(x, p["ln3"], cfg.norm_eps), cfg)
+        return x, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = maybe_scan(body_fn, x, params["dec"], cfg, cfg.n_dec_layers)
+    x = _ln(x, params["dec_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]).astype(jnp.float32)
+    aux = {k: jnp.zeros(()) for k in AUX_KEYS}
+    return logits, aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    logits, aux = forward(params, cfg, batch["tokens"], batch["frames"])
+    targets = batch["tokens"][:, 1:]
+    logits = logits[:, :-1]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    loss = (logz - gold).mean()
+    return loss, dict(aux, nll=loss)
+
+
+# ---------------------------------------------------------------- serving ---
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    L = cfg.n_dec_layers
+    self_c = init_kv_cache(cfg, batch, max_len, dtype)
+    cross_shape = (batch, cfg.n_kv_heads, cfg.n_frames, cfg.d_head)
+    return {
+        "len": jnp.zeros((), jnp.int32),
+        "self": jax.tree.map(lambda a: jnp.broadcast_to(a[None], (L, *a.shape)).copy(), self_c),
+        "cross_k": jnp.zeros((L, *cross_shape), dtype),
+        "cross_v": jnp.zeros((L, *cross_shape), dtype),
+    }
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache, frames):
+    """Encode audio, precompute per-layer cross K/V, prefill decoder self-KV."""
+    enc = encode(params, cfg, frames)
+    x = params["embed"][tokens] + _decoder_pos_embed(params, tokens, 0)
+
+    def body(x, pc):
+        p, self_cache = pc
+        h, new_self = attention_prefill(
+            p["self_attn"], _ln(x, p["ln1"], cfg.norm_eps), cfg, self_cache, start=0, rope=False
+        )
+        x = x + h
+        ck, cv = encode_cross_kv(p["cross_attn"], enc, cfg)
+        x = x + cross_attention(p["cross_attn"], _ln(x, p["ln2"], cfg.norm_eps), (ck, cv), cfg)
+        x = x + mlp_forward(p["mlp"], _ln(x, p["ln3"], cfg.norm_eps), cfg)
+        return x, (new_self, ck, cv)
+
+    x, (new_self, cks, cvs) = maybe_scan(body, x, (params["dec"], cache["self"]), cfg, cfg.n_dec_layers)
+    x = _ln(x, params["dec_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x[:, -1:], params["embed"]).astype(jnp.float32)
+    return logits, {
+        "len": jnp.asarray(tokens.shape[1], jnp.int32),
+        "self": new_self,
+        "cross_k": cks,
+        "cross_v": cvs,
+    }
+
+
+def decode_step(params, cfg: ModelConfig, token, cache):
+    kv_len = cache["len"]
+    x = params["embed"][token] + _decoder_pos_embed(params, token, kv_len)
+
+    def body(x, pc):
+        p, self_cache, ck, cv = pc
+        # whisper uses learned absolute positions, not rope
+        h, new_self = attention_decode(
+            p["self_attn"], _ln(x, p["ln1"], cfg.norm_eps), cfg, self_cache, kv_len, rope=False
+        )
+        x = x + h
+        x = x + cross_attention(p["cross_attn"], _ln(x, p["ln2"], cfg.norm_eps), (ck, cv), cfg)
+        x = x + mlp_forward(p["mlp"], _ln(x, p["ln3"], cfg.norm_eps), cfg)
+        return x, new_self
+
+    x, new_self = maybe_scan(
+        body, x, (params["dec"], cache["self"], cache["cross_k"], cache["cross_v"]),
+        cfg, cfg.n_dec_layers,
+    )
+    x = _ln(x, params["dec_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]).astype(jnp.float32)
+    return logits, dict(cache, self=new_self, len=kv_len + 1)

@@ -1,0 +1,78 @@
+"""Shared primitive layers: norms, rotary embeddings, linear init."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in, d_out, *, scale: float | None = None, dtype=jnp.float32):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def rmsnorm(x, w, *, eps=1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x, w, b, *, eps=1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(d_head: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x, positions, *, theta: float = 10000.0):
+    """x [..., S, D] with positions i32[S] or [B, S]."""
+    D = x.shape[-1]
+    inv = rope_freqs(D, theta)
+    ang = positions.astype(jnp.float32)[..., :, None] * inv[None, :]  # [.., S, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    # broadcast over head dims: x is [B, H, S, D]; ang is [S, D/2] or [B, S, D/2]
+    while cos.ndim < x.ndim:
+        cos, sin = cos[..., None, :, :], sin[..., None, :, :]
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    xr1 = x1 * cos - x2 * sin
+    xr2 = x2 * cos + x1 * sin
+    out = jnp.stack([xr1, xr2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def embed_init(key, vocab, d, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+def causal_conv1d(x, w, b=None):
+    """Depthwise causal 1-D conv.  x [B, L, C], w [K, C] -> [B, L, C]."""
+    K, C = w.shape
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32),
+        w.astype(jnp.float32)[:, None, :],  # [K, 1, C]
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=C,
+    )
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def causal_conv1d_step(x_t, conv_state, w, b=None):
+    """One decode step.  x_t [B, C]; conv_state [B, K-1, C] (oldest first)."""
+    K, C = w.shape
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # [B, K, C]
+    out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    new_state = window[:, 1:]
+    return out.astype(x_t.dtype), new_state

@@ -1,0 +1,42 @@
+"""Feed-forward variants: SwiGLU (llama/deepseek/qwen), GeGLU (gemma),
+GELU (whisper), squared-ReLU (nemotron-4)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None, dtype=jnp.float32):
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    out_scale = ff ** -0.5 / (2 * cfg.n_layers) ** 0.5
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(ks[0], d, ff, dtype=dtype),
+            "w_up": dense_init(ks[1], d, ff, dtype=dtype),
+            "w_down": dense_init(ks[2], ff, d, scale=out_scale, dtype=dtype),
+        }
+    return {
+        "w_up": dense_init(ks[0], d, ff, dtype=dtype),
+        "w_down": dense_init(ks[1], ff, d, scale=out_scale, dtype=dtype),
+    }
+
+
+def mlp_forward(p, x, cfg: ModelConfig):
+    act = cfg.mlp_act
+    if act == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    if act == "geglu":
+        return (jax.nn.gelu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    h = x @ p["w_up"]
+    if act == "gelu":
+        h = jax.nn.gelu(h)
+    elif act == "relu2":  # squared ReLU (Primer / nemotron-4)
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(f"unknown mlp_act {act}")
+    return h @ p["w_down"]

@@ -1,0 +1,59 @@
+"""Model facade: one API over every architecture family.
+
+    m = build_model(cfg)
+    params = m.init(rng)
+    logits, aux = m.forward(params, batch)
+    loss, metrics = m.loss(params, batch)
+    cache = m.init_cache(batch_size, max_len)
+    logits, cache = m.prefill(params, batch, cache)
+    logits, cache = m.decode(params, token, cache)
+
+``batch`` is a dict: tokens [B,S] always; frames [B,T,d] for encdec (audio
+stub); patch_embeds [B,P,d] for vlm (vision stub).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+
+from . import encdec, transformer
+from .config import ModelConfig
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: callable
+    forward: callable
+    loss: callable
+    init_cache: callable
+    prefill: callable
+    decode: callable
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        return Model(
+            cfg=cfg,
+            init=lambda rng: encdec.init_params(rng, cfg),
+            forward=lambda p, b: encdec.forward(p, cfg, b["tokens"], b["frames"]),
+            loss=lambda p, b: encdec.loss_fn(p, cfg, b),
+            init_cache=lambda bs, ml: encdec.init_cache(cfg, bs, ml),
+            prefill=lambda p, b, c: encdec.prefill(p, cfg, b["tokens"], c, b["frames"]),
+            decode=lambda p, tok, c: encdec.decode_step(p, cfg, tok, c),
+        )
+    return Model(
+        cfg=cfg,
+        init=lambda rng: transformer.init_params(rng, cfg),
+        forward=lambda p, b: transformer.forward(p, cfg, b["tokens"], b.get("patch_embeds")),
+        loss=lambda p, b: transformer.loss_fn(p, cfg, b),
+        init_cache=lambda bs, ml: transformer.init_cache(cfg, bs, ml),
+        prefill=lambda p, b, c: transformer.prefill(
+            p, cfg, b["tokens"], c, b.get("patch_embeds")
+        ),
+        decode=lambda p, tok, c: transformer.decode_step(p, cfg, tok, c),
+    )
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

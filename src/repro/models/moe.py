@@ -1,0 +1,123 @@
+"""Mixture-of-Experts FFN with capacity routing.
+
+The router is the paper-unified assignment problem (DESIGN.md §3):
+token->expert scores with per-expert capacity, solved by
+``kernels.assign.moe_route`` (jnp oracle inside pjit — semantics identical to
+the Pallas kernel, which is validated against it).
+
+Routing is *grouped* (GShard-style): tokens are split into
+``cfg.router_groups`` independent groups so capacity admission never
+serializes across data-parallel shards — groups align with the batch
+sharding, experts shard over the ``model`` axis (EP).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.assign.ops import moe_route
+from .config import ModelConfig
+from .layers import dense_init
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    glu = cfg.mlp_act in ("swiglu", "geglu")
+    out_scale = ff ** -0.5 / (2 * cfg.n_layers) ** 0.5
+
+    def expert_mats(k, d_in, d_out, scale):
+        keys = jax.random.split(k, E)
+        return jnp.stack([dense_init(kk, d_in, d_out, scale=scale, dtype=dtype) for kk in keys])
+
+    p = {
+        "router": dense_init(ks[0], d, E, scale=0.02, dtype=jnp.float32),
+        "w_up": expert_mats(ks[1], d, ff, d ** -0.5),
+        "w_down": expert_mats(ks[2], ff, d, out_scale),
+    }
+    if glu:
+        p["w_gate"] = expert_mats(ks[3], d, ff, d ** -0.5)
+    return p
+
+
+def moe_capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    return max(
+        1, int(math.ceil(tokens_per_group * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+    )
+
+
+def moe_forward(p, x, cfg: ModelConfig):
+    """x [B, S, d] -> (y [B, S, d], aux dict with load-balance/z losses)."""
+    B, S, d = x.shape
+    T = B * S
+    G = cfg.router_groups
+    if T % G:
+        G = 1
+    Tg = T // G
+    E, k = cfg.n_experts, cfg.top_k
+    C = moe_capacity(cfg, Tg)
+
+    def _c(t, spec):  # sharding constraints (no-op without an ambient mesh)
+        from ..parallel.sharding import ambient_axis_names
+        from jax.sharding import PartitionSpec as P
+
+        axes = ambient_axis_names()
+        if "model" not in axes:
+            return t
+        DP = tuple(a for a in ("pod", "data") if a in axes) or None
+        resolved = P(*[DP if s == "dp" else (s if s in axes else None) for s in spec])
+        return jax.lax.with_sharding_constraint(t, resolved)
+
+    xf = _c(x.reshape(G, Tg, d), ("dp", None, None))
+    logits = jnp.einsum("gtd,de->gte", xf.astype(jnp.float32), p["router"])
+
+    route_bn = Tg if not cfg.scan_layers else 256  # unrolled measurement
+    idx, combine, slot, keep = jax.vmap(
+        lambda lg: moe_route(lg, k=k, capacity=C, use_kernel=False, block_n=route_bn)
+    )(logits)
+    # idx/combine/slot/keep: [G, Tg, k]
+
+    # ---- dispatch: scatter tokens into per-expert capacity buffers ----------
+    g_ix = jnp.arange(G)[:, None, None]
+    contrib = xf[:, :, None, :] * keep[..., None].astype(x.dtype)  # [G,Tg,k,d]
+    buf = jnp.zeros((G, E, C, d), x.dtype).at[g_ix, idx, slot].add(
+        contrib, mode="drop"
+    )
+    # Shard the capacity buffer over DP (groups) ONLY: the data-dependent
+    # scatter stays local to each shard, and the expert einsum below slices
+    # the replicated E dim for free against 'model'-sharded expert weights
+    # (EP).  Sharding E here instead makes SPMD replicate the whole buffer
+    # (measured 44-74 GB/dev on granite train_4k; EXPERIMENTS.md §Perf).
+    buf = _c(buf, ("dp", None, None, None))
+
+    # ---- expert computation (einsum over the expert dim; EP shards E) -------
+    if "w_gate" in p:
+        gate = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"])
+        up = jnp.einsum("gecd,edf->gecf", buf, p["w_up"])
+        act = jax.nn.silu(gate) if cfg.mlp_act == "swiglu" else jax.nn.gelu(gate)
+        h = act * up
+    else:
+        h = jnp.einsum("gecd,edf->gecf", buf, p["w_up"])
+        h = jnp.square(jax.nn.relu(h)) if cfg.mlp_act == "relu2" else jax.nn.gelu(h)
+    # the all-gather over E of y_buf is this formulation's EP collective
+    # (equivalent bytes to the classic token all-to-all)
+    y_buf = _c(jnp.einsum("gecf,efd->gecd", h, p["w_down"]), ("dp", None, None, None))
+
+    # ---- combine: gather each token's k slots back ---------------------------
+    slot_c = jnp.clip(slot, 0, C - 1)
+    y_tok = y_buf[g_ix, idx, slot_c]  # [G, Tg, k, d]
+    y = (y_tok * (combine * keep)[..., None].astype(x.dtype)).sum(axis=2)
+
+    # ---- aux losses (Switch/GShard load balancing + router z-loss) ----------
+    probs = jax.nn.softmax(logits, axis=-1)                       # [G,Tg,E]
+    me = probs.mean(axis=1)                                       # [G,E]
+    ce = jnp.zeros((G, E)).at[g_ix[..., 0], idx.reshape(G, -1)].add(
+        keep.reshape(G, -1).astype(jnp.float32)
+    ) / jnp.maximum(keep.sum(axis=(1, 2))[:, None], 1.0)
+    lb_loss = (E * (me * ce).sum(-1)).mean()
+    z_loss = jnp.square(jax.nn.logsumexp(logits, axis=-1)).mean()
+    drop_frac = 1.0 - keep.mean()
+    aux = {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss, "moe_drop_frac": drop_frac}
+    return y.reshape(B, S, d), aux

@@ -1,0 +1,87 @@
+"""Griffin / RecurrentGemma recurrent block (RG-LRU, arXiv:2402.19427).
+
+Recurrence: h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t) with
+a_t = exp(-c * softplus(Λ) * r_t), r_t/i_t sigmoid gates.  Training uses
+``jax.lax.associative_scan`` over time; decode is the O(1) update.  The block
+wraps the LRU in the Griffin shape: two input branches (GeLU gate x conv+LRU)
+-> output projection.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import causal_conv1d, causal_conv1d_step, dense_init
+
+_C = 8.0  # Griffin's fixed recurrence sharpness
+
+
+def init_rglru(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    w = cfg.rnn_width
+    ks = jax.random.split(key, 6)
+    # Λ init so that a^c is uniform in [0.9, 0.999] (paper appendix)
+    u = jax.random.uniform(ks[4], (w,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # inv-softplus of -log(u)/c
+    return {
+        "w_x": dense_init(ks[0], d, w, dtype=dtype),          # recurrent branch
+        "w_gate": dense_init(ks[1], d, w, dtype=dtype),       # GeLU branch
+        "conv_w": (jax.random.normal(ks[2], (4, w)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_rg": dense_init(ks[3], w, w, scale=w ** -0.5, dtype=dtype),  # recurrence gate
+        "b_rg": jnp.zeros((w,), jnp.float32),
+        "w_ig": dense_init(ks[5], w, w, scale=w ** -0.5, dtype=dtype),  # input gate
+        "b_ig": jnp.zeros((w,), jnp.float32),
+        "lam": lam,
+        "w_out": dense_init(
+            jax.random.fold_in(key, 7), w, d, scale=w ** -0.5 / (2 * cfg.n_layers) ** 0.5, dtype=dtype
+        ),
+    }
+
+
+def _gates(p, xb):
+    r = jax.nn.sigmoid(xb.astype(jnp.float32) @ p["w_rg"].astype(jnp.float32) + p["b_rg"])
+    i = jax.nn.sigmoid(xb.astype(jnp.float32) @ p["w_ig"].astype(jnp.float32) + p["b_ig"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * (i * xb.astype(jnp.float32))
+
+
+def rglru_forward(p, x, cfg: ModelConfig):
+    """x [B, S, d] -> (y [B, S, d], cache with final hidden + conv tail)."""
+    xb = x @ p["w_x"]
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    K = p["conv_w"].shape[0]
+    pre = jnp.pad(xb, ((0, 0), (K - 1, 0), (0, 0)))
+    conv_tail = pre[:, -(K - 1):, :]
+    xb = causal_conv1d(xb, p["conv_w"], p["conv_b"])
+    a, u = _gates(p, xb)  # [B, S, w] each (f32)
+
+    def combine(c1, c2):
+        a1, u1 = c1
+        a2, u2 = c2
+        return a1 * a2, u1 * a2 + u2
+
+    _, h = jax.lax.associative_scan(combine, (a, u), axis=1)
+    y = (h.astype(x.dtype) * gate) @ p["w_out"]
+    return y, {"conv": conv_tail, "h": h[:, -1]}
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype):
+    return {
+        "conv": jnp.zeros((batch, 3, cfg.rnn_width), dtype),
+        "h": jnp.zeros((batch, cfg.rnn_width), jnp.float32),
+    }
+
+
+def rglru_decode(p, x_t, cfg: ModelConfig, cache):
+    """x_t [B, 1, d]."""
+    xb = (x_t[:, 0] @ p["w_x"])
+    gate = jax.nn.gelu(x_t[:, 0] @ p["w_gate"])
+    xb, conv_state = causal_conv1d_step(xb, cache["conv"], p["conv_w"], p["conv_b"])
+    a, u = _gates(p, xb)
+    h = a * cache["h"] + u
+    y = ((h.astype(x_t.dtype) * gate) @ p["w_out"])[:, None, :]
+    return y, {"conv": conv_state, "h": h}

@@ -1,0 +1,185 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060), TPU-adapted.
+
+Training uses the chunked SSD algorithm: intra-chunk terms are dense matmuls
+(MXU-friendly quadratic-in-chunk blocks), inter-chunk state passing is a
+short ``lax.scan`` over S/chunk steps.  Decode is the O(1) recurrent update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import causal_conv1d, causal_conv1d_step, dense_init, rmsnorm
+
+
+def init_ssm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di = cfg.d_inner
+    ns = cfg.ssm_state
+    ng = cfg.ssm_groups
+    nh = cfg.n_ssm_heads
+    conv_ch = di + 2 * ng * ns
+    ks = jax.random.split(key, 5)
+    dt = jnp.exp(
+        jax.random.uniform(ks[3], (nh,)) * (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001)
+    )
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * ng * ns + nh, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),  # inv-softplus
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_w": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[4], di, d, scale=di ** -0.5 / (2 * cfg.n_layers) ** 0.5, dtype=dtype),
+    }
+
+
+def _split_proj(z_all, cfg: ModelConfig):
+    di, ns, ng, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups, cfg.n_ssm_heads
+    z, xBC, dt = jnp.split(z_all, [di, 2 * di + 2 * ng * ns], axis=-1)
+    return z, xBC, dt  # dt [..., nh]
+
+
+def _segsum(a):
+    """a [..., l] -> [..., l, l]: sum of a over (j, i] for i >= j else -inf."""
+    l = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(l)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_scan(x, dt, A_log, B, C, *, chunk: int, unroll: bool = False):
+    """Chunked SSD.
+
+    x [b, l, h, p]; dt [b, l, h] (post-softplus); B, C [b, l, g, n].
+    Returns y [b, l, h, p] and the final state [b, h, p, n].
+    """
+    b, l, h, p_ = x.shape
+    g = B.shape[2]
+    n = B.shape[3]
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (l + pad) // chunk
+    # head -> group map: heads split evenly over groups
+    rep = h // g
+
+    def group(t):  # [b, l, g, n] -> [b, nc, chunk, h, n]
+        t = t.reshape(b, nc, chunk, g, n)
+        return jnp.repeat(t, rep, axis=3)
+
+    xc = x.reshape(b, nc, chunk, h, p_)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc, Cc = group(B), group(C)
+
+    xbar = xc * dtc[..., None]                       # dt-scaled input
+    dA = -jnp.exp(A_log)[None, None, None, :] * dtc  # [b,nc,chunk,h] (negative)
+    dA_t = dA.transpose(0, 1, 3, 2)                  # [b,nc,h,chunk]
+    dA_cum = jnp.cumsum(dA_t, axis=-1)
+
+    # 1) intra-chunk (quadratic within chunk — the "attention-like" term)
+    L = jnp.exp(_segsum(dA_t))                       # [b,nc,h,chunk,chunk]
+    scores = jnp.einsum("bcihn,bcjhn->bchij", Cc, Bc)
+    y_diag = jnp.einsum("bchij,bchij,bcjhp->bcihp", scores, L, xbar)
+
+    # 2) per-chunk states
+    decay_tail = jnp.exp(dA_cum[..., -1:] - dA_cum)  # [b,nc,h,chunk]
+    states = jnp.einsum("bcjhn,bchj,bcjhp->bchpn", Bc, decay_tail, xbar)
+
+    # 3) inter-chunk recurrence (sequential over nc chunks)
+    chunk_decay = jnp.exp(dA_cum[..., -1])           # [b,nc,h]
+
+    def step(s_prev, inp):
+        st, dec = inp
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, h, p_, n), jnp.float32)
+    xs = (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+          chunk_decay.transpose(1, 0, 2))
+    if unroll:
+        carry, outs = s0, []
+        for i in range(nc):
+            carry, y = step(carry, (xs[0][i], xs[1][i]))
+            outs.append(y)
+        final, s_prevs = carry, jnp.stack(outs)
+    else:
+        final, s_prevs = jax.lax.scan(step, s0, xs)
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)       # [b,nc,h,p,n]
+
+    # 4) state -> output within each chunk
+    decay_in = jnp.exp(dA_cum)                       # [b,nc,h,chunk]
+    y_off = jnp.einsum("bcihn,bchpn,bchi->bcihp", Cc, s_prevs.astype(x.dtype), decay_in)
+
+    y = (y_diag + y_off).reshape(b, l + pad, h, p_)[:, :l]
+    return y, final
+
+
+def ssm_forward(p, x, cfg: ModelConfig):
+    """Training/prefill forward.  x [B, S, d] -> (y, cache) where cache holds
+    the final SSM state and the conv tail (decode can continue from it)."""
+    B, S, _ = x.shape
+    nh, ph = cfg.n_ssm_heads, cfg.ssm_head_dim
+    ng, ns = cfg.ssm_groups, cfg.ssm_state
+    z_all = x @ p["in_proj"]
+    z, xBC, dt_raw = _split_proj(z_all, cfg)
+    K = cfg.ssm_conv
+    pre = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    conv_tail = pre[:, -(K - 1):, :] if K > 1 else pre[:, :0, :]
+    xBC = causal_conv1d(xBC, p["conv_w"], p["conv_b"])
+    xBC = jax.nn.silu(xBC)
+    xs, Bv, Cv = jnp.split(xBC, [cfg.d_inner, cfg.d_inner + ng * ns], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    y, final = ssd_scan(
+        xs.reshape(B, S, nh, ph),
+        dt,
+        p["A_log"],
+        Bv.reshape(B, S, ng, ns),
+        Cv.reshape(B, S, ng, ns),
+        chunk=cfg.ssm_chunk,
+        unroll=not cfg.scan_layers,
+    )
+    y = y + p["D"][None, None, :, None] * xs.reshape(B, S, nh, ph)
+    y = y.reshape(B, S, cfg.d_inner)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["norm_w"], eps=cfg.norm_eps)
+    return (y @ p["out_proj"]).astype(x.dtype), {"conv": conv_tail, "state": final}
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype):
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+    }
+
+
+def ssm_decode(p, x_t, cfg: ModelConfig, cache):
+    """One-token recurrent update.  x_t [B, 1, d]."""
+    B = x_t.shape[0]
+    nh, ph, ng, ns = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+    z_all = (x_t[:, 0] @ p["in_proj"])
+    z, xBC, dt_raw = _split_proj(z_all, cfg)
+    xBC, conv_state = causal_conv1d_step(xBC, cache["conv"], p["conv_w"], p["conv_b"])
+    xBC = jax.nn.silu(xBC)
+    xs, Bv, Cv = jnp.split(xBC, [cfg.d_inner, cfg.d_inner + ng * ns], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B, nh]
+    xh = xs.reshape(B, nh, ph).astype(jnp.float32)
+    rep = nh // ng
+    Bh = jnp.repeat(Bv.reshape(B, ng, ns), rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cv.reshape(B, ng, ns), rep, axis=1).astype(jnp.float32)
+    dA = jnp.exp(-jnp.exp(p["A_log"])[None, :] * dt)                 # [B, nh]
+    state = cache["state"] * dA[..., None, None] + jnp.einsum(
+        "bhp,bhn,bh->bhpn", xh, Bh, dt
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch) + p["D"][None, :, None] * xh
+    y = y.reshape(B, cfg.d_inner)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm_w"], eps=cfg.norm_eps)
+    out = (y.astype(x_t.dtype) @ p["out_proj"]).astype(x_t.dtype)[:, None, :]
+    return out, {"conv": conv_state, "state": state}

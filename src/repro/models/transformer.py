@@ -1,0 +1,347 @@
+"""Decoder-only LM stack covering dense / MoE / SSM / hybrid / VLM families.
+
+Layers are organized into *segments*: a segment is a block pattern (e.g.
+``("rec", "rec", "att")``) stacked ``n_repeats`` times, executed with
+``lax.scan`` over the stacked params — HLO size stays depth-independent
+(126-layer llama3 compiles as one stacked block), which the 512-device CPU
+dry-run depends on.  ``jax.checkpoint`` wraps each scanned group (remat).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    attention_decode,
+    attention_prefill,
+    attention_train,
+    init_attention,
+    init_kv_cache,
+)
+from .config import ModelConfig
+from .layers import embed_init, rmsnorm
+from .mlp import init_mlp, mlp_forward
+from .moe import init_moe, moe_forward
+from .rglru import init_rglru, init_rglru_cache, rglru_decode, rglru_forward
+from .ssm import init_ssm, init_ssm_cache, ssm_decode, ssm_forward
+
+AUX_KEYS = ("moe_lb_loss", "moe_z_loss", "moe_drop_frac")
+
+
+def maybe_scan(body, carry, xs, cfg: "ModelConfig", length: int):
+    """lax.scan over stacked layer params, or a Python unroll when
+    cfg.scan_layers=False (exact per-op cost_analysis for the roofline pass)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    ys = []
+    for i in range(length):
+        sl = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, sl)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+class Segment(NamedTuple):
+    pattern: tuple  # block kinds, e.g. ("att",) or ("rec","rec","att")
+    repeats: int
+
+
+def plan_segments(cfg: ModelConfig) -> list[Segment]:
+    if cfg.family in ("dense", "vlm"):
+        return [Segment(("att",), cfg.n_layers)]
+    if cfg.family == "moe":
+        return [Segment(("moe",), cfg.n_layers)]
+    if cfg.family == "ssm":
+        return [Segment(("ssm",), cfg.n_layers)]
+    if cfg.family == "hybrid":
+        pat = tuple(cfg.block_pattern)
+        reps, rem = divmod(cfg.n_layers, len(pat))
+        segs = [Segment(pat, reps)]
+        if rem:
+            segs.append(Segment(pat[:rem], 1))
+        return segs
+    raise ValueError(cfg.family)
+
+
+# ----------------------------------------------------------------- blocks ---
+
+
+def init_block(key, cfg: ModelConfig, kind: str, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    p = {"ln1": jnp.zeros((d,), dtype)}
+    if kind == "att":
+        p["attn"] = init_attention(ks[0], cfg, dtype)
+        p["ln2"] = jnp.zeros((d,), dtype)
+        p["mlp"] = init_mlp(ks[1], cfg, dtype=dtype)
+    elif kind == "moe":
+        p["attn"] = init_attention(ks[0], cfg, dtype)
+        p["ln2"] = jnp.zeros((d,), dtype)
+        p["moe"] = init_moe(ks[1], cfg, dtype)
+    elif kind == "ssm":
+        p["ssm"] = init_ssm(ks[0], cfg, dtype)
+    elif kind == "rec":
+        p["rec"] = init_rglru(ks[0], cfg, dtype)
+        p["ln2"] = jnp.zeros((d,), dtype)
+        p["mlp"] = init_mlp(ks[1], cfg, dtype=dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def block_train(p, x, cfg: ModelConfig, kind: str):
+    aux = {k: jnp.zeros(()) for k in AUX_KEYS}
+    if kind == "att":
+        x = x + attention_train(p["attn"], rmsnorm(x, p["ln1"], eps=cfg.norm_eps), cfg)
+        x = x + mlp_forward(p["mlp"], rmsnorm(x, p["ln2"], eps=cfg.norm_eps), cfg)
+    elif kind == "moe":
+        x = x + attention_train(p["attn"], rmsnorm(x, p["ln1"], eps=cfg.norm_eps), cfg)
+        y, aux = moe_forward(p["moe"], rmsnorm(x, p["ln2"], eps=cfg.norm_eps), cfg)
+        x = x + y.astype(x.dtype)
+    elif kind == "ssm":
+        y, _cache = ssm_forward(p["ssm"], rmsnorm(x, p["ln1"], eps=cfg.norm_eps), cfg)
+        x = x + y.astype(x.dtype)
+    elif kind == "rec":
+        y, _cache = rglru_forward(p["rec"], rmsnorm(x, p["ln1"], eps=cfg.norm_eps), cfg)
+        x = x + y.astype(x.dtype)
+        x = x + mlp_forward(p["mlp"], rmsnorm(x, p["ln2"], eps=cfg.norm_eps), cfg)
+    return x, aux
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype):
+    if kind in ("att", "moe"):
+        return init_kv_cache(cfg, batch, max_len, dtype)
+    if kind == "ssm":
+        return init_ssm_cache(cfg, batch, dtype)
+    if kind == "rec":
+        c = init_rglru_cache(cfg, batch, dtype)
+        # local-attention hybrids never need more than the window in cache
+        return c
+    raise ValueError(kind)
+
+
+def block_prefill(p, x, cfg: ModelConfig, kind: str, cache, start):
+    if kind in ("att", "moe"):
+        h, cache = attention_prefill(
+            p["attn"], rmsnorm(x, p["ln1"], eps=cfg.norm_eps), cfg, cache, start=start
+        )
+        x = x + h
+        if kind == "att":
+            x = x + mlp_forward(p["mlp"], rmsnorm(x, p["ln2"], eps=cfg.norm_eps), cfg)
+        else:
+            y, _ = moe_forward(p["moe"], rmsnorm(x, p["ln2"], eps=cfg.norm_eps), cfg)
+            x = x + y.astype(x.dtype)
+    elif kind == "ssm":
+        y, cache = ssm_forward(p["ssm"], rmsnorm(x, p["ln1"], eps=cfg.norm_eps), cfg)
+        x = x + y.astype(x.dtype)
+    elif kind == "rec":
+        y, rec_cache = rglru_forward(p["rec"], rmsnorm(x, p["ln1"], eps=cfg.norm_eps), cfg)
+        x = x + y.astype(x.dtype)
+        cache = rec_cache
+        x = x + mlp_forward(p["mlp"], rmsnorm(x, p["ln2"], eps=cfg.norm_eps), cfg)
+    return x, cache
+
+
+def block_decode(p, x_t, cfg: ModelConfig, kind: str, cache, kv_len):
+    if kind in ("att", "moe"):
+        h, cache = attention_decode(
+            p["attn"], rmsnorm(x_t, p["ln1"], eps=cfg.norm_eps), cfg, cache, kv_len
+        )
+        x_t = x_t + h
+        if kind == "att":
+            x_t = x_t + mlp_forward(p["mlp"], rmsnorm(x_t, p["ln2"], eps=cfg.norm_eps), cfg)
+        else:
+            y, _ = moe_forward(p["moe"], rmsnorm(x_t, p["ln2"], eps=cfg.norm_eps), cfg)
+            x_t = x_t + y.astype(x_t.dtype)
+    elif kind == "ssm":
+        y, cache = ssm_decode(p["ssm"], rmsnorm(x_t, p["ln1"], eps=cfg.norm_eps), cfg, cache)
+        x_t = x_t + y.astype(x_t.dtype)
+    elif kind == "rec":
+        y, cache = rglru_decode(p["rec"], rmsnorm(x_t, p["ln1"], eps=cfg.norm_eps), cfg, cache)
+        x_t = x_t + y.astype(x_t.dtype)
+        x_t = x_t + mlp_forward(p["mlp"], rmsnorm(x_t, p["ln2"], eps=cfg.norm_eps), cfg)
+    return x_t, cache
+
+
+# ------------------------------------------------------------------ model ---
+
+
+def init_params(rng, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    k_embed, k_blocks, k_head = jax.random.split(rng, 3)
+    params = {"embed": embed_init(k_embed, cfg.vocab_size, cfg.d_model, dtype)}
+    segs = plan_segments(cfg)
+    for si, seg in enumerate(segs):
+        seg_params = {}
+        for ki, kind in enumerate(seg.pattern):
+            keys = jax.random.split(jax.random.fold_in(k_blocks, si * 16 + ki), seg.repeats)
+            seg_params[f"k{ki}"] = jax.vmap(
+                lambda k: init_block(k, cfg, kind, dtype)
+            )(keys)
+        params[f"seg{si}"] = seg_params
+    params["final_norm"] = jnp.zeros((cfg.d_model,), dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(k_head, cfg.vocab_size, cfg.d_model, dtype)
+    return params
+
+
+def _embed(params, cfg: ModelConfig, tokens, patch_embeds=None):
+    x = params["embed"][tokens]
+    # the vocab-sharded table gather leaves x batch-replicated under SPMD
+    # (16x activation blowup measured on deepseek train_4k); re-pin it to DP
+    from ..parallel.sharding import constrain_batch
+
+    x = constrain_batch(x)
+    if cfg.family == "vlm" and patch_embeds is not None:
+        P = patch_embeds.shape[1]
+        x = jax.lax.dynamic_update_slice(
+            x, patch_embeds.astype(x.dtype), (0, 0, 0)
+        ) if P == x.shape[1] else jnp.concatenate(
+            [patch_embeds.astype(x.dtype), x[:, P:]], axis=1
+        )
+    return x
+
+
+def _logits(params, cfg: ModelConfig, x):
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,vd->bsv", x, head).astype(jnp.float32)
+
+
+def forward(params, cfg: ModelConfig, tokens, patch_embeds=None):
+    """Teacher-forced full-sequence forward -> (logits f32[B,S,V], aux)."""
+    x = _embed(params, cfg, tokens, patch_embeds)
+    aux_tot = {k: jnp.zeros(()) for k in AUX_KEYS}
+    for si, seg in enumerate(plan_segments(cfg)):
+        seg_params = params[f"seg{si}"]
+
+        def group(x, layer_params, _seg=seg):
+            from ..parallel.sharding import constrain_batch, gather_fsdp
+
+            if cfg.seq_shard:
+                # SP: boundaries (saved by remat) stay seq-sharded over
+                # 'model'; re-gather the activation HERE so the TP matmuls
+                # see full-seq x — otherwise SPMD replicates the *weights*
+                # (measured 14.3 GB/layer of all-gathers on llama3-405b,
+                # EXPERIMENTS.md §Perf)
+                x = constrain_batch(x)
+            if cfg.explicit_fsdp_gather:
+                # ZeRO-3 gather made explicit, TP sharding preserved — under
+                # remat the gathered weights are temps, re-gathered in bwd
+                layer_params = gather_fsdp(layer_params)
+            aux_g = {k: jnp.zeros(()) for k in AUX_KEYS}
+            for ki, kind in enumerate(_seg.pattern):
+                x, aux = block_train(layer_params[f"k{ki}"], x, cfg, kind)
+                aux_g = {k: aux_g[k] + aux[k] for k in AUX_KEYS}
+            return x, aux_g
+
+        if cfg.remat:
+            group = jax.checkpoint(group)
+
+        def scan_body(x, layer_params):
+            if cfg.seq_shard:
+                from ..parallel.sharding import maybe_shard_seq
+
+                x = maybe_shard_seq(x)
+            return group(x, layer_params)
+
+        x, auxs = maybe_scan(scan_body, x, seg_params, cfg, seg.repeats)
+        aux_tot = {k: aux_tot[k] + auxs[k].sum() for k in AUX_KEYS}
+    x = rmsnorm(x, params["final_norm"], eps=cfg.norm_eps)
+    return _logits(params, cfg, x), aux_tot
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """Next-token cross-entropy + MoE aux losses.  batch: tokens, loss_mask?,
+    patch_embeds? (vlm)."""
+    tokens = batch["tokens"]
+    logits, aux = forward(params, cfg, tokens, batch.get("patch_embeds"))
+    logits = logits[:, :-1]
+    targets = tokens[:, 1:]
+    mask = batch.get("loss_mask")
+    mask = jnp.ones_like(targets, jnp.float32) if mask is None else mask[:, 1:].astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    loss = nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    total = loss + 0.01 * aux["moe_lb_loss"] + 1e-3 * aux["moe_z_loss"]
+    metrics = dict(aux, nll=loss)
+    return total, metrics
+
+
+# ---------------------------------------------------------------- serving ---
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    cache = {"len": jnp.zeros((), jnp.int32)}
+    for si, seg in enumerate(plan_segments(cfg)):
+        seg_cache = {}
+        for ki, kind in enumerate(seg.pattern):
+            one = init_block_cache(cfg, kind, batch, max_len, dtype)
+            seg_cache[f"k{ki}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (seg.repeats, *a.shape)).copy(), one
+            )
+        cache[f"seg{si}"] = seg_cache
+    return cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache, patch_embeds=None):
+    """Consume the prompt, fill caches, return last-position logits."""
+    x = _embed(params, cfg, tokens, patch_embeds)
+    S = tokens.shape[1]
+    for si, seg in enumerate(plan_segments(cfg)):
+        seg_params = params[f"seg{si}"]
+        seg_cache = cache[f"seg{si}"]
+
+        def scan_body(x, pc, _seg=seg):
+            layer_params, layer_cache = pc
+            if cfg.explicit_fsdp_gather:
+                from ..parallel.sharding import gather_fsdp
+
+                layer_params = gather_fsdp(layer_params)
+            new_caches = {}
+            for ki, kind in enumerate(_seg.pattern):
+                x, c = block_prefill(
+                    layer_params[f"k{ki}"], x, cfg, kind, layer_cache[f"k{ki}"], 0
+                )
+                new_caches[f"k{ki}"] = c
+            return x, new_caches
+
+        x, new_seg_cache = maybe_scan(scan_body, x, (seg_params, seg_cache), cfg, seg.repeats)
+        cache = dict(cache, **{f"seg{si}": new_seg_cache})
+    x = rmsnorm(x, params["final_norm"], eps=cfg.norm_eps)
+    logits = _logits(params, cfg, x[:, -1:])
+    cache = dict(cache, len=jnp.asarray(S, jnp.int32))
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache):
+    """token i32[B, 1] -> (logits f32[B, 1, V], updated cache)."""
+    x = params["embed"][token]
+    kv_len = cache["len"]
+    for si, seg in enumerate(plan_segments(cfg)):
+        seg_params = params[f"seg{si}"]
+        seg_cache = cache[f"seg{si}"]
+
+        def scan_body(x, pc, _seg=seg):
+            layer_params, layer_cache = pc
+            new_caches = {}
+            for ki, kind in enumerate(_seg.pattern):
+                x, c = block_decode(
+                    layer_params[f"k{ki}"], x, cfg, kind, layer_cache[f"k{ki}"], kv_len
+                )
+                new_caches[f"k{ki}"] = c
+            return x, new_caches
+
+        x, new_seg_cache = maybe_scan(scan_body, x, (seg_params, seg_cache), cfg, seg.repeats)
+        cache = dict(cache, **{f"seg{si}": new_seg_cache})
+    x = rmsnorm(x, params["final_norm"], eps=cfg.norm_eps)
+    logits = _logits(params, cfg, x)
+    cache = dict(cache, len=kv_len + 1)
+    return logits, cache

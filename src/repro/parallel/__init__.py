@@ -1,0 +1,9 @@
+from .sharding import (  # noqa: F401
+    batch_shardings,
+    cache_shardings,
+    constrain_batch,
+    fsdp_axes,
+    maybe_shard_seq,
+    param_spec,
+    params_shardings,
+)

@@ -1,0 +1,181 @@
+"""Sharding rules: parameter path -> PartitionSpec on the production mesh.
+
+Mapping (DESIGN.md §7):
+  DP    batch over ('pod', 'data')
+  FSDP  parameter d_model-ish dims over ('pod', 'data') (ZeRO-3; XLA inserts
+        the per-layer all-gathers under the scan)
+  TP    head / ff / vocab dims over 'model' (Megatron)
+  EP    expert dim over 'model'
+  SP    residual-stream seq dim over 'model' at scan boundaries (opt-in)
+
+Single-pod meshes simply lack the 'pod' axis; every helper resolves axis
+names against the mesh it is given.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def fsdp_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_axes(mesh) -> tuple:
+    return fsdp_axes(mesh)
+
+
+def _strip_stacked(path_names: list[str], shape: tuple) -> bool:
+    """Params under seg*/k* (or whisper enc/dec) carry a leading layer dim."""
+    return any(n.startswith("seg") for n in path_names) or any(
+        n in ("enc", "dec") for n in path_names
+    )
+
+
+def _validate_spec(spec: P, shape: tuple, mesh) -> P:
+    """Drop axes whose mesh extent does not divide the dim (e.g. mamba's
+    concatenated in_proj dim, whisper's 1500-frame cross cache)."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(entry)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        extent = 1
+        for a in axes:
+            extent *= mesh.shape[a]
+        out.append(entry if shape[i] % extent == 0 else None)
+    return P(*out)
+
+
+def param_spec(path_names: list[str], shape: tuple, mesh) -> P:
+    """PartitionSpec for one parameter leaf."""
+    name = path_names[-1]
+    if name in ("q", "scale") and len(path_names) >= 2:
+        name = path_names[-2]  # 8-bit optimizer states shard like the param
+    F = fsdp_axes(mesh) or None
+    M = "model" if "model" in mesh.axis_names else None
+    stacked = _strip_stacked(path_names, shape)
+    lead = (None,) if stacked else ()
+    core = shape[1:] if stacked else shape
+    nd = len(core)
+
+    def spec(*dims):
+        return P(*lead, *dims)
+
+    if name in ("embed", "lm_head", "pos_dec"):
+        return P(M, F)  # [V, d] never stacked
+    if name == "router":  # [d, E] — small, replicate over model for locality
+        return spec(F, None) if nd == 2 else spec(None)
+    if name in ("w_gate", "w_up") and nd == 3:  # experts [E, d, ff]
+        return spec(M, F, None)
+    if name == "w_down" and nd == 3:            # experts [E, ff, d]
+        return spec(M, None, F)
+    if name in ("wq", "wk", "wv", "w_gate", "w_up", "in_proj", "w_x"):
+        return spec(F, M)                        # [d, out]
+    if name in ("wo", "w_down", "out_proj", "w_out"):
+        return spec(M, F)                        # [in, d]
+    if name in ("w_rg", "w_ig"):                 # rglru [w, w]
+        return spec(F, None)
+    if name == "conv_w":                         # [K, C]
+        return spec(None, F)
+    if name in ("bq", "bk", "bv"):
+        return spec(M)
+    # norms, scalar gains, conv bias, A_log, D, dt_bias, lam, ...
+    return spec(*(None,) * nd)
+
+
+def params_shardings(params, mesh: Mesh):
+    def assign(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        spec = _validate_spec(param_spec(names, leaf.shape, mesh), leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def batch_shardings(batch_like, mesh: Mesh):
+    B = batch_axes(mesh) or None
+
+    def assign(leaf):
+        nd = leaf.ndim if hasattr(leaf, "ndim") else len(leaf.shape)
+        return NamedSharding(mesh, P(B, *(None,) * (nd - 1)))
+
+    return jax.tree.map(assign, batch_like)
+
+
+def cache_shardings(cache, mesh: Mesh, *, shard_len: bool = True, batch="auto"):
+    """KV caches: [L, B, H, S, D] -> (None, DP, None, 'model', None).
+    Recurrent states: [L, B, ...] -> (None, DP, ...).
+
+    ``batch``: DP axes tuple, None (replicate batch, e.g. global_batch=1), or
+    "auto" (all of pod/data)."""
+    B = (batch_axes(mesh) or None) if batch == "auto" else batch
+    M = "model" if ("model" in mesh.axis_names and shard_len) else None
+
+    def assign(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        nd = len(leaf.shape)
+        if names[-1] in ("k", "v", "cross_k", "cross_v") and nd == 5:
+            spec = P(None, B, None, M, None)
+        elif names[-1] == "len" or nd == 0:
+            spec = P()
+        else:
+            # stacked recurrent states [L, B, ...]
+            spec = P(None, B, *(None,) * (nd - 2))
+        return NamedSharding(mesh, _validate_spec(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(assign, cache)
+
+
+def gather_fsdp(layer_params, mesh_axes=None):
+    """Constrain per-layer params to their spec with the FSDP axes dropped:
+    the ZeRO-3 all-gather happens HERE (small, per layer), and the 'model'
+    (TP/EP) sharding is preserved so SPMD never replicates full weights into
+    the matmuls (the 13.3 GB/layer pathology, EXPERIMENTS.md §Perf)."""
+    axes = mesh_axes or ambient_axis_names()
+    if "model" not in axes:
+        return layer_params
+
+    mesh = jax.sharding.get_abstract_mesh()
+
+    def fix(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        spec = param_spec(names, leaf.shape, mesh)
+        dropped = P(*[
+            ("model" if e == "model" or (isinstance(e, tuple) and "model" in e) else None)
+            for e in spec
+        ])
+        dropped = _validate_spec(dropped, leaf.shape, mesh)
+        return jax.lax.with_sharding_constraint(leaf, dropped)
+
+    return jax.tree_util.tree_map_with_path(fix, layer_params)
+
+
+def ambient_axis_names() -> tuple:
+    """Axis names of the mesh active inside the current jit trace ('' if none)."""
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        return tuple(m.axis_names) if m is not None else ()
+    except Exception:
+        return ()
+
+
+def maybe_shard_seq(x):
+    """SP-lite: constrain [B, S, d] to (DP, 'model', None) when a mesh with a
+    'model' axis is ambient (no-op otherwise) — used at scan boundaries."""
+    axes = ambient_axis_names()
+    if "model" not in axes:
+        return x
+    B = tuple(a for a in ("pod", "data") if a in axes) or None
+    return jax.lax.with_sharding_constraint(x, P(B, "model", None))
+
+
+def constrain_batch(x):
+    axes = ambient_axis_names()
+    if not axes:
+        return x
+    B = tuple(a for a in ("pod", "data") if a in axes) or None
+    nd = x.ndim
+    return jax.lax.with_sharding_constraint(x, P(B, *(None,) * (nd - 1)))

@@ -1,0 +1,1 @@
+from .serve_step import generate, make_decode_step, make_prefill_step  # noqa: F401

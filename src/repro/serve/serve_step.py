@@ -1,0 +1,46 @@
+"""Serving steps: prefill a prompt batch, decode one token for the whole
+batch.  These are the programs the decode_*/long_* dry-run cells lower."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch, cache):
+        """batch tokens [B, S_prompt] -> (next-token logits [B,1,V], cache)."""
+        return model.prefill(params, batch, cache)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model, *, sample: bool = False, temperature: float = 1.0):
+    def decode_step(params, token, cache, rng=None):
+        """token i32[B,1] -> (next token i32[B,1], logits, cache)."""
+        logits, cache = model.decode(params, token, cache)
+        if sample and rng is not None:
+            nxt = jax.random.categorical(rng, logits[:, -1] / temperature)[:, None]
+        else:
+            nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        return nxt, logits, cache
+
+    return decode_step
+
+
+def generate(model: Model, params, batch, *, max_new: int, cache_len: int, rng=None):
+    """Greedy/sampled generation loop (host-side; each step is jitted)."""
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    cache = model.init_cache(B, cache_len)
+    prefill = jax.jit(make_prefill_step(model))
+    decode = jax.jit(make_decode_step(model, sample=rng is not None))
+    logits, cache = prefill(params, batch, cache)
+    cur = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    out = [cur]
+    for i in range(max_new - 1):
+        step_rng = jax.random.fold_in(rng, i) if rng is not None else None
+        cur, logits, cache = decode(params, cur, cache, step_rng)
+        out.append(cur)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,3 @@
+from .optimizer import AdamWConfig, adamw_update, init_opt_state, schedule  # noqa: F401
+from .train_step import TrainState, init_train_state, make_eval_step, make_train_step  # noqa: F401
+from .compress import compress_grads, compression_ratio, init_error_state  # noqa: F401

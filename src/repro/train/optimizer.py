@@ -1,0 +1,146 @@
+"""AdamW with warmup+cosine schedule and global-norm clipping, pure JAX.
+
+Optimizer state shards exactly like the parameters (ZeRO): m/v inherit the
+param PartitionSpecs, so FSDP over ('pod','data') applies to the full
+(2 + 4 + 4) bytes/param footprint.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    warmup_steps: int = 200
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0
+    )
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def init_opt_state(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---- 8-bit optimizer states (bitsandbytes-style block-wise quantization) ----
+#
+# AdamW m/v at f32 cost 8 B/param — at kimi-k2 scale (1.04T params) that is
+# 20.4 GB/device on 512 chips: over HBM on its own.  Block-wise int8 states
+# (block along the last dim, f32 scale per block) cut the optimizer footprint
+# 4x; the quantized tensors keep the parameter's shape so every sharding rule
+# applies unchanged.
+
+_QBLOCK = 256
+
+
+def _q8_block(x):
+    *lead, last = x.shape
+    pad = (-last) % _QBLOCK
+    xp = jnp.pad(x, [(0, 0)] * len(lead) + [(0, pad)])
+    xb = xp.reshape(*lead, (last + pad) // _QBLOCK, _QBLOCK)
+    scale = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(*lead, last + pad)[..., :last], scale[..., 0]
+
+
+def _dq8_block(q, scale):
+    *lead, last = q.shape
+    pad = (-last) % _QBLOCK
+    qp = jnp.pad(q, [(0, 0)] * len(lead) + [(0, pad)])
+    qb = qp.reshape(*lead, (last + pad) // _QBLOCK, _QBLOCK).astype(jnp.float32)
+    x = qb * scale[..., None]
+    return x.reshape(*lead, last + pad)[..., :last]
+
+
+def init_opt_state_8bit(params):
+    def zq(p):
+        q, s = _q8_block(jnp.zeros(p.shape, jnp.float32))
+        return {"q": q, "scale": s}
+
+    return {
+        "m": jax.tree.map(zq, params),
+        "v": jax.tree.map(zq, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update_8bit(cfg: AdamWConfig, params, grads, state):
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    scale_g = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(cfg, count)
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, mq, vq):
+        g = g.astype(jnp.float32) * scale_g
+        m = cfg.b1 * _dq8_block(mq["q"], mq["scale"]) + (1 - cfg.b1) * g
+        v = cfg.b2 * _dq8_block(vq["q"], vq["scale"]) + (1 - cfg.b2) * jnp.square(g)
+        step = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0
+        new_p = p.astype(jnp.float32) - lr * (step + decay * p.astype(jnp.float32))
+        nm_q, nm_s = _q8_block(m)
+        nv_q, nv_s = _q8_block(v)
+        return new_p.astype(p.dtype), {"q": nm_q, "scale": nm_s}, {"q": nv_q, "scale": nv_s}
+
+    leaves_p, treedef = jax.tree.flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_m = treedef.flatten_up_to(state["m"])
+    leaves_v = treedef.flatten_up_to(state["v"])
+    outs = [upd(p, g, m, v) for p, g, m, v in zip(leaves_p, leaves_g, leaves_m, leaves_v)]
+    unf = lambda i: jax.tree.unflatten(treedef, [o[i] for o in outs])
+    return unf(0), {"m": unf(1), "v": unf(2), "count": count}, {"grad_norm": gnorm, "lr": lr}
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state):
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(cfg, count)
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0
+        new_p = p.astype(jnp.float32) - lr * (step + decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "count": count}, {"grad_norm": gnorm, "lr": lr}

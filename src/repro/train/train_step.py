@@ -1,0 +1,96 @@
+"""Distributed train step: grad-accumulation scan + AdamW (+ optional int8
+error-feedback gradient compression).
+
+The global batch [GB, S] is split into ``microbatches`` chunks scanned
+sequentially (activation footprint / microbatch, the memory lever for the
+400B-class cells); gradients accumulate in f32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+from ..parallel.sharding import constrain_batch
+from .compress import compress_grads, init_error_state
+from .optimizer import (AdamWConfig, adamw_update, adamw_update_8bit,
+                        init_opt_state, init_opt_state_8bit)
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: dict
+    err: dict | None  # error-feedback state (grad compression) or None
+
+
+def init_train_state(model: Model, rng, *, compress: bool = False,
+                     opt_8bit: bool = False) -> TrainState:
+    params = model.init(rng)
+    return TrainState(
+        params=params,
+        opt=init_opt_state_8bit(params) if opt_8bit else init_opt_state(params),
+        err=init_error_state(params) if compress else None,
+    )
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: AdamWConfig = AdamWConfig(),
+    *,
+    microbatches: int = 1,
+    compress: bool = False,
+    opt_8bit: bool = False,
+):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    batch: tokens [GB, S] (+ frames/patch_embeds with matching leading GB).
+    """
+
+    def loss_of(params, mb):
+        return model.loss(params, mb)
+
+    def train_step(state: TrainState, batch):
+        batch = {k: constrain_batch(v) for k, v in batch.items()}
+        params = state.params
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            micro = {
+                k: v.reshape(microbatches, v.shape[0] // microbatches, *v.shape[1:])
+                for k, v in batch.items()
+            }
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(acc, mb):
+                (l, met), g = jax.value_and_grad(loss_of, has_aux=True)(params, mb)
+                acc = jax.tree.map(lambda a, gg: a + gg.astype(jnp.float32), acc, g)
+                return acc, (l, met)
+
+            grads, (losses, metss) = jax.lax.scan(body, zero, micro)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda m: m.mean(), metss)
+
+        err = state.err
+        if compress and err is not None:
+            grads, err = compress_grads(grads, err)
+
+        update = adamw_update_8bit if opt_8bit else adamw_update
+        new_params, new_opt, opt_metrics = update(opt_cfg, params, grads, state.opt)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return TrainState(new_params, new_opt, err), metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model):
+    @jax.jit
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return dict(metrics, loss=loss)
+
+    return eval_step

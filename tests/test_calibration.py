@@ -1,0 +1,105 @@
+"""Calibration: objective consistency, all four optimizers, paper's claim."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import atlas_like_platform, make_jobs, synthetic_panda_jobs
+from repro.core.calibration import (
+    calibrate,
+    closed_form_objective,
+    closed_form_walltimes,
+    engine_objective,
+    geomean_error,
+    make_synthetic_problem,
+    per_site_rel_mae,
+)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    jobs = synthetic_panda_jobs(1500, seed=0, duration=24 * 3600.0)
+    sites = atlas_like_platform(50, seed=1)
+    return make_synthetic_problem(jobs, sites, seed=2)
+
+
+def test_initial_error_matches_paper_regime(problem):
+    _, _, e0 = closed_form_objective(problem, problem.sites0.speed)
+    # paper's uncalibrated regime is ~76%; our misconfiguration lands in the
+    # same several-tens-of-percent band
+    assert 0.3 < float(e0) < 1.5
+
+
+def test_random_search_hits_paper_band(problem):
+    r = calibrate(problem, "random", seed=3)
+    # paper: 76% -> 17%. Residual noise floor here is the injected 15%
+    # lognormal measurement noise, so ~<=0.17 is the right target.
+    assert float(r.err) < 0.17
+    assert float(r.err) < float(r.err0) / 3
+
+
+def test_all_methods_improve(problem):
+    errs = {}
+    for m in ["grid", "random", "cma_es", "gp_bo"]:
+        r = calibrate(problem, m, seed=4)
+        errs[m] = float(r.err)
+        assert float(r.err) < float(r.err0), m
+    # the paper's headline ordering: random search is the best performer
+    assert errs["random"] <= min(errs.values()) + 1e-6
+
+
+def test_history_monotone(problem):
+    r = calibrate(problem, "random", seed=5)
+    h = np.asarray(r.history)
+    assert (np.diff(h) <= 1e-6).all()
+
+
+def test_closed_form_matches_engine_walltimes():
+    """The fast-path objective and the full engine agree when queueing and
+    bandwidth sharing are off (bytes=0, ample cores)."""
+    n = 40
+    jobs = make_jobs(
+        job_id=np.arange(n),
+        arrival=np.linspace(0, 1000, n),
+        work=np.random.default_rng(0).lognormal(np.log(1000), 0.5, n),
+        cores=np.where(np.arange(n) % 2 == 0, 1, 8),
+        memory=np.full(n, 1.0),
+        bytes_in=np.zeros(n),
+        bytes_out=np.zeros(n),
+    )
+    sites = atlas_like_platform(4, seed=7, cores_range=(4000, 8000))
+    prob = make_synthetic_problem(jobs, sites, seed=8, noise_sigma=0.0)
+    mae_c, has_c, ge_c = closed_form_objective(prob, prob.sites0.speed)
+    mae_e, has_e, ge_e = engine_objective(prob, prob.sites0.speed)
+    np.testing.assert_allclose(np.asarray(ge_c), np.asarray(ge_e), rtol=1e-3)
+    np.testing.assert_allclose(
+        np.asarray(mae_c)[np.asarray(has_c)], np.asarray(mae_e)[np.asarray(has_e)], rtol=1e-3
+    )
+
+
+def test_per_site_rel_mae_shapes():
+    n = 10
+    jobs = make_jobs(
+        job_id=np.arange(n), arrival=np.zeros(n), work=np.ones(n),
+        cores=np.ones(n), memory=np.ones(n), bytes_in=np.zeros(n), bytes_out=np.zeros(n),
+    )
+    site = jnp.zeros(n, jnp.int32)
+    wall = jnp.ones(n)
+    mae, has = per_site_rel_mae(jobs, site, wall, wall * 1.5, 3)
+    assert mae.shape == (3, 2) and has.shape == (3, 2)
+    assert float(mae[0, 0]) == pytest.approx(0.5)
+    assert not bool(has[1, 0])  # empty site excluded
+
+
+def test_geomean_ignores_empty_cells():
+    mae = jnp.array([[0.1, 0.0], [0.4, 0.0]])
+    has = jnp.array([[True, False], [True, False]])
+    assert float(geomean_error(mae, has)) == pytest.approx(0.2, rel=1e-3)
+
+
+def test_perfect_speeds_give_noise_floor():
+    jobs = synthetic_panda_jobs(400, seed=9, duration=3600.0)
+    sites = atlas_like_platform(10, seed=10)
+    prob = make_synthetic_problem(jobs, sites, seed=11, noise_sigma=0.0, misconfig_sigma=0.0)
+    _, _, e = closed_form_objective(prob, sites.speed)
+    assert float(e) < 1e-5

@@ -1,0 +1,157 @@
+"""Engine behaviour: event-round semantics, FIFO-with-capacity, failures."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DONE,
+    FAILED,
+    atlas_like_platform,
+    compute_metrics,
+    get_policy,
+    make_jobs,
+    make_sites,
+    simulate,
+    synthetic_panda_jobs,
+)
+
+
+def mini_jobs(n=16, cores=1, arrival=None, work=None, **kw):
+    return make_jobs(
+        job_id=np.arange(n),
+        arrival=arrival if arrival is not None else np.zeros(n),
+        work=work if work is not None else np.full(n, 100.0),
+        cores=np.full(n, cores),
+        memory=np.full(n, 1.0),
+        bytes_in=np.zeros(n),
+        bytes_out=np.zeros(n),
+        **kw,
+    )
+
+
+def one_site(cores=4, speed=10.0):
+    return make_sites(cores=[cores], speed=[speed], memory=[1e9], bw_in=[1e12], bw_out=[1e12])
+
+
+def test_all_jobs_finish():
+    jobs = synthetic_panda_jobs(200, seed=0, duration=600.0)
+    sites = atlas_like_platform(5, seed=1)
+    res = simulate(jobs, sites, get_policy("panda_dispatch"), jax.random.PRNGKey(0))
+    state = np.asarray(res.jobs.state)[np.asarray(res.jobs.valid)]
+    assert (state == DONE).all()
+    assert float(res.makespan) > 0
+    assert np.isfinite(np.asarray(res.jobs.t_finish)[np.asarray(res.jobs.valid)]).all()
+
+
+def test_serial_execution_on_one_core():
+    # 4 jobs, 1 core, work 100 @ speed 10 => 10s each, strictly serialized
+    jobs = mini_jobs(4)
+    sites = one_site(cores=1)
+    res = simulate(jobs, sites, get_policy("fastest_site"), jax.random.PRNGKey(0))
+    starts = np.sort(np.asarray(res.jobs.t_start)[:4])
+    np.testing.assert_allclose(starts, [0.0, 10.0, 20.0, 30.0], atol=1e-4)
+    assert float(res.makespan) == pytest.approx(40.0, abs=1e-3)
+
+
+def test_parallel_execution_within_capacity():
+    jobs = mini_jobs(4)
+    sites = one_site(cores=4)
+    res = simulate(jobs, sites, get_policy("fastest_site"), jax.random.PRNGKey(0))
+    assert float(res.makespan) == pytest.approx(10.0, abs=1e-3)
+    np.testing.assert_allclose(np.asarray(res.jobs.t_start)[:4], 0.0, atol=1e-5)
+
+
+def test_fifo_blocking_head_of_line():
+    # head job needs 4 cores (all), next needs 1: strict FIFO means the small
+    # one must NOT overtake the big one once the big one is at queue head.
+    jobs = make_jobs(
+        job_id=[0, 1],
+        arrival=[0.0, 0.1],
+        work=[400.0, 10.0],
+        cores=[4, 1],
+        memory=[1.0, 1.0],
+        bytes_in=[0.0, 0.0],
+        bytes_out=[0.0, 0.0],
+    )
+    sites = one_site(cores=4)
+    res = simulate(jobs, sites, get_policy("fastest_site"), jax.random.PRNGKey(0))
+    t = np.asarray(res.jobs.t_start)
+    assert t[0] == pytest.approx(0.0, abs=1e-5)
+    # big job runs 400/(10*speedup(4)) with gamma=0 => 10s; small starts after
+    assert t[1] == pytest.approx(10.0, abs=1e-3)
+
+
+def test_priority_order_within_site():
+    jobs = mini_jobs(3, arrival=np.zeros(3))
+    jobs = jobs._replace(priority=jnp.array([0.0, 5.0, 1.0]))
+    sites = one_site(cores=1)
+    res = simulate(jobs, sites, get_policy("fastest_site"), jax.random.PRNGKey(0))
+    t = np.asarray(res.jobs.t_start)[:3]
+    assert t[1] < t[2] < t[0]
+
+
+def test_multicore_amdahl_slowdown():
+    jobs = mini_jobs(1, cores=8, work=np.full(1, 800.0))
+    fast = make_sites(cores=[8], speed=[10.0], memory=[64.0], bw_in=[1e12], bw_out=[1e12])
+    contended = fast._replace(par_gamma=jnp.array([0.1]))
+    r1 = simulate(jobs, fast, get_policy("fastest_site"), jax.random.PRNGKey(0))
+    r2 = simulate(jobs, contended, get_policy("fastest_site"), jax.random.PRNGKey(0))
+    w1 = float(r1.jobs.t_finish[0] - r1.jobs.t_start[0])
+    w2 = float(r2.jobs.t_finish[0] - r2.jobs.t_start[0])
+    assert w1 == pytest.approx(10.0, abs=1e-3)          # 800/(10*8)
+    assert w2 == pytest.approx(17.0, abs=1e-2)          # speedup 8/1.7
+
+
+def test_failures_resubmit_and_exhaust():
+    jobs = mini_jobs(32)
+    sites = one_site(cores=32)._replace(fail_rate=jnp.array([1.0]))  # always fail
+    res = simulate(jobs, sites, get_policy("fastest_site"), jax.random.PRNGKey(0), max_retries=2)
+    state = np.asarray(res.jobs.state)[:32]
+    assert (state == FAILED).all()
+    assert (np.asarray(res.jobs.retries)[:32] == 2).all()
+    assert int(res.sites.n_failed[0]) == 32 * 3  # every attempt failed
+
+
+def test_zero_failure_rate_never_fails():
+    jobs = synthetic_panda_jobs(100, seed=3, duration=100.0)
+    sites = atlas_like_platform(4, seed=4, fail_rate=0.0)
+    res = simulate(jobs, sites, get_policy("least_loaded"), jax.random.PRNGKey(0))
+    assert int(compute_metrics(res).n_failed) == 0
+
+
+def test_infeasible_job_halts_cleanly():
+    # job needs 64 cores but max site has 4: engine must halt, not spin
+    jobs = mini_jobs(1, cores=64)
+    sites = one_site(cores=4)
+    res = simulate(jobs, sites, get_policy("fastest_site"), jax.random.PRNGKey(0))
+    assert int(res.jobs.state[0]) not in (DONE, FAILED)
+    assert int(res.rounds) < 10
+
+
+def test_horizon_cuts_simulation():
+    jobs = mini_jobs(16, arrival=np.linspace(0, 1000.0, 16))
+    sites = one_site(cores=1)
+    res = simulate(jobs, sites, get_policy("fastest_site"), jax.random.PRNGKey(0), horizon=50.0)
+    # engine may process one event past the horizon before the cond fires
+    assert float(res.makespan) <= 70.0
+    state = np.asarray(res.jobs.state)[:16]
+    assert (state == DONE).sum() < 16  # plenty of jobs were cut off
+
+
+def test_rounds_bounded_by_two_per_job():
+    jobs = synthetic_panda_jobs(300, seed=5, duration=3600.0)
+    sites = atlas_like_platform(8, seed=6)
+    res = simulate(jobs, sites, get_policy("panda_dispatch"), jax.random.PRNGKey(0))
+    assert int(res.rounds) <= 2 * 300 + 2
+
+
+def test_stage_in_adds_time():
+    big_in = make_jobs(
+        job_id=[0], arrival=[0.0], work=[100.0], cores=[1], memory=[1.0],
+        bytes_in=[1e9], bytes_out=[0.0],
+    )
+    sites = make_sites(cores=[4], speed=[10.0], memory=[64.0], bw_in=[1e8], bw_out=[1e8])
+    res = simulate(big_in, sites, get_policy("fastest_site"), jax.random.PRNGKey(0))
+    wall = float(res.jobs.t_finish[0] - res.jobs.t_start[0])
+    assert wall == pytest.approx(10.0 + 10.0, abs=1e-2)  # compute + stage-in

@@ -1,0 +1,68 @@
+"""Event dataset (Table 1) + monitor rendering."""
+import jax
+import numpy as np
+
+from repro.core import atlas_like_platform, get_policy, simulate, synthetic_panda_jobs
+from repro.core.events import log_frames, ml_dataset, to_csv, to_json, transition_rows
+from repro.core.monitor import frames_json, render_frame, sparkline, utilization_timeline
+
+
+def small_run(log_rows=0):
+    jobs = synthetic_panda_jobs(120, seed=0, duration=1200.0)
+    sites = atlas_like_platform(5, seed=1)
+    return simulate(
+        jobs, sites, get_policy("panda_dispatch"), jax.random.PRNGKey(0), log_rows=log_rows
+    )
+
+
+def test_transition_rows_table1_schema():
+    rows = transition_rows(small_run())
+    assert rows, "no events captured"
+    expect = {"event_id", "time", "job_id", "state", "site",
+              "avail_cores", "pending_jobs", "assigned_jobs", "finished_jobs"}
+    assert expect == set(rows[0])
+    # three transitions per finished job
+    assert len(rows) == 3 * 120
+
+
+def test_event_stream_is_time_ordered_and_capacity_safe():
+    rows = transition_rows(small_run())
+    times = [r["time"] for r in rows]
+    assert times == sorted(times)
+    assert min(r["avail_cores"] for r in rows) >= 0
+    assert min(r["pending_jobs"] for r in rows) >= 0
+    finished = [r for r in rows if r["state"] in ("finished", "failed")]
+    assert len(finished) == 120
+
+
+def test_csv_json_roundtrip():
+    rows = transition_rows(small_run())
+    csv_text = to_csv(rows)
+    assert csv_text.splitlines()[0].startswith("event_id,")
+    assert len(csv_text.splitlines()) == len(rows) + 1
+    import json
+
+    assert json.loads(to_json(rows))[0]["event_id"] == rows[0]["event_id"]
+
+
+def test_ml_dataset_shapes_and_finiteness():
+    ds = ml_dataset(small_run())
+    n = ds["walltime"].shape[0]
+    assert n == 120
+    assert ds["features"].shape == (n, len(ds["feature_names"]))
+    assert np.isfinite(ds["features"]).all()
+    assert (ds["walltime"] > 0).all()
+    assert (ds["queue_time"] >= 0).all()
+
+
+def test_log_frames_and_monitor():
+    res = small_run(log_rows=128)
+    frames = log_frames(res)
+    assert frames
+    txt = render_frame(frames[-1], np.asarray(res.sites.cores))
+    assert "t=" in txt and "cores" in txt
+    tl = utilization_timeline(res)
+    assert tl.shape[1] == res.sites.capacity
+    assert (tl >= 0).all() and (tl <= 1.0 + 1e-6).all()
+    assert isinstance(frames_json(res), str)
+    assert sparkline(tl.mean(axis=1))

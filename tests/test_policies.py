@@ -1,0 +1,97 @@
+"""Policy plugin system: registry, built-ins, custom plugins, hooks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    DONE,
+    AllocationPlugin,
+    atlas_like_platform,
+    get_policy,
+    make_policy,
+    register,
+    simulate,
+    synthetic_panda_jobs,
+)
+from repro.core.policies import REGISTRY
+
+
+def run(policy, n_jobs=120, n_sites=6, seed=0):
+    jobs = synthetic_panda_jobs(n_jobs, seed=seed, duration=1200.0)
+    sites = atlas_like_platform(n_sites, seed=seed + 1)
+    return simulate(jobs, sites, policy, jax.random.PRNGKey(seed))
+
+
+def test_all_builtin_policies_complete():
+    for name in sorted(REGISTRY):
+        res = run(get_policy(name))
+        state = np.asarray(res.jobs.state)[np.asarray(res.jobs.valid)]
+        assert (state == DONE).all(), name
+
+
+def test_round_robin_spreads_load():
+    res = run(get_policy("round_robin"), n_jobs=240)
+    sites = np.asarray(res.jobs.site)[np.asarray(res.jobs.valid)]
+    counts = np.bincount(sites, minlength=6)
+    assert counts.min() > 0
+    assert counts.max() - counts.min() <= counts.mean()  # roughly even
+
+
+def test_data_locality_prefers_fat_links():
+    res = run(get_policy("data_locality"), n_jobs=200)
+    bw = np.asarray(res.sites.bw_in)
+    sites = np.asarray(res.jobs.site)[np.asarray(res.jobs.valid)]
+    # most jobs should land on the widest active links
+    top = np.argsort(-bw)[:2]
+    assert np.isin(sites, top).mean() > 0.5
+
+
+def test_shortest_wait_beats_random_on_makespan():
+    r_rand = run(get_policy("random"), n_jobs=400)
+    r_sw = run(get_policy("shortest_wait"), n_jobs=400)
+    assert float(r_sw.makespan) <= float(r_rand.makespan) * 1.05
+
+
+def test_custom_plugin_class():
+    class OnlySiteZero(AllocationPlugin):
+        name = "only_site_zero"
+
+        def assign_job(self, jobs, sites, state, clock, rng):
+            S = sites.capacity
+            return jnp.where(jnp.arange(S)[None, :] == 0, 1.0, -1.0).repeat(
+                jobs.capacity, axis=0
+            )
+
+    res = run(OnlySiteZero().build(), n_jobs=50)
+    sites = np.asarray(res.jobs.site)[np.asarray(res.jobs.valid)]
+    assert (sites == 0).all()
+
+
+def test_registry_registration():
+    @register("always_fastest_test")
+    def _factory():
+        def score(jobs, sites, state, clock, rng):
+            return jnp.broadcast_to(sites.speed[None, :], (jobs.capacity, sites.capacity))
+
+        return make_policy("always_fastest_test", score)
+
+    assert "always_fastest_test" in REGISTRY
+    res = run(get_policy("always_fastest_test"), n_jobs=30)
+    state = np.asarray(res.jobs.state)[np.asarray(res.jobs.valid)]
+    assert (state == DONE).all()
+
+
+def test_on_step_hook_accumulates():
+    # count completions through the hook; must equal number of jobs
+    def score(jobs, sites, state, clock, rng):
+        return jnp.broadcast_to(sites.speed[None, :], (jobs.capacity, sites.capacity))
+
+    def init(jobs, sites):
+        return jnp.int32(0)
+
+    def on_step(state, jobs, sites, completed, started, clock):
+        return state + completed.sum().astype(jnp.int32)
+
+    pol = make_policy("counting", score, init=init, on_step=on_step)
+    res = run(pol, n_jobs=64)
+    assert int(res.policy_state) == 64

@@ -1,0 +1,101 @@
+"""Hypothesis property tests on simulator invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DONE, FAILED, get_policy, make_jobs, make_sites, simulate
+from repro.core.events import transition_rows
+
+POLICIES = ["random", "round_robin", "least_loaded", "shortest_wait", "panda_dispatch"]
+
+
+def build(n_jobs, n_sites, seed, multicore_frac, policy):
+    rng = np.random.default_rng(seed)
+    cores = np.where(rng.random(n_jobs) < multicore_frac, 8, 1)
+    jobs = make_jobs(
+        job_id=np.arange(n_jobs),
+        arrival=np.sort(rng.uniform(0, 100.0, n_jobs)),
+        work=rng.lognormal(np.log(500.0), 1.0, n_jobs),
+        cores=cores,
+        memory=np.where(cores > 1, 16.0, 2.0),
+        bytes_in=rng.lognormal(np.log(1e8), 1.0, n_jobs),
+        bytes_out=rng.lognormal(np.log(1e7), 1.0, n_jobs),
+    )
+    sites = make_sites(
+        cores=rng.integers(8, 64, n_sites),
+        speed=rng.uniform(1.0, 30.0, n_sites),
+        memory=rng.uniform(64.0, 512.0, n_sites),
+        bw_in=rng.uniform(1e8, 1e10, n_sites),
+        bw_out=rng.uniform(1e8, 1e10, n_sites),
+    )
+    return simulate(jobs, sites, get_policy(policy), jax.random.PRNGKey(seed))
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n_jobs=st.integers(5, 80),
+    n_sites=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+    multicore_frac=st.floats(0.0, 1.0),
+    policy=st.sampled_from(POLICIES),
+)
+def test_conservation_and_timestamps(n_jobs, n_sites, seed, multicore_frac, policy):
+    res = build(n_jobs, n_sites, seed, multicore_frac, policy)
+    jobs = res.jobs
+    valid = np.asarray(jobs.valid)
+    state = np.asarray(jobs.state)[valid]
+    # conservation: every valid job terminates (sites are always feasible here)
+    assert np.isin(state, [DONE, FAILED]).all()
+    # timestamp ordering: arrival <= assign <= start <= finish
+    a = np.asarray(jobs.arrival)[valid]
+    g = np.asarray(jobs.t_assign)[valid]
+    s = np.asarray(jobs.t_start)[valid]
+    f = np.asarray(jobs.t_finish)[valid]
+    assert (a <= g + 1e-5).all()
+    assert (g <= s + 1e-5).all()
+    assert (s < f).all()
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n_jobs=st.integers(10, 60),
+    n_sites=st.integers(1, 6),
+    seed=st.integers(0, 2**16),
+    policy=st.sampled_from(POLICIES),
+)
+def test_capacity_never_exceeded(n_jobs, n_sites, seed, policy):
+    res = build(n_jobs, n_sites, seed, 0.5, policy)
+    # replaying the transition stream keeps available cores non-negative
+    rows = transition_rows(res)
+    assert min((r["avail_cores"] for r in rows), default=0) >= 0
+
+
+@settings(max_examples=8, deadline=None)
+@given(n_jobs=st.integers(5, 40), seed=st.integers(0, 2**16))
+def test_single_core_fifo_order(n_jobs, seed):
+    """Equal-priority single-core jobs on one site start in arrival order."""
+    rng = np.random.default_rng(seed)
+    jobs = make_jobs(
+        job_id=np.arange(n_jobs),
+        arrival=np.sort(rng.uniform(0, 10.0, n_jobs)),
+        work=rng.uniform(10.0, 100.0, n_jobs),
+        cores=np.ones(n_jobs),
+        memory=np.ones(n_jobs),
+        bytes_in=np.zeros(n_jobs),
+        bytes_out=np.zeros(n_jobs),
+    )
+    sites = make_sites(cores=[2], speed=[10.0], memory=[1e6], bw_in=[1e12], bw_out=[1e12])
+    res = simulate(jobs, sites, get_policy("fastest_site"), jax.random.PRNGKey(0))
+    starts = np.asarray(res.jobs.t_start)[:n_jobs]
+    # arrival order == start order (ties broken by id which follows arrival)
+    assert (np.diff(starts) >= -1e-5).all()
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**16), frac=st.floats(0.05, 0.95))
+def test_determinism_same_key(seed, frac):
+    r1 = build(30, 3, seed, frac, "panda_dispatch")
+    r2 = build(30, 3, seed, frac, "panda_dispatch")
+    np.testing.assert_array_equal(np.asarray(r1.jobs.t_start), np.asarray(r2.jobs.t_start))
+    assert float(r1.makespan) == float(r2.makespan)

@@ -1,0 +1,71 @@
+"""Roofline HLO-text parsers: synthetic-HLO unit tests (no compilation)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.measure import _collective_bytes_corrected, _fusion_adjusted_bytes
+from repro.launch.roofline import _shape_bytes, collective_bytes
+from repro.train.optimizer import _dq8_block, _q8_block
+
+HLO = """
+HloModule jit_fn
+
+%fused_computation.1 (p0: f32[128,128]) -> f32[128,128] {
+  %p0 = f32[128,128] parameter(0)
+  %big_internal = f32[4096,4096] broadcast(%p0), dimensions={0,1}
+  ROOT %r = f32[128,128] add(%p0, %p0)
+}
+
+ENTRY %main (a: bf16[256,512], w: bf16[512,512]) -> bf16[256,512] {
+  %a = bf16[256,512] parameter(0)
+  %w = bf16[512,512] parameter(1)
+  %ag = bf16[512,512] all-gather(%w), replica_groups={}, dimensions={0}
+  %d = bf16[256,512] dot(%a, %ag), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[256,512] all-reduce(%d), to_apply=%add_comp
+  %f = f32[128,128] fusion(%ar), kind=kLoop, calls=%fused_computation.1
+  %rs = bf16[128,512] reduce-scatter(%d), dimensions={0}
+  %cp = bf16[256,512] collective-permute(%d), source_target_pairs={{0,1}}
+  ROOT %out = bf16[256,512] copy(%d)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[256,512]") == 256 * 512 * 2
+    assert _shape_bytes("f32[10]") == 40
+    assert _shape_bytes("(f32[2,2], bf16[4])") == 16 + 8
+    assert _shape_bytes("token[]") == 0
+
+
+def test_collective_bytes_kinds():
+    out = collective_bytes(HLO)
+    assert out["all-gather"] == 512 * 512 * 2
+    assert out["all-reduce"] == 256 * 512 * 4
+    assert out["reduce-scatter"] == 128 * 512 * 2
+    assert out["collective-permute"] == 256 * 512 * 2
+
+
+def test_collective_bytes_corrected_halves_f32():
+    total, breakdown = _collective_bytes_corrected(HLO, bf16_correct=True)
+    # all-reduce result f32 counted at 2 B/elem, cost factor 2
+    assert breakdown["all-reduce"] == 2 * (256 * 512 * 2)
+    # bf16 untouched
+    assert breakdown["all-gather"] == 512 * 512 * 2
+    total_raw, _ = _collective_bytes_corrected(HLO, bf16_correct=False)
+    assert total_raw > total
+
+
+def test_fusion_adjusted_bytes_skips_fused_internals():
+    b = _fusion_adjusted_bytes(HLO, bf16_correct=False)
+    # the 4096x4096 broadcast inside the fused computation must NOT count
+    assert b < 4096 * 4096 * 4
+    # but the dot + collectives + fusion boundary do
+    assert b > 256 * 512 * 2
+
+
+def test_q8_roundtrip_multiblock():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 1000)).astype(np.float32))
+    q, s = _q8_block(x)
+    assert q.shape == x.shape and q.dtype == jnp.int8
+    assert s.shape == (4, 4)  # ceil(1000/256) blocks
+    rel = np.abs(np.asarray(_dq8_block(q, s)) - np.asarray(x)).max() / np.abs(np.asarray(x)).max()
+    assert rel < 0.02

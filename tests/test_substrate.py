@@ -1,0 +1,191 @@
+"""Substrate tests: optimizer, checkpointing, data pipeline, compression,
+microbatching, fault-tolerant driver."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore, save
+from repro.configs import get_smoke
+from repro.data import DataConfig, TokenPipeline, prefetch
+from repro.ft import FailureInjector, train_with_restarts
+from repro.models import build_model
+from repro.train import (
+    AdamWConfig,
+    TrainState,
+    adamw_update,
+    compress_grads,
+    init_error_state,
+    init_opt_state,
+    init_train_state,
+    make_train_step,
+    schedule,
+)
+
+
+def test_adamw_converges_quadratic():
+    p = {"w": jnp.array([5.0, -3.0])}
+    s = init_opt_state(p)
+    cfg = AdamWConfig(lr=0.3, warmup_steps=1, total_steps=200, weight_decay=0.0)
+    for _ in range(150):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(p)
+        p, s, _ = adamw_update(cfg, p, g, s)
+    assert float(jnp.abs(p["w"]).max()) < 0.05
+
+
+def test_schedule_warmup_and_decay():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    lrs = [float(schedule(cfg, jnp.asarray(s))) for s in [0, 5, 10, 50, 100]]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert lrs[3] < 1.0
+    assert lrs[4] == pytest.approx(0.1, rel=1e-2)
+
+
+def test_grad_clip_applied():
+    p = {"w": jnp.zeros(4)}
+    s = init_opt_state(p)
+    cfg = AdamWConfig(lr=1e-3, clip_norm=1.0, warmup_steps=0)
+    _, _, metrics = adamw_update(cfg, p, {"w": jnp.full(4, 100.0)}, s)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+
+# ------------------------------------------------------------- checkpoint ---
+
+
+def tree_eq(a, b):
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+def test_checkpoint_roundtrip_and_gc():
+    tree = {"a": jnp.arange(8, dtype=jnp.bfloat16), "b": {"c": jnp.ones((3, 2))}}
+    with tempfile.TemporaryDirectory() as d:
+        for step in (1, 2, 3, 4):
+            save(d, step, tree, keep_last=2)
+        assert latest_step(d) == 4
+        assert sorted(os.listdir(d)) == ["step_00000003", "step_00000004"]
+        restored, step = restore(d, tree)
+        assert step == 4
+        assert tree_eq(tree, restored)
+        assert restored["a"].dtype == jnp.bfloat16
+
+
+def test_async_checkpointer_overlap():
+    tree = {"w": jnp.ones((64, 64))}
+    with tempfile.TemporaryDirectory() as d:
+        ck = AsyncCheckpointer(d)
+        ck.save(10, tree)
+        ck.save(20, jax.tree.map(lambda x: x * 2, tree))  # waits for the first
+        ck.wait()
+        restored, step = restore(d, tree)
+        assert step == 20
+        assert float(restored["w"][0, 0]) == 2.0
+
+
+def test_checkpoint_atomicity_no_tmp_left():
+    tree = {"w": jnp.zeros(4)}
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 7, tree)
+        assert not any(f.endswith(".tmp") for f in os.listdir(d))
+
+
+# ------------------------------------------------------------------ data ----
+
+
+def test_pipeline_deterministic_and_host_sharded():
+    base = dict(vocab_size=1000, seq_len=64, global_batch=8, seed=3)
+    p0 = TokenPipeline(DataConfig(**base))
+    p0b = TokenPipeline(DataConfig(**base))
+    np.testing.assert_array_equal(p0.batch_at(5)["tokens"], p0b.batch_at(5)["tokens"])
+    # host shards are disjoint slices of the same global batch distribution
+    h0 = TokenPipeline(DataConfig(**base, n_hosts=2, host_id=0))
+    h1 = TokenPipeline(DataConfig(**base, n_hosts=2, host_id=1))
+    b0, b1 = h0.batch_at(0)["tokens"], h1.batch_at(0)["tokens"]
+    assert b0.shape == (4, 64) and b1.shape == (4, 64)
+    assert not np.array_equal(np.asarray(b0), np.asarray(b1))
+    # tokens in range
+    assert int(b0.max()) < 1000 and int(b0.min()) >= 0
+
+
+def test_prefetch_preserves_order():
+    p = TokenPipeline(DataConfig(vocab_size=100, seq_len=8, global_batch=2))
+    it = prefetch(iter([p.batch_at(i) for i in range(5)]), depth=2)
+    outs = [b["tokens"] for b in it]
+    assert len(outs) == 5
+    np.testing.assert_array_equal(outs[3], p.batch_at(3)["tokens"])
+
+
+# -------------------------------------------------------------- compress ----
+
+
+def test_compression_error_feedback_is_unbiased_over_time():
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.normal(size=(256,)).astype(np.float32))
+    err = init_error_state({"g": g_true})["g"] * 0
+    err = {"g": err}
+    acc = jnp.zeros_like(g_true)
+    for _ in range(50):
+        deq, err = compress_grads({"g": g_true}, err)
+        acc = acc + deq["g"]
+    # error feedback: long-run average converges to the true gradient
+    np.testing.assert_allclose(np.asarray(acc / 50), np.asarray(g_true), atol=2e-3)
+
+
+def test_compressed_training_still_learns():
+    cfg = get_smoke("deepseek-7b")
+    m = build_model(cfg)
+    pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=48, global_batch=4))
+    step = jax.jit(make_train_step(m, AdamWConfig(lr=1e-2, warmup_steps=2, total_steps=20),
+                                   compress=True))
+    state = init_train_state(m, jax.random.PRNGKey(0), compress=True)
+    losses = []
+    for i in range(12):
+        state, metrics = step(state, pipe.batch_at(i))
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0]
+
+
+# ---------------------------------------------------------- microbatching ---
+
+
+def test_grad_accum_matches_single_batch():
+    cfg = get_smoke("qwen2.5-32b").replace(dtype="float32")
+    m = build_model(cfg)
+    pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8))
+    batch = pipe.batch_at(0)
+    opt = AdamWConfig(lr=0.0, warmup_steps=0)  # lr 0: inspect metrics only
+    s1 = init_train_state(m, jax.random.PRNGKey(0))
+    s4 = TrainState(s1.params, s1.opt, s1.err)
+    step1 = jax.jit(make_train_step(m, opt, microbatches=1))
+    step4 = jax.jit(make_train_step(m, opt, microbatches=4))
+    _, m1 = step1(s1, batch)
+    _, m4 = step4(s4, batch)
+    # same data => same mean loss and (approximately) same grad norm
+    assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=1e-5)
+    assert float(m1["grad_norm"]) == pytest.approx(float(m4["grad_norm"]), rel=1e-3)
+
+
+# -------------------------------------------------------------------- ft ----
+
+
+def test_restart_resumes_deterministically():
+    cfg = get_smoke("mamba2-130m")
+    m = build_model(cfg)
+    pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4))
+    opt = AdamWConfig(lr=5e-3, warmup_steps=2, total_steps=10)
+    with tempfile.TemporaryDirectory() as d1:
+        clean = train_with_restarts(m, pipe, total_steps=10, ckpt_dir=d1, ckpt_every=2,
+                                    opt_cfg=opt)
+    with tempfile.TemporaryDirectory() as d2:
+        faulty = train_with_restarts(m, pipe, total_steps=10, ckpt_dir=d2, ckpt_every=2,
+                                     opt_cfg=opt, injector=FailureInjector(at_steps=(5,)))
+    assert faulty.restarts == 1
+    # post-restart losses replay the same trajectory (pure-function pipeline)
+    assert clean.losses[-1] == pytest.approx(faulty.losses[-1], rel=1e-5)
