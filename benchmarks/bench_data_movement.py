@@ -1,0 +1,92 @@
+"""Data-movement subsystem throughput (DESIGN.md §3): engine round rate vs
+number of sites S and catalog size D, plus the replica-cache payoff
+(cache_on_read vs always_remote WAN bytes on a Zipf workload).
+
+The replica path adds O(D·S) catalog algebra and an O(S²) link segment-sum per
+round — this bench measures how those scale.  ``--tiny`` runs a seconds-sized
+smoke configuration for CI.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (
+    atlas_like_network,
+    atlas_like_platform,
+    get_data_policy,
+    get_policy,
+    make_replicas,
+    simulate,
+    synthetic_panda_jobs,
+    zipf_dataset_sizes,
+)
+
+from .common import csv_row
+
+
+def one_case(n_sites: int, n_datasets: int, n_jobs: int, *, policy="cache_on_read", iters=2):
+    jobs = synthetic_panda_jobs(
+        n_jobs, seed=0, duration=6 * 3600.0, n_datasets=n_datasets, zipf_alpha=1.2
+    )
+    sites = atlas_like_platform(n_sites, seed=1)
+    net = atlas_like_network(n_sites, seed=2)
+    rep = make_replicas(
+        zipf_dataset_sizes(n_datasets, seed=3),
+        disk_capacity=np.asarray(sites.memory) * 1e9,  # ~GB RAM -> bytes of disk
+        seed=4,
+    )
+    dp = get_data_policy(policy)
+    kw = dict(data_policy=dp, network=net, replicas=rep, max_rounds=4 * n_jobs + 16)
+    res = simulate(jobs, sites, get_policy("panda_dispatch"), jax.random.PRNGKey(0), **kw)
+    jax.block_until_ready(res.makespan)
+    ts = []
+    for i in range(iters):
+        t0 = time.perf_counter()
+        res = simulate(jobs, sites, get_policy("panda_dispatch"), jax.random.PRNGKey(i), **kw)
+        jax.block_until_ready(res.makespan)
+        ts.append(time.perf_counter() - t0)
+    wall = float(np.median(ts))
+    rounds = int(res.rounds)
+    return wall, rounds, res
+
+
+def main():
+    tiny = "--tiny" in sys.argv
+    if tiny:
+        site_grid = (4, 8)
+        ds_grid = (16, 64)
+        n_jobs = 200
+    else:
+        site_grid = (10, 25, 50, 100)
+        ds_grid = (64, 256, 1024)
+        n_jobs = 2000
+
+    print("# round throughput vs sites S (D fixed)")
+    D0 = ds_grid[0]
+    for s in site_grid:
+        wall, rounds, _ = one_case(s, D0, n_jobs)
+        print(csv_row(f"data_mvmt_S{s}_D{D0}", wall / max(rounds, 1) * 1e6,
+                      f"rounds={rounds};wall_s={wall:.3f}"))
+
+    print("# round throughput vs catalog size D (S fixed)")
+    S0 = site_grid[0]
+    for d in ds_grid:
+        wall, rounds, _ = one_case(S0, d, n_jobs)
+        print(csv_row(f"data_mvmt_S{S0}_D{d}", wall / max(rounds, 1) * 1e6,
+                      f"rounds={rounds};wall_s={wall:.3f}"))
+
+    print("# cache payoff (Zipf reads)")
+    _, _, remote = one_case(site_grid[0], D0, n_jobs, policy="always_remote", iters=1)
+    _, _, cached = one_case(site_grid[0], D0, n_jobs, policy="cache_on_read", iters=1)
+    rb, cb = float(remote.replicas.bytes_moved), float(cached.replicas.bytes_moved)
+    print(csv_row("data_mvmt_cache_payoff", 0.0,
+                  f"remote_TB={rb / 1e12:.2f};cached_TB={cb / 1e12:.2f};"
+                  f"saved={100 * (1 - cb / max(rb, 1e-9)):.0f}%"))
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,7 @@ import traceback
 from . import (
     bench_assign_kernel,
     bench_calibration,
+    bench_data_movement,
     bench_distributed,
     bench_ensemble,
     bench_events,
@@ -25,6 +26,7 @@ SUITES = {
     "table1_events": bench_events.main,
     "assign_kernel": bench_assign_kernel.main,
     "ensemble_vmap": bench_ensemble.main,
+    "data_movement": bench_data_movement.main,
 }
 
 

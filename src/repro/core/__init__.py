@@ -23,7 +23,32 @@ from .types import (  # noqa: F401
     make_log,
     make_sites,
 )
-from .engine import simulate, simulate_ensemble, service_time, walltimes, queue_times  # noqa: F401
+from .engine import simulate, simulate_ensemble, service_time, compute_time, walltimes, queue_times  # noqa: F401
+from .network import (  # noqa: F401
+    NetworkState,
+    atlas_like_network,
+    matrix_network,
+    network_from_sites,
+    shared_transfer_times,
+    star_network,
+    tiered_network,
+    uniform_network,
+)
+from .replicas import (  # noqa: F401
+    ReplicaState,
+    catalog_invariants,
+    insert_replicas,
+    make_replicas,
+    nearest_source,
+    zipf_dataset_sizes,
+)
+from .datapolicies import (  # noqa: F401
+    DataPlugin,
+    DataPolicy,
+    get_data_policy,
+    make_data_policy,
+    register_data,
+)
 from .platform import (  # noqa: F401
     ExecutionParams,
     atlas_like_platform,

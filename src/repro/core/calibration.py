@@ -189,7 +189,7 @@ def grid_search(problem: CalibProblem, *, n_points: int = 64, log_range: float =
     best = jnp.argmin(errs, axis=0)
     speeds = problem.sites0.speed * grid[best]
     _, _, err = closed_form_objective(problem, speeds)
-    hist = jnp.minimum.accumulate(jnp.min(errs, axis=1))
+    hist = jax.lax.cummin(jnp.min(errs, axis=1))
     return CalibResult(speeds=speeds, err0=err0, err=err, history=hist)
 
 
@@ -236,7 +236,7 @@ def random_search(
     keys = jax.random.split(rng, n_iters)
     (speeds, _), hist = jax.lax.scan(step, (problem.sites0.speed, jnp.float32(sigma0)), keys)
     _, _, err = closed_form_objective(problem, speeds)
-    return CalibResult(speeds=speeds, err0=err0, err=err, history=jnp.minimum.accumulate(hist))
+    return CalibResult(speeds=speeds, err0=err0, err=err, history=jax.lax.cummin(hist))
 
 
 # --------------------------------------------------------------------------
@@ -308,7 +308,7 @@ def cma_es(
     (m, *_), hist = jax.lax.scan(step, init, keys)
     speeds = jnp.exp(m)
     _, _, err = closed_form_objective(problem, speeds)
-    return CalibResult(speeds=speeds, err0=err0, err=err, history=jnp.minimum.accumulate(hist))
+    return CalibResult(speeds=speeds, err0=err0, err=err, history=jax.lax.cummin(hist))
 
 
 # --------------------------------------------------------------------------
@@ -380,7 +380,7 @@ def gp_bo(
     best = jnp.argmin(y)
     speeds = jnp.exp(X[best])
     _, _, err = closed_form_objective(problem, speeds)
-    return CalibResult(speeds=speeds, err0=err0, err=err, history=jnp.minimum.accumulate(hist))
+    return CalibResult(speeds=speeds, err0=err0, err=err, history=jax.lax.cummin(hist))
 
 
 OPTIMIZERS: dict[str, Callable] = {

@@ -1,0 +1,181 @@
+"""Data-movement policies — the second CGSim plugin family (DESIGN.md §3).
+
+The paper promises a "modular plugin mechanism for testing custom workflow
+scheduling *and data movement policies*"; ``policies.Policy`` covers the
+scheduling half, this module covers data.  A ``DataPolicy`` is a pytree of
+pure functions with the same extension-point shape as ``Policy``:
+
+    paper hook               | DataPolicy field
+    -------------------------+-------------------------------------------------
+    getResourceInformation   | init(jobs, sites, network, replicas)
+                             |   -> (replicas, data_state)   (pre-placement)
+    assignJob (data half)    | select_source(jobs, sites, network, replicas,
+                             |   state, dst, clock) -> i32[J] replica site
+                             | should_cache(jobs, sites, network, replicas,
+                             |   state, dst, clock) -> bool[J] cache-on-read
+    onJobEnd                 | on_step(state, jobs, replicas, started, xfer,
+                             |   clock) -> state
+    onSimulationEnd          | on_end(state, jobs, replicas, clock) -> state
+
+All fields are jit-traceable, so ``engine.simulate`` with a DataPolicy keeps
+vmapping under ``simulate_ensemble``.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .replicas import ReplicaState, insert_mask, nearest_source
+
+
+class DataPolicy(NamedTuple):
+    name: str
+    init: Callable
+    select_source: Callable
+    should_cache: Callable
+    on_step: Callable
+    on_end: Callable
+
+
+def _default_init(jobs, sites, network, replicas):
+    return replicas, ()
+
+
+def _default_select(jobs, sites, network, replicas, state, dst, clock):
+    return nearest_source(replicas, network, jobs.dataset, dst)
+
+
+def _never_cache(jobs, sites, network, replicas, state, dst, clock):
+    return jnp.zeros((jobs.capacity,), bool)
+
+
+def _always_cache(jobs, sites, network, replicas, state, dst, clock):
+    return jnp.ones((jobs.capacity,), bool)
+
+
+def _keep_state(state, *_):
+    return state
+
+
+def make_data_policy(
+    name: str,
+    *,
+    init=None,
+    select_source=None,
+    should_cache=None,
+    on_step=None,
+    on_end=None,
+) -> DataPolicy:
+    return DataPolicy(
+        name=name,
+        init=init or _default_init,
+        select_source=select_source or _default_select,
+        should_cache=should_cache or _never_cache,
+        on_step=on_step or _keep_state,
+        on_end=on_end or _keep_state,
+    )
+
+
+# --------------------------------------------------------------------------
+# built-in data policies
+# --------------------------------------------------------------------------
+
+
+def always_remote() -> DataPolicy:
+    """Read from the nearest replica, never cache: every job whose dataset is
+    not already local pays a WAN transfer (the Begy et al. 'remote access'
+    baseline)."""
+    return make_data_policy("always_remote")
+
+
+def cache_on_read() -> DataPolicy:
+    """Nearest-replica reads, and every remote read inserts a replica at the
+    compute site (LRU-evicting under storage pressure) — the Rucio-style
+    volatile cache."""
+    return make_data_policy("cache_on_read", should_cache=_always_cache)
+
+
+def pre_place_hot(hot_frac: float = 0.1, n_copies: int = 3, cache: bool = False) -> DataPolicy:
+    """Replicate the hottest ``hot_frac`` of datasets (by job count in the
+    submitted workload) to the ``n_copies`` largest storage elements before
+    the run — PanDA PD2P-flavoured pre-placement."""
+
+    def init(jobs, sites, network, replicas: ReplicaState):
+        D, S = replicas.present.shape
+        d = jnp.clip(jobs.dataset, 0, D - 1)
+        has = jobs.valid & (jobs.dataset >= 0)
+        counts = jax.ops.segment_sum(has.astype(jnp.int32), jnp.where(has, d, D), num_segments=D + 1)[:D]
+        k = max(int(round(hot_frac * D)), 1)
+        rank = jnp.argsort(-counts)
+        hot = jnp.zeros((D,), bool).at[rank[:k]].set(True)
+        targets = jnp.argsort(-replicas.disk_cap)[:n_copies]
+        target_mask = jnp.zeros((S,), bool).at[targets].set(True)
+        want = hot[:, None] & target_mask[None, :]
+        return insert_mask(replicas, want, 0.0), ()
+
+    return make_data_policy(
+        f"pre_place_hot({hot_frac},{n_copies})",
+        init=init,
+        should_cache=_always_cache if cache else _never_cache,
+    )
+
+
+DATA_REGISTRY: dict[str, Callable[..., DataPolicy]] = {
+    "always_remote": always_remote,
+    "cache_on_read": cache_on_read,
+    "pre_place_hot": pre_place_hot,
+}
+
+
+def get_data_policy(name: str, **params) -> DataPolicy:
+    if name not in DATA_REGISTRY:
+        raise KeyError(f"unknown data policy {name!r}; have {sorted(DATA_REGISTRY)}")
+    return DATA_REGISTRY[name](**params)
+
+
+def register_data(name: str):
+    """Decorator: plug a user data-policy factory into the registry."""
+
+    def deco(fn):
+        DATA_REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+# --------------------------------------------------------------------------
+# Abstract-class adapter mirroring ``policies.AllocationPlugin``.
+# --------------------------------------------------------------------------
+
+
+class DataPlugin:
+    """Subclass and override, then call ``.build()`` to get a DataPolicy."""
+
+    name = "custom_data"
+
+    def get_resource_information(self, jobs, sites, network, replicas):
+        return replicas, ()
+
+    def select_source(self, jobs, sites, network, replicas, state, dst, clock):
+        return nearest_source(replicas, network, jobs.dataset, dst)
+
+    def should_cache(self, jobs, sites, network, replicas, state, dst, clock):
+        return jnp.zeros((jobs.capacity,), bool)
+
+    def on_transfer(self, state, jobs, replicas, started, xfer, clock):
+        return state
+
+    def on_simulation_end(self, state, jobs, replicas, clock):
+        return state
+
+    def build(self) -> DataPolicy:
+        return DataPolicy(
+            name=self.name,
+            init=self.get_resource_information,
+            select_source=self.select_source,
+            should_cache=self.should_cache,
+            on_step=self.on_transfer,
+            on_end=self.on_simulation_end,
+        )

@@ -26,6 +26,13 @@ from .engine import simulate
 from .types import JobsState, SimResult, SiteState
 
 
+def use_mesh(mesh: Mesh):
+    """Mesh-context compat: ``jax.set_mesh`` (new API) or the Mesh object
+    itself, which is a context manager on older jax (<= 0.4.x)."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh
+
+
 def job_shardings(mesh: Mesh, axis: str, jobs: JobsState, sites: SiteState):
     """NamedShardings for (jobs, sites, rng) under job-parallel simulation."""
     jsh = jax.tree.map(lambda _: NamedSharding(mesh, P(axis)), jobs)
@@ -56,6 +63,7 @@ def shard_jobs(jobs: JobsState, sites: SiteState, mesh: Mesh, axis: str = "data"
             bytes_in=raw["bytes_in"],
             bytes_out=raw["bytes_out"],
             priority=raw["priority"],
+            dataset=raw["dataset"],
             capacity=J + pad,
         )._replace(
             state=jnp.pad(jnp.asarray(raw["state"]), (0, pad), constant_values=4),
@@ -78,7 +86,7 @@ def simulate_distributed(
     """Job-parallel simulation: identical semantics to ``engine.simulate``
     (same event rounds, same FIFO), with XLA SPMD distributing each round."""
     jobs_d, sites_d = shard_jobs(jobs, sites, mesh, axis)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         return simulate(jobs_d, sites_d, policy, rng, **kw)
 
 
@@ -101,7 +109,7 @@ def lower_distributed(
     def fn(j, s, r):
         return simulate(j, s, policy, r, **kw)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         lowered = jax.jit(fn).lower(jobs_s, sites_s, rng_s)
         return lowered, lowered.compile()
 
@@ -129,5 +137,5 @@ def simulate_ensemble_distributed(
     def one(speed, key):
         return simulate(jobs, sites._replace(speed=speed), policy, key, **kw)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         return jax.vmap(one)(cand, keys)

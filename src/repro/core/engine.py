@@ -45,24 +45,40 @@ from .types import (
 INF = jnp.float32(jnp.inf)
 
 
+def compute_time(jobs: JobsState, sites: SiteState, site: jax.Array) -> jax.Array:
+    """Amdahl-style compute term: ``work / (speed * c / (1 + gamma (c-1)))``
+    so ``par_gamma`` can be calibrated per site."""
+    c = jobs.cores.astype(jnp.float32)
+    gamma = sites.par_gamma[site]
+    speedup = c / (1.0 + gamma * jnp.maximum(c - 1.0, 0.0))
+    return jobs.work / (sites.speed[site] * jnp.maximum(speedup, 1e-9))
+
+
+def stage_in_time(
+    jobs: JobsState, sites: SiteState, site: jax.Array, share_in: jax.Array
+) -> jax.Array:
+    """Flat-link stage-in: site latency + ``bytes_in`` over the ingress link
+    shared equally among the ``share_in`` jobs staging concurrently."""
+    bw_in = sites.bw_in[site] / jnp.maximum(share_in, 1.0)
+    return sites.latency[site] + jobs.bytes_in / bw_in
+
+
 def service_time(
     jobs: JobsState, sites: SiteState, site: jax.Array, share_in: jax.Array, share_out: jax.Array
 ) -> jax.Array:
     """Deterministic-at-start service time model (DESIGN.md §2 network note).
 
     t = latency + stage_in + compute + stage_out, where stage bandwidth is the
-    site link shared among the ``share`` jobs staging concurrently, and the
-    compute term uses an Amdahl-style multicore speedup
-    ``c / (1 + gamma (c - 1))`` so ``par_gamma`` can be calibrated per site.
+    site link shared among the ``share`` jobs staging concurrently.  This is
+    the flat-link model; jobs with a catalogued dataset replace the latency +
+    stage-in terms with a replica-aware WAN transfer (DESIGN.md §3).
     """
-    lat = sites.latency[site]
-    bw_in = sites.bw_in[site] / jnp.maximum(share_in, 1.0)
     bw_out = sites.bw_out[site] / jnp.maximum(share_out, 1.0)
-    c = jobs.cores.astype(jnp.float32)
-    gamma = sites.par_gamma[site]
-    speedup = c / (1.0 + gamma * jnp.maximum(c - 1.0, 0.0))
-    compute = jobs.work / (sites.speed[site] * jnp.maximum(speedup, 1e-9))
-    return lat + jobs.bytes_in / bw_in + compute + jobs.bytes_out / bw_out
+    return (
+        stage_in_time(jobs, sites, site, share_in)
+        + compute_time(jobs, sites, site)
+        + jobs.bytes_out / bw_out
+    )
 
 
 def _segment_exclusive_base(values: jax.Array, seg_ids: jax.Array, num_segments: int):
@@ -91,6 +107,7 @@ def default_assign(scores: jax.Array, queued: jax.Array, feasible: jax.Array, si
     jax.jit,
     static_argnames=(
         "policy",
+        "data_policy",
         "max_rounds",
         "log_rows",
         "max_retries",
@@ -104,6 +121,9 @@ def simulate(
     policy,
     rng: jax.Array,
     *,
+    data_policy=None,
+    network=None,
+    replicas=None,
     max_rounds: int = 100_000,
     horizon: float = float("inf"),
     log_rows: int = 0,
@@ -118,11 +138,29 @@ def simulate(
     window but each round retires many events — the lever that turns
     O(events) rounds into O(horizon/quantum) for dense workloads (paper
     Fig. 4 scaling regime).
+
+    Passing a ``data_policy`` (with a ``NetworkState`` and a ``ReplicaState``)
+    switches stage-in for dataset-carrying jobs to the replica-aware WAN
+    model: each starting job reads its dataset from the policy-selected
+    replica over the shared link matrix (zero-cost local cache hits), and the
+    policy may cache-on-read into the site's storage element (DESIGN.md §3).
+    Jobs with ``dataset == -1`` — and every run without a data policy — keep
+    the flat per-site link model, so existing callers are unchanged.
     """
     S = sites0.capacity
     J = jobs0.capacity
     policy_state0 = policy.init(jobs0, sites0)
     log0 = make_log(log_rows, S)
+    data_on = data_policy is not None
+    if data_on:
+        if network is None or replicas is None:
+            raise ValueError("data_policy requires both network= and replicas=")
+        from .network import shared_transfer_times
+        from .replicas import insert_replicas, touch
+
+        replicas0, data_state0 = data_policy.init(jobs0, sites0, network, replicas)
+    else:
+        replicas0, data_state0 = None, ()
 
     def cond(st: EngineState):
         active = (
@@ -240,8 +278,57 @@ def simulate(
         n_start_per_site = jax.ops.segment_sum(
             started.astype(jnp.int32), start_site, num_segments=S + 1
         )[:S]
-        share = n_start_per_site[jnp.minimum(jobs.site, S - 1)].astype(jnp.float32)
-        t_serv = service_time(jobs, sites, jnp.minimum(jobs.site, S - 1), share, share)
+        site_c = jnp.minimum(jobs.site, S - 1)
+        share = n_start_per_site[site_c].astype(jnp.float32)
+
+        # ---- 5b. data movement: replica-aware stage-in (DESIGN.md §3) --------
+        rep, dstate = st.replicas, st.data_state
+        net_in_now = jnp.zeros((S,), jnp.float32)
+        if data_on:
+            has_ds = jobs.dataset >= 0
+            # only flat-link stage-ins contend for the site ingress link;
+            # dataset jobs stage over the WAN matrix instead
+            n_flat_start = jax.ops.segment_sum(
+                (started & ~has_ds).astype(jnp.int32), start_site, num_segments=S + 1
+            )[:S]
+            share_in = n_flat_start[site_c].astype(jnp.float32)
+            t_serv = service_time(jobs, sites, site_c, share_in, share)
+            D = rep.present.shape[0]
+            d_c = jnp.clip(jobs.dataset, 0, D - 1)
+            ds_bytes = rep.size[d_c]
+            local = rep.present[d_c, site_c]
+            read = started & has_ds
+            src = data_policy.select_source(jobs, sites, network, rep, dstate, site_c, clock)
+            src_c = jnp.clip(src, 0, S - 1)
+            xfer = read & ~local
+            t_net, _ = shared_transfer_times(network, src_c, site_c, ds_bytes, xfer)
+            # swap the flat latency+stage-in terms for the WAN transfer
+            in_flat = stage_in_time(jobs, sites, site_c, share_in)
+            t_serv = jnp.where(has_ds, t_serv - in_flat + t_net, t_serv)
+            # catalog bookkeeping: touch LRU clocks, cache-on-read insertion
+            rep = touch(rep, jobs.dataset, src_c, xfer, clock)
+            rep = touch(rep, jobs.dataset, site_c, read & local, clock)
+            want_cache = (
+                data_policy.should_cache(jobs, sites, network, rep, dstate, site_c, clock) & xfer
+            )
+            rep = insert_replicas(rep, jobs.dataset, site_c, want_cache, clock)
+            moved = jnp.where(xfer, ds_bytes, 0.0)
+            rep = rep._replace(
+                n_hits=rep.n_hits + (read & local).sum().astype(jnp.int32),
+                n_transfers=rep.n_transfers + xfer.sum().astype(jnp.int32),
+                bytes_moved=rep.bytes_moved + moved.sum(),
+            )
+            net_in_now = jax.ops.segment_sum(
+                moved, jnp.where(xfer, jobs.site, S), num_segments=S + 1
+            )[:S]
+            jobs = jobs._replace(
+                xfer_src=jnp.where(read, src_c, jobs.xfer_src),
+                xfer_bytes=jnp.where(read, moved, jobs.xfer_bytes),
+                xfer_time=jnp.where(read, t_net, jobs.xfer_time),
+            )
+            dstate = data_policy.on_step(dstate, jobs, rep, started, xfer, clock)
+        else:
+            t_serv = service_time(jobs, sites, site_c, share, share)
 
         u_fail = jax.random.uniform(k_fail, (J,))
         will_fail = started & (u_fail < sites.fail_rate[jnp.minimum(jobs.site, S - 1)])
@@ -261,6 +348,10 @@ def simulate(
         )
 
         pstate = policy.on_step(pstate, jobs, sites, comp, started, clock)
+        disk_now = rep.disk_used if data_on else jnp.zeros((S,), jnp.float32)
+        # accumulate WAN ingress between log writes so monitor_every > 1
+        # still conserves bytes in the exported timeline
+        net_acc = st.net_acc + net_in_now
 
         # ---- 6. halt detection & event log -----------------------------------
         n_started = started.sum()
@@ -296,8 +387,11 @@ def simulate(
                 site_free=wr(log.site_free, sites.free_cores),
                 site_queued=wr(log.site_queued, site_queued),
                 site_running=wr(log.site_running, site_running),
+                site_disk=wr(log.site_disk, disk_now),
+                site_net_in=wr(log.site_net_in, net_acc),
                 cursor=log.cursor + write.astype(jnp.int32),
             )
+            net_acc = jnp.where(write, 0.0, net_acc)
 
         return EngineState(
             clock=clock,
@@ -308,6 +402,9 @@ def simulate(
             policy_state=pstate,
             log=log,
             halted=halted,
+            replicas=rep,
+            data_state=dstate,
+            net_acc=net_acc,
         )
 
     st0 = EngineState(
@@ -319,9 +416,15 @@ def simulate(
         policy_state=policy_state0,
         log=log0,
         halted=jnp.array(False),
+        replicas=replicas0,
+        data_state=data_state0,
+        net_acc=jnp.zeros((S,), jnp.float32),
     )
     st = jax.lax.while_loop(cond, body, st0)
     pstate = policy.on_end(st.policy_state, st.jobs, st.sites, st.clock)
+    dstate = (
+        data_policy.on_end(st.data_state, st.jobs, st.replicas, st.clock) if data_on else ()
+    )
     return SimResult(
         makespan=st.clock,
         rounds=st.round,
@@ -329,6 +432,8 @@ def simulate(
         sites=st.sites,
         log=st.log,
         policy_state=pstate,
+        replicas=st.replicas,
+        data_state=dstate,
     )
 
 

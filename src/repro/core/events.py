@@ -88,6 +88,39 @@ def transition_rows(result: SimResult, site_names=None) -> list[dict]:
     return rows
 
 
+def transfer_rows(result: SimResult, site_names=None) -> list[dict]:
+    """One row per stage-in data movement (DESIGN.md §3): src/dst storage
+    elements, bytes over the WAN (0 for a local cache hit), and duration.
+
+    Only jobs that actually staged through the data subsystem produce rows
+    (``xfer_src >= 0`` — a run without a DataPolicy records none); as with
+    ``transition_rows``, resubmitted jobs keep their final attempt only.
+    """
+    jobs = jax_to_np(result.jobs)
+    name = lambda s: (site_names[s] if site_names else f"site{s}")
+    rows = []
+    order = np.argsort(jobs["t_start"], kind="stable")
+    for j in order:
+        if not jobs["valid"][j] or jobs["dataset"][j] < 0 or jobs["xfer_src"][j] < 0:
+            continue
+        if not np.isfinite(jobs["t_start"][j]) or jobs["site"][j] < 0:
+            continue
+        nbytes = float(jobs["xfer_bytes"][j])
+        rows.append(
+            dict(
+                time=round(float(jobs["t_start"][j]), 3),
+                job_id=int(jobs["job_id"][j]),
+                dataset=int(jobs["dataset"][j]),
+                src=name(int(jobs["xfer_src"][j])),
+                dst=name(int(jobs["site"][j])),
+                bytes=round(nbytes, 1),
+                duration=round(float(jobs["xfer_time"][j]), 3),
+                cache_hit=nbytes == 0.0,
+            )
+        )
+    return rows
+
+
 def to_csv(rows: list[dict]) -> str:
     if not rows:
         return ""
@@ -107,7 +140,9 @@ def ml_dataset(result: SimResult) -> dict[str, np.ndarray]:
     suitable for modern machine learning approaches").
 
     Features (per finished/failed job): work, cores, memory, bytes_in/out,
-    priority, site one-hot stats (speed, cores, bw, queue pressure at assign).
+    priority, site one-hot stats (speed, cores, bw, queue pressure at assign),
+    plus data-movement columns (WAN bytes staged, stage-in duration, dataset
+    presence) so surrogates can learn transfer-dominated walltimes.
     Labels: walltime, queue_time, failed.
     """
     jobs = jax_to_np(result.jobs)
@@ -128,6 +163,9 @@ def ml_dataset(result: SimResult) -> dict[str, np.ndarray]:
             np.log1p(sites["bw_in"][sid]),
             sites["par_gamma"][sid],
             sites["fail_rate"][sid],
+            np.log1p(jobs["xfer_bytes"]),
+            jobs["xfer_time"],
+            (jobs["dataset"] >= 0).astype(np.float64),
         ],
         axis=-1,
     )[done]
@@ -143,7 +181,7 @@ def ml_dataset(result: SimResult) -> dict[str, np.ndarray]:
             [
                 "log_work", "cores", "memory_gb", "log_bytes_in", "log_bytes_out",
                 "priority", "site_speed", "site_cores", "site_log_bw", "site_gamma",
-                "site_fail_rate",
+                "site_fail_rate", "log_xfer_bytes", "xfer_time", "has_dataset",
             ]
         ),
     )
@@ -171,6 +209,8 @@ def log_frames(result: SimResult) -> list[dict]:
                 site_free=log["site_free"][i].tolist(),
                 site_queued=log["site_queued"][i].tolist(),
                 site_running=log["site_running"][i].tolist(),
+                site_disk=log["site_disk"][i].tolist(),
+                site_net_in=log["site_net_in"][i].tolist(),
             )
         )
     return out

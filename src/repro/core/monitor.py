@@ -28,8 +28,11 @@ def pressure_bar(used: int, total: int, width: int = 20) -> str:
     return "█" * full + "·" * (width - full)
 
 
-def render_frame(frame: dict, sites_cores, site_names=None, max_sites: int = 24) -> str:
-    """One dashboard frame: global counts + per-site node pressure."""
+def render_frame(
+    frame: dict, sites_cores, site_names=None, max_sites: int = 24, disk_cap=None
+) -> str:
+    """One dashboard frame: global counts + per-site node pressure, plus
+    storage-element and WAN-ingress pressure when the data subsystem is on."""
     c = frame["counts"]
     lines = [
         f"t={frame['time']:>12.1f}s  round={frame['round']:>7d}  "
@@ -39,16 +42,24 @@ def render_frame(frame: dict, sites_cores, site_names=None, max_sites: int = 24)
     queued = np.asarray(frame["site_queued"])
     running = np.asarray(frame["site_running"])
     total = np.asarray(sites_cores)
+    disk = np.asarray(frame.get("site_disk", np.zeros_like(total, dtype=float)))
+    net_in = np.asarray(frame.get("site_net_in", np.zeros_like(total, dtype=float)))
+    show_data = disk.any() or net_in.any() or disk_cap is not None
     order = np.argsort(-(total - free))[:max_sites]
     for s in order:
         if total[s] <= 0:
             continue
         name = site_names[s] if site_names else f"site{s:03d}"
         used = int(total[s] - free[s])
-        lines.append(
+        line = (
             f"  {name:>12s} |{pressure_bar(used, int(total[s]))}| "
             f"{used:>6d}/{int(total[s]):<6d} cores  run={int(running[s]):>5d} queue={int(queued[s]):>5d}"
         )
+        if show_data:
+            cap = float(np.asarray(disk_cap)[s]) if disk_cap is not None else 0.0
+            bar = pressure_bar(int(disk[s]), int(cap), width=8) if cap > 0 else " " * 8
+            line += f"  disk|{bar}| {disk[s] / 1e12:>6.2f}TB  net_in={net_in[s] / 1e9:>7.2f}GB"
+        lines.append(line)
     return "\n".join(lines)
 
 
@@ -72,6 +83,20 @@ def utilization_timeline(result: SimResult) -> np.ndarray:
     cores = np.maximum(np.asarray(result.sites.cores, dtype=np.float64), 1.0)
     rows = [(cores - np.asarray(f["site_free"], dtype=np.float64)) / cores for f in frames]
     return np.stack(rows) if rows else np.zeros((0, cores.size))
+
+
+def storage_timeline(result: SimResult) -> np.ndarray:
+    """[T, S] storage-element occupancy (bytes) per logged frame."""
+    frames = log_frames(result)
+    rows = [np.asarray(f["site_disk"], dtype=np.float64) for f in frames]
+    return np.stack(rows) if rows else np.zeros((0, result.sites.capacity))
+
+
+def network_timeline(result: SimResult) -> np.ndarray:
+    """[T, S] WAN bytes staged into each site per logged frame."""
+    frames = log_frames(result)
+    rows = [np.asarray(f["site_net_in"], dtype=np.float64) for f in frames]
+    return np.stack(rows) if rows else np.zeros((0, result.sites.capacity))
 
 
 def sparkline(values: np.ndarray, width: int = 60) -> str:

@@ -1,0 +1,198 @@
+"""Storage elements and the replica catalog (DESIGN.md §3).
+
+Grid jobs read *datasets* that live on storage elements at specific sites;
+where the replicas are dominates stage-in time (Begy et al., Horzela et al.).
+Dense representation over D datasets x S sites:
+
+  present[D, S]      replica catalog (bool)
+  size[D]            dataset bytes
+  origin[D]          pinned home site — the tape/origin copy, never evicted
+  disk_used[S]/cap   storage-element occupancy
+  last_access[D, S]  LRU clock for capacity eviction
+
+All operations (source selection, cache-on-read insertion, masked LRU
+eviction) are fixed-shape masked algebra, so an engine carrying a
+``ReplicaState`` still jits and vmaps for calibration ensembles.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INF = jnp.float32(jnp.inf)
+
+
+class ReplicaState(NamedTuple):
+    present: jax.Array      # bool[D, S] replica catalog
+    size: jax.Array         # f32[D] dataset bytes
+    origin: jax.Array       # i32[D] home site (pinned copy)
+    disk_used: jax.Array    # f32[S] bytes resident per storage element
+    disk_cap: jax.Array     # f32[S] storage-element capacity
+    last_access: jax.Array  # f32[D, S] last read/insert time (LRU)
+    n_hits: jax.Array       # i32[] cumulative local cache hits
+    n_transfers: jax.Array  # i32[] cumulative WAN transfers
+    bytes_moved: jax.Array  # f32[] cumulative WAN bytes
+
+    @property
+    def n_datasets(self) -> int:
+        return self.present.shape[-2]
+
+    @property
+    def n_sites(self) -> int:
+        return self.present.shape[-1]
+
+
+def make_replicas(
+    sizes,
+    disk_capacity,
+    *,
+    origin=None,
+    placement=None,
+    seed: int = 0,
+) -> ReplicaState:
+    """Build a catalog: one pinned origin replica per dataset plus optional
+    extra ``placement`` (bool[D, S]).  Default origins are drawn by capacity
+    weight (big storage elements hold more data), like PanDA's data lakes."""
+    size = jnp.asarray(sizes, jnp.float32)
+    cap = jnp.asarray(disk_capacity, jnp.float32)
+    D, S = size.shape[0], cap.shape[0]
+    if origin is None:
+        rng = np.random.default_rng(seed)
+        w = np.maximum(np.asarray(cap, np.float64), 0.0)
+        w = w / max(w.sum(), 1e-9)
+        origin = rng.choice(S, size=D, p=w)
+    origin = jnp.asarray(origin, jnp.int32)
+    present = jnp.zeros((D, S), bool).at[jnp.arange(D), jnp.clip(origin, 0, S - 1)].set(True)
+    if placement is not None:
+        present = present | jnp.asarray(placement, bool)
+    disk_used = (present * size[:, None]).sum(0)
+    return ReplicaState(
+        present=present,
+        size=size,
+        origin=origin,
+        disk_used=disk_used,
+        disk_cap=cap,
+        last_access=jnp.where(present, 0.0, -INF),
+        n_hits=jnp.zeros((), jnp.int32),
+        n_transfers=jnp.zeros((), jnp.int32),
+        bytes_moved=jnp.zeros((), jnp.float32),
+    )
+
+
+def zipf_dataset_sizes(n_datasets: int, *, seed: int = 0, mean_bytes: float = 20e9, sigma: float = 1.0):
+    """Log-normal dataset sizes (HEP AOD/DAOD-flavoured heavy tail)."""
+    rng = np.random.default_rng(seed)
+    return rng.lognormal(np.log(mean_bytes), sigma, n_datasets).astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# source selection
+# --------------------------------------------------------------------------
+
+
+def nearest_source(rep: ReplicaState, net, dataset: jax.Array, dst: jax.Array) -> jax.Array:
+    """Best replica site for each job: minimize unshared transfer time
+    ``latency[src, dst] + size / bw[src, dst]`` over sites holding a replica.
+
+    Local replicas win automatically (the diagonal link is ~free).  Rows whose
+    dataset has no replica anywhere fall back to the pinned origin (which by
+    construction always holds one).
+    """
+    D, S = rep.present.shape
+    d = jnp.clip(dataset, 0, D - 1)
+    avail = rep.present[d]                      # [J, S]
+    lat = net.latency[:, :].T[dst]              # [J, S] latency[src, dst_j]
+    bw = net.bw[:, :].T[dst]                    # [J, S]
+    cost = lat + rep.size[d][:, None] / jnp.maximum(bw, 1e-9)
+    cost = jnp.where(avail, cost, INF)
+    src = jnp.argmin(cost, axis=-1).astype(jnp.int32)
+    return jnp.where(jnp.any(avail, axis=-1), src, rep.origin[d])
+
+
+# --------------------------------------------------------------------------
+# cache insertion with masked LRU eviction
+# --------------------------------------------------------------------------
+
+
+def insert_mask(rep: ReplicaState, want: jax.Array, clock) -> ReplicaState:
+    """Insert replicas for every True cell of ``want[D, S]``, evicting LRU
+    non-origin replicas per site to make room.  Sites that cannot fit a new
+    replica even after evicting everything evictable skip the insertion, so
+    ``disk_used <= disk_cap`` is an invariant (given a valid initial state).
+    """
+    D, S = rep.present.shape
+    size_col = rep.size[:, None]                       # [D, 1]
+    is_origin = (
+        jnp.arange(S)[None, :] == jnp.clip(rep.origin, 0, S - 1)[:, None]
+    )                                                  # [D, S]
+    new = want & ~rep.present
+    incoming = (new * size_col).sum(0)                 # f32[S]
+    need = jnp.maximum(rep.disk_used + incoming - rep.disk_cap, 0.0)
+
+    # LRU eviction candidates: resident, not the pinned origin, not being
+    # read/inserted this round.
+    evictable = rep.present & ~is_origin & ~want
+    order = jnp.argsort(jnp.where(evictable, rep.last_access, INF), axis=0)  # [D, S]
+    ev_sorted = jnp.take_along_axis(evictable, order, axis=0)
+    sz_sorted = jnp.take_along_axis(jnp.broadcast_to(size_col, (D, S)), order, axis=0)
+    sz_sorted = jnp.where(ev_sorted, sz_sorted, 0.0)
+    cum_excl = jnp.cumsum(sz_sorted, axis=0) - sz_sorted
+    evict_sorted = ev_sorted & (cum_excl < need[None, :])
+    evict = jnp.zeros((D, S), bool).at[order, jnp.arange(S)[None, :]].set(evict_sorted)
+    freed = (evict * size_col).sum(0)
+
+    # drop insertions at sites that still don't fit after max eviction
+    fits = rep.disk_used - freed + incoming <= rep.disk_cap + 1e-3
+    do_insert = new & fits[None, :]
+    kept_in = (do_insert * size_col).sum(0)
+    # a site only evicts if its insertions actually land
+    evict = evict & fits[None, :]
+    freed = jnp.where(fits, freed, 0.0)
+
+    present = (rep.present & ~evict) | do_insert
+    return rep._replace(
+        present=present,
+        disk_used=rep.disk_used - freed + kept_in,
+        last_access=jnp.where(
+            do_insert, jnp.float32(clock), jnp.where(evict, -INF, rep.last_access)
+        ),
+    )
+
+
+def insert_replicas(
+    rep: ReplicaState, dataset: jax.Array, site: jax.Array, mask: jax.Array, clock
+) -> ReplicaState:
+    """Row-wise insertion: cache dataset[j] at site[j] where mask[j]."""
+    D, S = rep.present.shape
+    d = jnp.clip(dataset, 0, D - 1)
+    s = jnp.clip(site, 0, S - 1)
+    want = jnp.zeros((D, S), bool).at[d, s].max(mask)
+    return insert_mask(rep, want, clock)
+
+
+def touch(rep: ReplicaState, dataset: jax.Array, site: jax.Array, mask: jax.Array, clock) -> ReplicaState:
+    """Refresh the LRU clock of replicas read this round (where present)."""
+    D, S = rep.present.shape
+    d = jnp.clip(dataset, 0, D - 1)
+    s = jnp.clip(site, 0, S - 1)
+    touched = jnp.zeros((D, S), bool).at[d, s].max(mask) & rep.present
+    return rep._replace(last_access=jnp.where(touched, jnp.float32(clock), rep.last_access))
+
+
+def catalog_invariants(rep: ReplicaState) -> dict:
+    """Numpy invariant checks for tests: capacity respected, accounting exact,
+    origins pinned."""
+    present = np.asarray(rep.present)
+    size = np.asarray(rep.size)
+    used = np.asarray(rep.disk_used)
+    cap = np.asarray(rep.disk_cap)
+    origin = np.clip(np.asarray(rep.origin), 0, present.shape[1] - 1)
+    recomputed = (present * size[:, None]).sum(0)
+    return dict(
+        capacity_ok=bool((used <= cap + 1e-2).all()),
+        accounting_ok=bool(np.allclose(used, recomputed, rtol=1e-5, atol=1.0)),
+        origins_ok=bool(present[np.arange(present.shape[0]), origin].all()),
+    )

@@ -45,6 +45,10 @@ class JobsState(NamedTuple):
     retries: jax.Array    # i32[J] resubmission count
     will_fail: jax.Array  # bool[J] sampled at start: this attempt fails
     valid: jax.Array      # bool[J] row is a real job (padding rows are False)
+    dataset: jax.Array    # i32[J] input dataset id, -1 = no catalogued dataset
+    xfer_src: jax.Array   # i32[J] replica site the last stage-in read from (-1 none)
+    xfer_bytes: jax.Array  # f32[J] WAN bytes moved by the last stage-in (0 = cache hit)
+    xfer_time: jax.Array  # f32[J] stage-in duration of the last attempt
 
     @property
     def capacity(self) -> int:
@@ -89,6 +93,8 @@ class EventLog(NamedTuple):
     site_free: jax.Array     # i32[R, S]
     site_queued: jax.Array   # i32[R, S] jobs sitting in each site queue
     site_running: jax.Array  # i32[R, S]
+    site_disk: jax.Array     # f32[R, S] storage-element bytes resident
+    site_net_in: jax.Array   # f32[R, S] WAN bytes staged into each site this round
     cursor: jax.Array        # i32[] next write slot (wraps)
 
     @property
@@ -105,6 +111,9 @@ class EngineState(NamedTuple):
     policy_state: object    # policy-defined pytree
     log: EventLog
     halted: jax.Array       # bool[] no further progress possible
+    replicas: object = None     # ReplicaState when the data subsystem is on
+    data_state: object = ()     # DataPolicy-defined pytree
+    net_acc: object = ()        # f32[S] WAN bytes staged since the last log write
 
 
 class SimResult(NamedTuple):
@@ -114,6 +123,8 @@ class SimResult(NamedTuple):
     sites: SiteState
     log: EventLog
     policy_state: object
+    replicas: object = None     # final ReplicaState (None without a DataPolicy)
+    data_state: object = ()
 
 
 def make_jobs(
@@ -126,6 +137,7 @@ def make_jobs(
     bytes_in,
     bytes_out,
     priority=None,
+    dataset=None,
     capacity: int | None = None,
 ) -> JobsState:
     """Build a JobsState from per-job vectors, padding to ``capacity`` rows."""
@@ -145,6 +157,8 @@ def make_jobs(
 
     if priority is None:
         priority = jnp.zeros((n,), jnp.float32)
+    if dataset is None:
+        dataset = jnp.full((n,), -1, jnp.int32)
     valid = jnp.arange(cap) < n
     return JobsState(
         job_id=pad_i(job_id, -1),
@@ -163,6 +177,10 @@ def make_jobs(
         retries=jnp.zeros((cap,), jnp.int32),
         will_fail=jnp.zeros((cap,), bool),
         valid=valid,
+        dataset=pad_i(dataset, -1),
+        xfer_src=jnp.full((cap,), -1, jnp.int32),
+        xfer_bytes=jnp.zeros((cap,), jnp.float32),
+        xfer_time=jnp.zeros((cap,), jnp.float32),
     )
 
 
@@ -228,5 +246,7 @@ def make_log(rows: int, n_sites: int) -> EventLog:
         site_free=jnp.zeros((r, n_sites), jnp.int32),
         site_queued=jnp.zeros((r, n_sites), jnp.int32),
         site_running=jnp.zeros((r, n_sites), jnp.int32),
+        site_disk=jnp.zeros((r, n_sites), jnp.float32),
+        site_net_in=jnp.zeros((r, n_sites), jnp.float32),
         cursor=jnp.zeros((), jnp.int32),
     )

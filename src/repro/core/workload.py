@@ -25,6 +25,8 @@ def synthetic_panda_jobs(
     multicore_frac: float = 0.5,
     mean_walltime_hours: float = 4.0,
     burstiness: float = 0.3,
+    n_datasets: int | None = None,
+    zipf_alpha: float = 1.2,
     capacity: int | None = None,
 ) -> JobsState:
     """ATLAS-production-shaped synthetic workload.
@@ -32,8 +34,17 @@ def synthetic_panda_jobs(
     work is calibrated so that on a speed-10 site a single-core job averages
     ``mean_walltime_hours``; multicore (8-core) jobs carry ~8x the work, as in
     ATLAS reconstruction/simulation task splits.
+
+    ``n_datasets`` assigns each job an input dataset with Zipf(``zipf_alpha``)
+    popularity — a few hot datasets dominate reads, the regime where replica
+    caching pays off (DESIGN.md §3).  Default None leaves ``dataset = -1``
+    (flat-link stage-in).
     """
     rng = np.random.default_rng(seed)
+    dataset = None
+    if n_datasets is not None:
+        p = 1.0 / np.arange(1, n_datasets + 1) ** zipf_alpha
+        dataset = rng.choice(n_datasets, size=n_jobs, p=p / p.sum()).astype(np.int32)
     multicore = rng.random(n_jobs) < multicore_frac
     cores = np.where(multicore, 8, 1).astype(np.int32)
 
@@ -63,6 +74,7 @@ def synthetic_panda_jobs(
         bytes_in=bytes_in,
         bytes_out=bytes_out,
         priority=priority,
+        dataset=dataset,
         capacity=capacity,
     )
 
@@ -92,6 +104,7 @@ def from_records(records, *, capacity: int | None = None) -> JobsState:
         bytes_in=cols.get("bytes_in", np.zeros(n)),
         bytes_out=cols.get("bytes_out", np.zeros(n)),
         priority=cols.get("priority", np.zeros(n)),
+        dataset=np.asarray(cols.get("dataset", np.full(n, -1))).astype(np.int32),
         capacity=capacity,
     )
 

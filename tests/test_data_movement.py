@@ -1,0 +1,390 @@
+"""Data movement & replica management subsystem (DESIGN.md §3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DONE,
+    atlas_like_network,
+    atlas_like_platform,
+    catalog_invariants,
+    get_data_policy,
+    get_policy,
+    make_jobs,
+    make_replicas,
+    make_sites,
+    matrix_network,
+    network_from_sites,
+    shared_transfer_times,
+    simulate,
+    star_network,
+    synthetic_panda_jobs,
+    tiered_network,
+    uniform_network,
+    zipf_dataset_sizes,
+)
+from repro.core.engine import simulate_ensemble
+from repro.core.events import to_csv, to_json, transfer_rows
+from repro.core.replicas import insert_mask, insert_replicas, nearest_source
+
+
+def data_jobs(n=24, n_datasets=6, *, seed=0, work=50.0, ds_bytes=None, arrival=None):
+    rng = np.random.default_rng(seed)
+    jobs = make_jobs(
+        job_id=np.arange(n),
+        arrival=arrival if arrival is not None else np.zeros(n),
+        work=np.full(n, work),
+        cores=np.ones(n, np.int32),
+        memory=np.full(n, 1.0),
+        bytes_in=np.zeros(n),
+        bytes_out=np.zeros(n),
+        dataset=rng.integers(0, n_datasets, n),
+    )
+    return jobs
+
+
+def grid(n_sites=3, cores=32):
+    return make_sites(
+        cores=np.full(n_sites, cores),
+        speed=np.full(n_sites, 10.0),
+        memory=np.full(n_sites, 1e9),
+        bw_in=np.full(n_sites, 1e12),
+        bw_out=np.full(n_sites, 1e12),
+    )
+
+
+# --------------------------------------------------------------------------
+# topology builders
+# --------------------------------------------------------------------------
+
+
+def test_topology_builders_shapes_and_diagonal():
+    for net in (
+        uniform_network(4, bw=1e9, latency=0.01),
+        star_network(np.full(4, 1e9), latency=np.full(4, 0.02)),
+        tiered_network([0, 1, 2, 2], [4e10, 1e10, 1e9]),
+        matrix_network(np.full((4, 4), 1e9), np.full((4, 4), 0.01)),
+        network_from_sites(grid(4)),
+        atlas_like_network(4, seed=0),
+    ):
+        assert net.bw.shape == (4, 4) and net.latency.shape == (4, 4)
+        # intra-site reads are effectively free
+        assert float(jnp.diag(net.bw).min()) >= 1e14
+        assert float(jnp.diag(net.latency).max()) == 0.0
+        assert float(net.bw.min()) > 0
+
+
+def test_star_network_bottleneck():
+    net = star_network(np.array([1e9, 4e9, 2e9]), latency=np.array([0.01, 0.02, 0.03]))
+    assert float(net.bw[0, 1]) == pytest.approx(1e9)  # min(up[0], down[1])
+    assert float(net.bw[1, 2]) == pytest.approx(2e9)
+    assert float(net.latency[0, 2]) == pytest.approx(0.04)
+
+
+def test_tiered_network_bottlenecks_on_thinner_tier():
+    net = tiered_network([0, 2], [1e11, 1e10, 1e9])
+    assert float(net.bw[0, 1]) == pytest.approx(1e9)
+    assert float(net.bw[1, 0]) == pytest.approx(1e9)
+
+
+# --------------------------------------------------------------------------
+# bandwidth sharing
+# --------------------------------------------------------------------------
+
+
+def test_link_sharing_conserves_bandwidth():
+    net = uniform_network(3, bw=1e9, latency=0.0)
+    # 4 concurrent transfers on link 0->1, 2 on 2->1, one inactive row
+    src = jnp.array([0, 0, 0, 0, 2, 2, 0], jnp.int32)
+    dst = jnp.array([1, 1, 1, 1, 1, 1, 2], jnp.int32)
+    nbytes = jnp.full((7,), 1e9)
+    active = jnp.array([True] * 6 + [False])
+    t, bw_eff = shared_transfer_times(net, src, dst, nbytes, active)
+    bw_eff = np.asarray(bw_eff)
+    assert bw_eff[:4].sum() == pytest.approx(1e9, rel=1e-6)  # link 0->1 saturated
+    assert bw_eff[4:6].sum() == pytest.approx(1e9, rel=1e-6)
+    assert bw_eff[6] == 0.0 and float(t[6]) == 0.0
+    # each of the 4 flows on 0->1 takes 4x the solo time
+    assert float(t[0]) == pytest.approx(4.0, rel=1e-5)
+
+
+def test_transfer_time_includes_latency():
+    net = uniform_network(2, bw=1e9, latency=0.5)
+    t, _ = shared_transfer_times(
+        net, jnp.array([0]), jnp.array([1]), jnp.array([1e9]), jnp.array([True])
+    )
+    assert float(t[0]) == pytest.approx(1.5, rel=1e-5)
+
+
+# --------------------------------------------------------------------------
+# replica catalog
+# --------------------------------------------------------------------------
+
+
+def test_make_replicas_origin_pinned_and_accounted():
+    sizes = np.array([10.0, 20.0, 30.0])
+    rep = make_replicas(sizes, disk_capacity=np.array([100.0, 100.0]), origin=[0, 1, 0])
+    inv = catalog_invariants(rep)
+    assert inv["capacity_ok"] and inv["accounting_ok"] and inv["origins_ok"]
+    assert float(rep.disk_used[0]) == pytest.approx(40.0)
+    assert float(rep.disk_used[1]) == pytest.approx(20.0)
+
+
+def test_insert_respects_capacity_with_lru_eviction():
+    # site 1 cap 55: holds ds2 (origin, 30). Insert ds0 (10) -> fits (40).
+    # Insert ds1 (20): needs 5 -> evicts LRU ds0 (non-origin), lands at 50.
+    sizes = np.array([10.0, 20.0, 30.0])
+    rep = make_replicas(sizes, disk_capacity=np.array([100.0, 55.0]), origin=[0, 0, 1])
+    rep = insert_replicas(rep, jnp.array([0]), jnp.array([1]), jnp.array([True]), 1.0)
+    assert bool(rep.present[0, 1])
+    rep = insert_replicas(rep, jnp.array([1]), jnp.array([1]), jnp.array([True]), 2.0)
+    assert not bool(rep.present[0, 1])  # evicted
+    assert bool(rep.present[1, 1])
+    assert bool(rep.present[2, 1])  # origin never evicted
+    inv = catalog_invariants(rep)
+    assert inv["capacity_ok"] and inv["accounting_ok"] and inv["origins_ok"]
+
+
+def test_insert_skipped_when_it_can_never_fit():
+    sizes = np.array([10.0, 200.0])
+    rep = make_replicas(sizes, disk_capacity=np.array([300.0, 50.0]), origin=[0, 0])
+    rep = insert_replicas(rep, jnp.array([1]), jnp.array([1]), jnp.array([True]), 1.0)
+    assert not bool(rep.present[1, 1])  # 200 > cap 50: skipped, not crammed
+    assert catalog_invariants(rep)["capacity_ok"]
+
+
+def test_nearest_source_prefers_fat_link_and_local():
+    sizes = np.array([1e9])
+    rep = make_replicas(sizes, disk_capacity=np.full(3, 1e10), origin=[0])
+    rep = insert_mask(rep, jnp.array([[True, True, False]]), 0.0)
+    bw = np.full((3, 3), 1e8)
+    bw[1, 2] = 1e10  # site 1 has the fat link to site 2
+    net = matrix_network(bw, np.zeros((3, 3)))
+    src = nearest_source(rep, net, jnp.array([0, 0]), jnp.array([2, 1]))
+    assert int(src[0]) == 1  # remote read picks the fat link
+    assert int(src[1]) == 1  # local replica wins outright
+
+
+# --------------------------------------------------------------------------
+# engine integration
+# --------------------------------------------------------------------------
+
+
+def run_with(policy_name, jobs, sites, net, rep, **kw):
+    return simulate(
+        jobs,
+        sites,
+        get_policy("round_robin"),
+        jax.random.PRNGKey(0),
+        data_policy=get_data_policy(policy_name),
+        network=net,
+        replicas=rep,
+        **kw,
+    )
+
+
+def test_cache_hit_means_zero_transfer_bytes():
+    # two jobs, same dataset, same (single) extra site, serialized on 1 core:
+    # first read stages over the WAN, second is a local cache hit.
+    jobs = make_jobs(
+        job_id=[0, 1], arrival=[0.0, 0.1], work=[50.0, 50.0], cores=[1, 1],
+        memory=[1.0, 1.0], bytes_in=[0.0, 0.0], bytes_out=[0.0, 0.0], dataset=[0, 0],
+    )
+    sites = grid(2, cores=1)._replace(active=jnp.array([False, True]))
+    net = uniform_network(2, bw=1e8, latency=0.0)
+    rep = make_replicas(np.array([1e9]), disk_capacity=np.full(2, 1e10), origin=[0])
+    res = run_with("cache_on_read", jobs, sites, net, rep)
+    xb = np.asarray(res.jobs.xfer_bytes)[:2]
+    assert xb[0] == pytest.approx(1e9)
+    assert xb[1] == 0.0  # cache hit
+    assert np.asarray(res.jobs.xfer_time)[1] == 0.0
+    assert int(res.replicas.n_hits) == 1 and int(res.replicas.n_transfers) == 1
+    # the hit saves the 10s transfer: walltimes differ by exactly that
+    wall = np.asarray(res.jobs.t_finish - res.jobs.t_start)[:2]
+    assert wall[0] - wall[1] == pytest.approx(10.0, rel=1e-4)
+
+
+def test_capacity_invariant_holds_under_pressure():
+    jobs = data_jobs(64, n_datasets=16, seed=1)
+    sites = grid(4)
+    net = uniform_network(4, bw=1e9, latency=0.001)
+    # site 0 is the data lake holding all origins; the other sites run tiny
+    # caches with room for ~2 datasets -> constant eviction churn
+    rep = make_replicas(
+        zipf_dataset_sizes(16, seed=2, mean_bytes=1e9),
+        disk_capacity=np.array([1e12, 2.5e9, 2.5e9, 2.5e9]),
+        origin=np.zeros(16, np.int32),
+    )
+    assert catalog_invariants(rep)["capacity_ok"], "test setup must start valid"
+    res = run_with("cache_on_read", jobs, sites, net, rep)
+    inv = catalog_invariants(res.replicas)
+    assert inv["capacity_ok"] and inv["accounting_ok"] and inv["origins_ok"]
+    state = np.asarray(res.jobs.state)[np.asarray(res.jobs.valid)]
+    assert (state == DONE).all()
+
+
+def test_cache_on_read_beats_always_remote():
+    """Acceptance demo: on a Zipf workload with transfer-dominated jobs,
+    caching measurably cuts both WAN bytes and makespan."""
+    jobs = synthetic_panda_jobs(
+        96, seed=0, duration=60.0, multicore_frac=0.0, mean_walltime_hours=0.005,
+        n_datasets=12, zipf_alpha=1.3,
+    )
+    # few cores per site -> jobs run in waves, so hot datasets are re-read;
+    # thin WAN -> staging dominates the critical path
+    sites = grid(4, cores=8)
+    net = uniform_network(4, bw=2e8, latency=0.01)
+    rep = make_replicas(
+        zipf_dataset_sizes(12, seed=2, mean_bytes=50e9),
+        disk_capacity=np.full(4, 1e12),
+        seed=3,
+    )
+    remote = run_with("always_remote", jobs, sites, net, rep)
+    cached = run_with("cache_on_read", jobs, sites, net, rep)
+    assert float(cached.replicas.bytes_moved) < 0.7 * float(remote.replicas.bytes_moved)
+    assert float(cached.makespan) < 0.9 * float(remote.makespan)
+    for res in (remote, cached):
+        state = np.asarray(res.jobs.state)[np.asarray(res.jobs.valid)]
+        assert (state == DONE).all()
+
+
+def test_pre_place_hot_reduces_transfers():
+    jobs = data_jobs(64, n_datasets=8, seed=4)
+    sites = grid(4)
+    net = uniform_network(4, bw=1e9, latency=0.01)
+    rep = make_replicas(
+        zipf_dataset_sizes(8, seed=5, mean_bytes=5e9), disk_capacity=np.full(4, 1e12), seed=6
+    )
+    base = run_with("always_remote", jobs, sites, net, rep)
+    pre = simulate(
+        jobs, sites, get_policy("round_robin"), jax.random.PRNGKey(0),
+        data_policy=get_data_policy("pre_place_hot", hot_frac=0.5, n_copies=4),
+        network=net, replicas=rep,
+    )
+    assert float(pre.replicas.bytes_moved) < float(base.replicas.bytes_moved)
+
+
+def test_datasetless_jobs_keep_flat_link_model():
+    """dataset = -1 rows take the flat per-site path even under a DataPolicy."""
+    jobs = synthetic_panda_jobs(48, seed=2, duration=300.0)  # no datasets
+    sites = atlas_like_platform(3, seed=3)
+    net = atlas_like_network(3, seed=4)
+    rep = make_replicas(np.array([1e9]), disk_capacity=np.full(3, 1e12), origin=[0])
+    r_plain = simulate(jobs, sites, get_policy("round_robin"), jax.random.PRNGKey(0))
+    r_data = run_with("cache_on_read", jobs, sites, net, rep)
+    # different policy objects force a retrace, but dynamics must agree
+    np.testing.assert_allclose(
+        np.asarray(r_plain.jobs.t_finish), np.asarray(r_data.jobs.t_finish), rtol=1e-5
+    )
+    assert float(r_data.replicas.bytes_moved) == 0.0
+
+
+def test_engine_with_data_policy_vmaps_in_ensemble():
+    jobs = data_jobs(32, n_datasets=6, seed=7)
+    sites = grid(3)
+    net = uniform_network(3, bw=1e9, latency=0.01)
+    rep = make_replicas(
+        zipf_dataset_sizes(6, seed=8, mean_bytes=2e9), disk_capacity=np.full(3, 1e11), seed=9
+    )
+    cands = sites.speed[None, :] * jnp.array([[0.5], [1.0], [2.0]])
+    res = simulate_ensemble(
+        jobs, sites, get_policy("round_robin"), jax.random.PRNGKey(1),
+        speed_candidates=cands,
+        data_policy=get_data_policy("cache_on_read"), network=net, replicas=rep,
+    )
+    assert res.makespan.shape == (3,)
+    assert np.isfinite(np.asarray(res.makespan)).all()
+    assert res.replicas.present.shape == (3, 6, 3)
+    # faster sites don't change how many bytes must move on first reads
+    assert (np.asarray(res.replicas.bytes_moved) > 0).all()
+
+
+def test_transfer_rows_export_roundtrip():
+    jobs = data_jobs(32, n_datasets=5, seed=10, arrival=np.linspace(0, 10, 32))
+    sites = grid(3)
+    net = uniform_network(3, bw=1e9, latency=0.01)
+    rep = make_replicas(
+        zipf_dataset_sizes(5, seed=11, mean_bytes=2e9), disk_capacity=np.full(3, 1e12), seed=12
+    )
+    res = run_with("cache_on_read", jobs, sites, net, rep)
+    rows = transfer_rows(res)
+    assert len(rows) == 32  # one stage-in per dataset-carrying job
+    assert {"time", "job_id", "dataset", "src", "dst", "bytes", "duration", "cache_hit"} == set(
+        rows[0]
+    )
+    times = [r["time"] for r in rows]
+    assert times == sorted(times)
+    moved = sum(r["bytes"] for r in rows)
+    assert moved == pytest.approx(float(res.replicas.bytes_moved), rel=1e-5)
+    hits = sum(r["cache_hit"] for r in rows)
+    assert hits == int(res.replicas.n_hits)
+    assert all((r["bytes"] == 0.0) == r["cache_hit"] for r in rows)
+    # serialization round-trips
+    csv_text = to_csv(rows)
+    assert len(csv_text.splitlines()) == len(rows) + 1
+    import json
+
+    assert json.loads(to_json(rows))[0]["dataset"] == rows[0]["dataset"]
+
+
+def test_transfer_rows_empty_without_data_policy():
+    # dataset ids alone don't fabricate a transfer log: without a DataPolicy
+    # nothing staged through the subsystem, so no rows
+    jobs = data_jobs(16, n_datasets=4, seed=20)
+    res = simulate(jobs, grid(2), get_policy("round_robin"), jax.random.PRNGKey(0))
+    assert transfer_rows(res) == []
+
+
+def test_flat_jobs_dont_share_ingress_with_dataset_jobs():
+    # one flat-link job and one (locally-replicated) dataset job start in the
+    # same round: the flat job's stage-in must use the full ingress link, not
+    # a 2-way share with the WAN-staged job
+    jobs = make_jobs(
+        job_id=[0, 1], arrival=[0.0, 0.0], work=[100.0, 100.0], cores=[1, 1],
+        memory=[1.0, 1.0], bytes_in=[1e9, 0.0], bytes_out=[0.0, 0.0], dataset=[-1, 0],
+    )
+    sites = make_sites(cores=[2], speed=[10.0], memory=[64.0], bw_in=[1e8], bw_out=[1e12])
+    net = uniform_network(1, bw=1e9, latency=0.0)
+    rep = make_replicas(np.array([1e9]), disk_capacity=np.array([1e12]), origin=[0])
+    res = run_with("always_remote", jobs, sites, net, rep)
+    wall = np.asarray(res.jobs.t_finish - res.jobs.t_start)
+    assert wall[0] == pytest.approx(10.0 + 10.0, abs=1e-2)  # full 1e8 link: 10s stage + 10s compute
+    assert wall[1] == pytest.approx(10.0, abs=1e-2)          # local replica: compute only
+
+
+def test_network_timeline_conserves_bytes_with_sparse_monitoring():
+    jobs = data_jobs(48, n_datasets=8, seed=21)
+    sites = grid(3, cores=8)
+    net = uniform_network(3, bw=1e9, latency=0.01)
+    rep = make_replicas(
+        zipf_dataset_sizes(8, seed=22, mean_bytes=2e9), disk_capacity=np.full(3, 1e12), seed=23
+    )
+    from repro.core.monitor import network_timeline
+
+    res = run_with("cache_on_read", jobs, sites, net, rep, log_rows=512, monitor_every=3)
+    nt = network_timeline(res)
+    # bytes moved between writes accumulate into the next logged frame
+    assert nt.sum() == pytest.approx(float(res.replicas.bytes_moved), rel=1e-4)
+
+
+def test_monitor_storage_and_network_columns():
+    from repro.core.monitor import network_timeline, render_frame, storage_timeline
+    from repro.core.events import log_frames
+
+    jobs = data_jobs(48, n_datasets=8, seed=13, arrival=np.linspace(0, 60, 48))
+    sites = grid(3)
+    net = uniform_network(3, bw=1e9, latency=0.01)
+    rep = make_replicas(
+        zipf_dataset_sizes(8, seed=14, mean_bytes=2e9), disk_capacity=np.full(3, 1e11), seed=15
+    )
+    res = run_with("cache_on_read", jobs, sites, net, rep, log_rows=128)
+    frames = log_frames(res)
+    assert frames and "site_disk" in frames[0] and "site_net_in" in frames[0]
+    st = storage_timeline(res)
+    nt = network_timeline(res)
+    assert st.shape == nt.shape and st.shape[1] == sites.capacity
+    assert st.max() > 0  # caches filled
+    assert nt.sum() == pytest.approx(float(res.replicas.bytes_moved), rel=1e-4)
+    txt = render_frame(frames[-1], np.asarray(res.sites.cores), disk_cap=np.asarray(rep.disk_cap))
+    assert "disk|" in txt and "net_in=" in txt

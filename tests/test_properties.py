@@ -2,6 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the 'dev' extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import DONE, FAILED, get_policy, make_jobs, make_sites, simulate
