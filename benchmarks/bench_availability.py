@@ -1,0 +1,81 @@
+"""Availability-dynamics throughput (DESIGN.md §5): engine rounds and round
+rate as the downtime calendar grows.
+
+Every window start/end is an event source, so rounds scale as
+O(job events + window edges); the per-round cost adds O(S·W) window algebra.
+This bench sweeps windows-per-site W at fixed workload to measure both, plus
+the preemption cost of a flaky-grid scenario.  ``--tiny`` runs a
+seconds-sized smoke configuration for CI.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (
+    atlas_like_platform,
+    flaky_sites,
+    get_policy,
+    maintenance_calendar,
+    simulate,
+    synthetic_panda_jobs,
+)
+
+from .common import csv_row
+
+HORIZON = 40 * 3600.0
+
+
+def one_case(n_jobs: int, n_sites: int, availability, *, iters=2):
+    jobs = synthetic_panda_jobs(n_jobs, seed=0, duration=6 * 3600.0)
+    sites = atlas_like_platform(n_sites, seed=1)
+    kw = dict(availability=availability, max_rounds=200_000)
+    res = simulate(jobs, sites, get_policy("panda_dispatch"), jax.random.PRNGKey(0), **kw)
+    jax.block_until_ready(res.makespan)
+    ts = []
+    for i in range(iters):
+        t0 = time.perf_counter()
+        res = simulate(jobs, sites, get_policy("panda_dispatch"), jax.random.PRNGKey(i), **kw)
+        jax.block_until_ready(res.makespan)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), int(res.rounds), res
+
+
+def main():
+    tiny = "--tiny" in sys.argv
+    if tiny:
+        win_grid = (0, 4, 8)
+        n_jobs, n_sites = 200, 4
+    else:
+        win_grid = (0, 4, 16, 64)
+        n_jobs, n_sites = 2000, 16
+
+    print("# rounds & round rate vs windows per site W (maintenance calendar)")
+    for w in win_grid:
+        av = (
+            maintenance_calendar(
+                n_sites, horizon=HORIZON, period=HORIZON / w, duration=HORIZON / (4 * w)
+            )
+            if w
+            else None
+        )
+        wall, rounds, _ = one_case(n_jobs, n_sites, av)
+        print(csv_row(f"avail_W{w}_S{n_sites}", wall / max(rounds, 1) * 1e6,
+                      f"rounds={rounds};wall_s={wall:.3f}"))
+
+    print("# preemption churn (flaky grid: every site short-fails)")
+    av = flaky_sites(
+        n_sites, np.arange(n_sites), horizon=HORIZON, mtbf=4 * 3600.0,
+        mean_down=1800.0, seed=2,
+    )
+    wall, rounds, res = one_case(n_jobs, n_sites, av)
+    n_pre = int(np.asarray(res.avail.n_preempted).sum())
+    print(csv_row(f"avail_flaky_S{n_sites}", wall / max(rounds, 1) * 1e6,
+                  f"rounds={rounds};wall_s={wall:.3f};preempted={n_pre}"))
+
+
+if __name__ == "__main__":
+    main()

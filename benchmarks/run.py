@@ -9,6 +9,7 @@ import traceback
 
 from . import (
     bench_assign_kernel,
+    bench_availability,
     bench_calibration,
     bench_data_movement,
     bench_distributed,
@@ -27,6 +28,7 @@ SUITES = {
     "assign_kernel": bench_assign_kernel.main,
     "ensemble_vmap": bench_ensemble.main,
     "data_movement": bench_data_movement.main,
+    "availability": bench_availability.main,
 }
 
 

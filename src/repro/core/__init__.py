@@ -24,6 +24,14 @@ from .types import (  # noqa: F401
     make_sites,
 )
 from .engine import simulate, simulate_ensemble, service_time, compute_time, walltimes, queue_times  # noqa: F401
+from .availability import (  # noqa: F401
+    AvailabilityState,
+    availability_factor,
+    downtime_fraction,
+    make_availability,
+    next_window_edge,
+    sample_correlated_outages,
+)
 from .network import (  # noqa: F401
     NetworkState,
     atlas_like_network,
@@ -54,6 +62,7 @@ from .platform import (  # noqa: F401
     atlas_like_platform,
     deactivate_sites,
     dump_platform,
+    load_availability,
     load_platform,
 )
 from .policies import (  # noqa: F401
@@ -64,5 +73,12 @@ from .policies import (  # noqa: F401
     register,
     with_capacity_assign,
 )
-from .workload import from_records, lm_job_records, synthetic_panda_jobs  # noqa: F401
+from .workload import (  # noqa: F401
+    flaky_sites,
+    from_records,
+    lm_job_records,
+    maintenance_calendar,
+    rolling_brownout,
+    synthetic_panda_jobs,
+)
 from .metrics import Metrics, compute_metrics, summary_str  # noqa: F401

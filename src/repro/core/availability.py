@@ -1,0 +1,207 @@
+"""Site availability dynamics — downtime, preemption, degradation (DESIGN.md §5).
+
+CGSim evaluates infrastructures under realistic operating conditions; real
+grids are never fully up.  Sites take scheduled maintenance, suffer outages,
+and run degraded ("brown-outs") when power or cooling is constrained —
+Horzela et al. (arXiv:2403.14903) show unmodeled infrastructure dynamics
+dominate HEP-grid calibration error.  This module models all of that as a
+fixed-shape calendar of per-site windows so the engine stays jit/vmap-safe:
+
+- ``AvailabilityState`` holds ``f32[S, W]`` window start/end times padded
+  with ``inf``, a per-window ``factor`` (0 = full outage, (0,1) = brown-out),
+  and a per-window ``preempt`` flag (outage kills running jobs vs. drains).
+- ``availability_factor`` reduces the windows covering a time ``t`` to one
+  per-site multiplier (most severe window wins).
+- ``next_window_edge`` makes window boundaries an *event source*: the engine
+  clock min-reduction includes the next edge, so rounds land exactly on
+  window starts/ends and no boundary is skipped.
+
+Everything here is masked dense algebra over ``[S, W]``; window count is a
+static shape, not a loop bound.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INF = jnp.float32(jnp.inf)
+
+
+class AvailabilityState(NamedTuple):
+    """Fixed-capacity per-site downtime/degradation calendar.
+
+    Unused window slots have ``win_start = win_end = inf`` and never match.
+    ``win_preempt`` only matters for full outages (``win_factor == 0``):
+    True kills the site's running jobs at window entry (they return to
+    QUEUED with a retry, PanDA-style), False drains them to completion.
+    """
+
+    win_start: jax.Array    # f32[S, W] window start times (inf = unused slot)
+    win_end: jax.Array      # f32[S, W] window end times (exclusive)
+    win_factor: jax.Array   # f32[S, W] capacity/speed multiplier inside the window
+    win_preempt: jax.Array  # bool[S, W] outage preempts running jobs (vs drain)
+    n_preempted: jax.Array  # i32[S] cumulative attempts preempted per site
+
+    @property
+    def n_sites(self) -> int:
+        return self.win_start.shape[-2]
+
+    @property
+    def max_windows(self) -> int:
+        return self.win_start.shape[-1]
+
+
+def make_availability(
+    n_sites: int, windows=(), *, max_windows: int | None = None
+) -> AvailabilityState:
+    """Build an AvailabilityState from window specs.
+
+    ``windows``: iterable of dicts (``site``, ``start``, ``end``,
+    ``factor`` = 0.0, ``preempt`` = False) or tuples in that order.  Windows
+    are grouped per site and padded to ``max_windows`` slots (default: the
+    max per-site count, at least 1).
+    """
+    per_site: list[list[tuple]] = [[] for _ in range(n_sites)]
+    for w in windows:
+        if isinstance(w, dict):
+            site = int(w["site"])
+            row = (float(w["start"]), float(w["end"]),
+                   float(w.get("factor", 0.0)), bool(w.get("preempt", False)))
+        else:
+            site = int(w[0])
+            row = (float(w[1]), float(w[2]),
+                   float(w[3]) if len(w) > 3 else 0.0,
+                   bool(w[4]) if len(w) > 4 else False)
+        if not 0 <= site < n_sites:
+            raise ValueError(f"window site {site} out of range [0, {n_sites})")
+        if not row[1] > row[0]:
+            raise ValueError(f"window end {row[1]} must be > start {row[0]}")
+        if not 0.0 <= row[2] <= 1.0:
+            raise ValueError(f"window factor {row[2]} must be in [0, 1]")
+        per_site[site].append(row)
+
+    W = max_windows or max(1, max((len(p) for p in per_site), default=1))
+    if any(len(p) > W for p in per_site):
+        raise ValueError(f"a site has more than max_windows={W} windows")
+    start = np.full((n_sites, W), np.inf, np.float32)
+    end = np.full((n_sites, W), np.inf, np.float32)
+    factor = np.ones((n_sites, W), np.float32)
+    preempt = np.zeros((n_sites, W), bool)
+    for s, rows in enumerate(per_site):
+        for i, (t0, t1, f, p) in enumerate(sorted(rows)):
+            start[s, i], end[s, i], factor[s, i], preempt[s, i] = t0, t1, f, p
+    return AvailabilityState(
+        win_start=jnp.asarray(start),
+        win_end=jnp.asarray(end),
+        win_factor=jnp.asarray(factor),
+        win_preempt=jnp.asarray(preempt),
+        n_preempted=jnp.zeros((n_sites,), jnp.int32),
+    )
+
+
+def active_windows(avail: AvailabilityState, t: jax.Array) -> jax.Array:
+    """bool[S, W]: windows covering time ``t`` (half-open ``[start, end)``)."""
+    return (avail.win_start <= t) & (t < avail.win_end)
+
+
+def availability_factor(avail: AvailabilityState, t: jax.Array) -> jax.Array:
+    """f32[S]: per-site capacity multiplier at time ``t``.
+
+    1.0 outside any window; overlapping windows reduce to the most severe
+    (minimum) factor — an outage inside a brown-out is still an outage.
+    """
+    f = jnp.where(active_windows(avail, t), avail.win_factor, 1.0)
+    return f.min(axis=-1)
+
+
+def preempting_sites(avail: AvailabilityState, t0: jax.Array, t1: jax.Array) -> jax.Array:
+    """bool[S]: sites with a ``preempt`` full-outage window overlapping
+    ``(t0, t1]``.
+
+    Interval (not instant) semantics so ``quantum > 0`` rounds, whose clock
+    can jump past a short window entirely, still preempt the jobs that were
+    running through it — mirroring how job events inside a quantum are
+    retired late but never dropped.  With ``t0 == previous round clock`` and
+    ``t1 == current clock`` this reduces to "active at t1" whenever rounds
+    land on every edge (the quantum == 0 case).
+    """
+    hit = (avail.win_start <= t1) & (avail.win_end > t0)
+    return jnp.any(hit & avail.win_preempt & (avail.win_factor <= 0.0), axis=-1)
+
+
+def next_window_edge(avail: AvailabilityState, t: jax.Array) -> jax.Array:
+    """f32[]: the earliest window start/end strictly after ``t`` (inf if none).
+
+    Feeding this into the engine's clock min-reduction makes availability
+    transitions exact event rounds even when no job event is nearby.
+    """
+    edges = jnp.concatenate([avail.win_start.ravel(), avail.win_end.ravel()])
+    return jnp.where(edges > t, edges, INF).min()
+
+
+def downtime_fraction(avail: AvailabilityState, horizon) -> np.ndarray:
+    """f64[S]: fraction of ``[0, horizon]`` each site spends fully down.
+
+    Numpy post-processing helper (ML features / reports).  Overlapping outage
+    windows on one site (e.g. two correlated incidents) are merged, so the
+    result is the exact measure of the per-site downtime union.
+    """
+    horizon = float(horizon)
+    S = int(avail.n_sites)
+    if horizon <= 0:
+        return np.zeros(S)
+    start = np.clip(np.asarray(avail.win_start, np.float64), 0.0, horizon)
+    end = np.clip(np.asarray(avail.win_end, np.float64), 0.0, horizon)
+    down = (np.asarray(avail.win_factor) <= 0.0) & (end > start)
+    out = np.zeros(S)
+    for s in range(S):
+        covered, edge = 0.0, -np.inf
+        for a, b in sorted(zip(start[s][down[s]], end[s][down[s]])):
+            covered += max(b - max(a, edge), 0.0)
+            edge = max(edge, b)
+        out[s] = covered / horizon
+    return np.clip(out, 0.0, 1.0)
+
+
+def sample_correlated_outages(
+    n_sites: int,
+    tier,
+    *,
+    horizon: float,
+    events_per_tier: float = 2.0,
+    mean_duration: float = 4 * 3600.0,
+    p_follow: float = 0.7,
+    factor: float = 0.0,
+    preempt: bool = True,
+    jitter: float = 0.0,
+    seed: int = 0,
+    max_windows: int | None = None,
+) -> AvailabilityState:
+    """Tier-correlated outage calendar (shared storage, power, or WAN cuts).
+
+    Real grid outages cluster: a Tier-1 storage incident takes down the T2s
+    behind it.  For each tier we draw a Poisson number of *tier events*
+    (mean ``events_per_tier``) uniform over ``[0, horizon]``; each event hits
+    every site of that tier independently with probability ``p_follow``,
+    with log-normal duration around ``mean_duration`` and per-site start
+    jitter of up to ``jitter`` seconds.
+    """
+    tier = np.asarray(tier, np.int64)
+    if tier.shape != (n_sites,):
+        raise ValueError(f"tier must be shape ({n_sites},), got {tier.shape}")
+    rng = np.random.default_rng(seed)
+    windows = []
+    for t_id in np.unique(tier):
+        members = np.flatnonzero(tier == t_id)
+        for _ in range(rng.poisson(events_per_tier)):
+            t0 = rng.uniform(0.0, horizon)
+            hit = members[rng.random(members.size) < p_follow]
+            for s in hit:
+                start = t0 + rng.uniform(0.0, jitter) if jitter > 0 else t0
+                dur = rng.lognormal(np.log(mean_duration), 0.5)
+                windows.append(dict(site=int(s), start=start, end=start + dur,
+                                    factor=factor, preempt=preempt))
+    return make_availability(n_sites, windows, max_windows=max_windows)

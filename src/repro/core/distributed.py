@@ -73,6 +73,17 @@ def shard_jobs(jobs: JobsState, sites: SiteState, mesh: Mesh, axis: str = "data"
     return jax.device_put(jobs, jsh), jax.device_put(sites, ssh)
 
 
+def _replicate_aux(kw: dict, mesh: Mesh) -> dict:
+    """Place auxiliary engine state (availability calendar, replica catalog,
+    network matrices) fully replicated on the mesh, mirroring ``sites``."""
+    rep = NamedSharding(mesh, P())
+    out = dict(kw)
+    for key in ("availability", "network", "replicas"):
+        if out.get(key) is not None:
+            out[key] = jax.tree.map(lambda x: jax.device_put(jnp.asarray(x), rep), out[key])
+    return out
+
+
 def simulate_distributed(
     jobs: JobsState,
     sites: SiteState,
@@ -86,6 +97,7 @@ def simulate_distributed(
     """Job-parallel simulation: identical semantics to ``engine.simulate``
     (same event rounds, same FIFO), with XLA SPMD distributing each round."""
     jobs_d, sites_d = shard_jobs(jobs, sites, mesh, axis)
+    kw = _replicate_aux(kw, mesh)
     with use_mesh(mesh):
         return simulate(jobs_d, sites_d, policy, rng, **kw)
 
@@ -133,6 +145,7 @@ def simulate_ensemble_distributed(
         raise ValueError(f"candidates {K} must divide over {n_dev} devices")
     cand = jax.device_put(speed_candidates, NamedSharding(mesh, P(axis, None)))
     keys = jax.device_put(jax.random.split(rng, K), NamedSharding(mesh, P(axis, None)))
+    kw = _replicate_aux(kw, mesh)
 
     def one(speed, key):
         return simulate(jobs, sites._replace(speed=speed), policy, key, **kw)

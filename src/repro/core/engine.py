@@ -7,13 +7,19 @@ transition that fires at that instant as masked dense updates:
 
   round(t*):
     1. completions   — running jobs with t_finish <= t*  → DONE/FAILED/resubmit
-    2. arrivals      — pending jobs with arrival  <= t*  → QUEUED at the server
-    3. assignment    — the policy plugin scores QUEUED jobs against sites;
+    2. availability  — sites whose outage window covers t* preempt running
+                       jobs (→ QUEUED with a retry) or drain; brown-outs scale
+                       effective speed/cores (DESIGN.md §5)
+    3. arrivals      — pending jobs with arrival  <= t*  → QUEUED at the server
+    4. assignment    — the policy plugin scores QUEUED jobs against sites;
                        feasible best-site rows become ASSIGNED (site queue)
-    4. starts        — per-site FIFO-with-capacity: sort ASSIGNED rows by
+    5. starts        — per-site FIFO-with-capacity: sort ASSIGNED rows by
                        (site, -priority, arrival), start the per-site prefix
                        whose cumulative core/memory demand fits free resources
-    5. bookkeeping   — service times, failure sampling, counters, event log
+    6. bookkeeping   — service times, failure sampling, counters, event log
+
+With an ``AvailabilityState`` the clock min-reduction also includes the next
+window start/end, so availability transitions are exact event rounds.
 
 FIFO-with-capacity ≡ sort + segmented prefix-sum + mask is the central
 de-actorification trick (DESIGN.md §2).
@@ -124,6 +130,7 @@ def simulate(
     data_policy=None,
     network=None,
     replicas=None,
+    availability=None,
     max_rounds: int = 100_000,
     horizon: float = float("inf"),
     log_rows: int = 0,
@@ -146,6 +153,15 @@ def simulate(
     policy may cache-on-read into the site's storage element (DESIGN.md §3).
     Jobs with ``dataset == -1`` — and every run without a data policy — keep
     the flat per-site link model, so existing callers are unchanged.
+
+    Passing an ``availability`` (an ``AvailabilityState`` downtime calendar)
+    turns on availability dynamics (DESIGN.md §5): window edges become event
+    rounds, full outages block assignment/starts and either preempt running
+    jobs (back to QUEUED with a retry; progress is lost) or drain them, and
+    brown-out windows scale a site's effective speed and usable cores by the
+    window factor.  Runs with ``availability=None`` take a code path with no
+    extra ops or RNG draws, so they stay bit-for-bit identical to the
+    pre-availability engine.
     """
     S = sites0.capacity
     J = jobs0.capacity
@@ -161,6 +177,14 @@ def simulate(
         replicas0, data_state0 = data_policy.init(jobs0, sites0, network, replicas)
     else:
         replicas0, data_state0 = None, ()
+    avail_on = availability is not None
+    if avail_on:
+        from .availability import availability_factor, next_window_edge, preempting_sites
+
+        if availability.win_start.shape[-2] != S:
+            raise ValueError(
+                f"availability has {availability.win_start.shape[-2]} sites, platform has {S}"
+            )
 
     def cond(st: EngineState):
         active = (
@@ -184,12 +208,28 @@ def simulate(
         arr_t = jnp.where((jobs.state == PENDING) & jobs.valid, jobs.arrival, INF)
         fin_t = jnp.where(jobs.state == RUNNING, jobs.t_finish, INF)
         t_next = jnp.minimum(arr_t.min(), fin_t.min())
+        if avail_on:
+            # window starts/ends are event sources: rounds land exactly on edges
+            t_next = jnp.minimum(t_next, next_window_edge(st.avail, st.clock))
         if quantum > 0.0:
             t_next = t_next + quantum
         clock = jnp.where(jnp.isfinite(t_next), jnp.maximum(st.clock, t_next), st.clock)
 
         # ---- 2. completions -------------------------------------------------
         comp = (jobs.state == RUNNING) & (jobs.t_finish <= clock)
+        if avail_on:
+            # a preempting outage opening before the job's finish kills it
+            # first; only reachable when quantum > 0 jumps the clock past
+            # both the window start and t_finish in one round (at quantum=0
+            # rounds land on every edge, so this mask is identically False).
+            # The survivor stays RUNNING and step 2b preempts it.
+            ksite = jnp.clip(jobs.site, 0, S - 1)
+            ws = st.avail.win_start[ksite]                             # [J, W]
+            wkill = st.avail.win_preempt[ksite] & (st.avail.win_factor[ksite] <= 0.0)
+            killed_first = jnp.any(
+                wkill & (ws > st.clock) & (ws < jobs.t_finish[:, None]), axis=-1
+            )
+            comp = comp & ~killed_first
         comp_site = jnp.where(comp, jobs.site, S)  # padded segment for non-events
         freed_cores = jax.ops.segment_sum(
             jnp.where(comp, jobs.cores, 0), comp_site, num_segments=S + 1
@@ -221,6 +261,58 @@ def simulate(
             + jax.ops.segment_sum(failed_now.astype(jnp.int32), comp_site, num_segments=S + 1)[:S],
         )
 
+        # ---- 2b. availability: outage preemption & brown-out scaling ---------
+        avail = st.avail
+        pre = jnp.zeros((J,), bool)
+        if avail_on:
+            factor = availability_factor(avail, clock)     # f32[S]
+            # brown-out: a factor-f window caps usable cores at floor(f*cores);
+            # a site whose cap floors to 0 is a de facto outage, so the
+            # dispatcher routes around it just like a factor-0 window
+            eff_cap = jnp.floor(sites.cores.astype(jnp.float32) * factor).astype(jnp.int32)
+            avail_up = eff_cap > 0
+            # preempt: running jobs on a site whose preempting outage overlaps
+            # (prev clock, clock] lose this attempt now (completions above
+            # already retired jobs whose t_finish <= clock, so a job finishing
+            # at the edge still finishes; interval overlap keeps windows
+            # shorter than a quantum from being skipped)
+            site_c0 = jnp.clip(jobs.site, 0, S - 1)
+            preempting = preempting_sites(avail, st.clock, clock)[site_c0]
+            pre = (jobs.state == RUNNING) & preempting
+            pre_resub = pre & (jobs.retries < max_retries)
+            pre_fail = pre & ~pre_resub
+            pre_site = jnp.where(pre, jobs.site, S)
+            # jobs still waiting in the dead site's queue bounce back to the
+            # server — no attempt was lost, so no retry — instead of sitting
+            # stranded behind an outage while other sites idle (drain windows
+            # leave the site queue paused, as announced maintenance does)
+            bounce = (jobs.state == ASSIGNED) & preempting
+            jobs = jobs._replace(
+                state=jnp.where(
+                    pre_resub | bounce, QUEUED, jnp.where(pre_fail, FAILED, jobs.state)
+                ),
+                retries=jobs.retries + pre_resub.astype(jnp.int32),
+                site=jnp.where(pre_resub | bounce, -1, jobs.site),
+                t_finish=jnp.where(pre_resub, INF, jnp.where(pre_fail, clock, jobs.t_finish)),
+                preempted=jobs.preempted + pre.astype(jnp.int32),
+            )
+            sites = sites._replace(
+                free_cores=sites.free_cores
+                + jax.ops.segment_sum(
+                    jnp.where(pre, jobs.cores, 0), pre_site, num_segments=S + 1
+                )[:S],
+                free_memory=sites.free_memory
+                + jax.ops.segment_sum(
+                    jnp.where(pre, jobs.memory, 0.0), pre_site, num_segments=S + 1
+                )[:S],
+            )
+            avail = avail._replace(
+                n_preempted=avail.n_preempted
+                + jax.ops.segment_sum(pre.astype(jnp.int32), pre_site, num_segments=S + 1)[:S]
+            )
+        else:
+            factor = jnp.ones((S,), jnp.float32)
+
         # ---- 3. arrivals -----------------------------------------------------
         arrived = (jobs.state == PENDING) & (jobs.arrival <= clock) & jobs.valid
         jobs = jobs._replace(state=jnp.where(arrived, QUEUED, jobs.state))
@@ -233,6 +325,9 @@ def simulate(
             & (jobs.cores[:, None] <= sites.cores[None, :])
             & (jobs.memory[:, None] <= sites.memory[None, :])
         )
+        if avail_on:
+            # the dispatcher routes around sites currently in a full outage
+            feasible = feasible & avail_up[None, :]
         pstate = st.policy_state
         scores = policy.score(jobs, sites, pstate, clock, k_policy)  # [J, S]
         site_pick, assigned_now = policy.assign(scores, queued, feasible, sites)
@@ -249,6 +344,16 @@ def simulate(
         )
 
         # ---- 5. starts: per-site FIFO with capacity --------------------------
+        if avail_on:
+            # starts only claim cores up to the brown-out cap net of busy
+            # ones, at speed scaled by the window factor; a full outage
+            # (eff_cap = 0) admits no starts at all
+            busy = sites.cores - sites.free_cores
+            start_cores = jnp.clip(eff_cap - busy, 0, sites.free_cores)
+            sites_serv = sites._replace(speed=jnp.maximum(sites.speed * factor, 1e-9))
+        else:
+            start_cores = sites.free_cores
+            sites_serv = sites
         cand = jobs.state == ASSIGNED
         sort_site = jnp.where(cand, jobs.site, S).astype(jnp.int32)
         order = jnp.lexsort(
@@ -262,7 +367,7 @@ def simulate(
         cum_mem = _segment_exclusive_base(mem_s, site_s, S + 1)
         fits = (
             cand_s
-            & (cum_cores <= sites.free_cores[jnp.minimum(site_s, S - 1)])
+            & (cum_cores <= start_cores[jnp.minimum(site_s, S - 1)])
             & (cum_mem <= sites.free_memory[jnp.minimum(site_s, S - 1)] + 1e-6)
             & (site_s < S)
         )
@@ -292,7 +397,7 @@ def simulate(
                 (started & ~has_ds).astype(jnp.int32), start_site, num_segments=S + 1
             )[:S]
             share_in = n_flat_start[site_c].astype(jnp.float32)
-            t_serv = service_time(jobs, sites, site_c, share_in, share)
+            t_serv = service_time(jobs, sites_serv, site_c, share_in, share)
             D = rep.present.shape[0]
             d_c = jnp.clip(jobs.dataset, 0, D - 1)
             ds_bytes = rep.size[d_c]
@@ -303,7 +408,7 @@ def simulate(
             xfer = read & ~local
             t_net, _ = shared_transfer_times(network, src_c, site_c, ds_bytes, xfer)
             # swap the flat latency+stage-in terms for the WAN transfer
-            in_flat = stage_in_time(jobs, sites, site_c, share_in)
+            in_flat = stage_in_time(jobs, sites_serv, site_c, share_in)
             t_serv = jnp.where(has_ds, t_serv - in_flat + t_net, t_serv)
             # catalog bookkeeping: touch LRU clocks, cache-on-read insertion
             rep = touch(rep, jobs.dataset, src_c, xfer, clock)
@@ -328,7 +433,7 @@ def simulate(
             )
             dstate = data_policy.on_step(dstate, jobs, rep, started, xfer, clock)
         else:
-            t_serv = service_time(jobs, sites, site_c, share, share)
+            t_serv = service_time(jobs, sites_serv, site_c, share, share)
 
         u_fail = jax.random.uniform(k_fail, (J,))
         will_fail = started & (u_fail < sites.fail_rate[jnp.minimum(jobs.site, S - 1)])
@@ -357,6 +462,10 @@ def simulate(
         n_started = started.sum()
         n_completed = comp.sum()
         progressed = (n_started > 0) | (n_completed > 0) | jnp.any(arrived)
+        if avail_on:
+            # a preemption round changed state: give the dispatcher one more
+            # round to re-route the requeued jobs before halt detection
+            progressed = progressed | jnp.any(pre)
         halted = (~jnp.isfinite(t_next)) & ~progressed
 
         log = st.log
@@ -389,6 +498,7 @@ def simulate(
                 site_running=wr(log.site_running, site_running),
                 site_disk=wr(log.site_disk, disk_now),
                 site_net_in=wr(log.site_net_in, net_acc),
+                site_avail=wr(log.site_avail, factor),
                 cursor=log.cursor + write.astype(jnp.int32),
             )
             net_acc = jnp.where(write, 0.0, net_acc)
@@ -405,6 +515,7 @@ def simulate(
             replicas=rep,
             data_state=dstate,
             net_acc=net_acc,
+            avail=avail,
         )
 
     st0 = EngineState(
@@ -419,6 +530,7 @@ def simulate(
         replicas=replicas0,
         data_state=data_state0,
         net_acc=jnp.zeros((S,), jnp.float32),
+        avail=availability if avail_on else (),
     )
     st = jax.lax.while_loop(cond, body, st0)
     pstate = policy.on_end(st.policy_state, st.jobs, st.sites, st.clock)
@@ -434,6 +546,7 @@ def simulate(
         policy_state=pstate,
         replicas=st.replicas,
         data_state=dstate,
+        avail=st.avail if avail_on else None,
     )
 
 

@@ -121,6 +121,41 @@ def transfer_rows(result: SimResult, site_names=None) -> list[dict]:
     return rows
 
 
+def availability_rows(result: SimResult, site_names=None) -> list[dict]:
+    """One row per availability window (DESIGN.md §5): the outage/brown-out
+    calendar alongside how many running attempts each site's outages killed.
+
+    Rows are time-ordered by window start.  ``n_preempted`` is the site's
+    *cumulative* preemption counter (repeated on each of its rows); a run
+    without an ``AvailabilityState`` produces no rows.
+    """
+    avail = getattr(result, "avail", None)
+    if avail is None:
+        return []
+    start = np.asarray(avail.win_start)
+    end = np.asarray(avail.win_end)
+    factor = np.asarray(avail.win_factor)
+    preempt = np.asarray(avail.win_preempt)
+    n_pre = np.asarray(avail.n_preempted)
+    name = lambda s: (site_names[s] if site_names else f"site{s}")
+    rows = []
+    for s, w in sorted(zip(*np.nonzero(np.isfinite(start))), key=lambda i: start[i]):
+        f = float(factor[s, w])
+        rows.append(
+            dict(
+                time=round(float(start[s, w]), 3),
+                site=name(int(s)),
+                kind="outage" if f <= 0.0 else "brownout",
+                start=round(float(start[s, w]), 3),
+                end=round(float(end[s, w]), 3) if np.isfinite(end[s, w]) else float("inf"),
+                factor=f,
+                preempt=bool(preempt[s, w]),
+                n_preempted=int(n_pre[s]),
+            )
+        )
+    return rows
+
+
 def to_csv(rows: list[dict]) -> str:
     if not rows:
         return ""
@@ -142,7 +177,10 @@ def ml_dataset(result: SimResult) -> dict[str, np.ndarray]:
     Features (per finished/failed job): work, cores, memory, bytes_in/out,
     priority, site one-hot stats (speed, cores, bw, queue pressure at assign),
     plus data-movement columns (WAN bytes staged, stage-in duration, dataset
-    presence) so surrogates can learn transfer-dominated walltimes.
+    presence) so surrogates can learn transfer-dominated walltimes.  Runs with
+    an ``AvailabilityState`` append availability columns — the job's preempted
+    attempts, its final site's downtime fraction and cumulative preemptions —
+    so surrogates can learn outage-shaped walltime tails.
     Labels: walltime, queue_time, failed.
     """
     jobs = jax_to_np(result.jobs)
@@ -169,6 +207,27 @@ def ml_dataset(result: SimResult) -> dict[str, np.ndarray]:
         ],
         axis=-1,
     )[done]
+    names = [
+        "log_work", "cores", "memory_gb", "log_bytes_in", "log_bytes_out",
+        "priority", "site_speed", "site_cores", "site_log_bw", "site_gamma",
+        "site_fail_rate", "log_xfer_bytes", "xfer_time", "has_dataset",
+    ]
+    avail = getattr(result, "avail", None)
+    if avail is not None:
+        from .availability import downtime_fraction
+
+        down_frac = downtime_fraction(avail, float(result.makespan))
+        site_pre = np.asarray(avail.n_preempted, np.float64)
+        extra = np.stack(
+            [
+                jobs["preempted"].astype(np.float64),
+                down_frac[sid],
+                np.log1p(site_pre[sid]),
+            ],
+            axis=-1,
+        )[done]
+        feats = np.concatenate([feats, extra], axis=-1)
+        names += ["n_preempted", "site_downtime_frac", "site_log_preempted"]
     wall = (jobs["t_finish"] - jobs["t_start"])[done]
     queue = (jobs["t_start"] - jobs["arrival"])[done]
     failed = (jobs["state"] == FAILED)[done]
@@ -177,13 +236,7 @@ def ml_dataset(result: SimResult) -> dict[str, np.ndarray]:
         walltime=wall.astype(np.float32),
         queue_time=queue.astype(np.float32),
         failed=failed,
-        feature_names=np.array(
-            [
-                "log_work", "cores", "memory_gb", "log_bytes_in", "log_bytes_out",
-                "priority", "site_speed", "site_cores", "site_log_bw", "site_gamma",
-                "site_fail_rate", "log_xfer_bytes", "xfer_time", "has_dataset",
-            ]
-        ),
+        feature_names=np.array(names),
     )
 
 
@@ -211,6 +264,7 @@ def log_frames(result: SimResult) -> list[dict]:
                 site_running=log["site_running"][i].tolist(),
                 site_disk=log["site_disk"][i].tolist(),
                 site_net_in=log["site_net_in"][i].tolist(),
+                site_avail=log["site_avail"][i].tolist(),
             )
         )
     return out

@@ -44,6 +44,7 @@ def render_frame(
     total = np.asarray(sites_cores)
     disk = np.asarray(frame.get("site_disk", np.zeros_like(total, dtype=float)))
     net_in = np.asarray(frame.get("site_net_in", np.zeros_like(total, dtype=float)))
+    avail = np.asarray(frame.get("site_avail", np.ones_like(total, dtype=float)))
     show_data = disk.any() or net_in.any() or disk_cap is not None
     order = np.argsort(-(total - free))[:max_sites]
     for s in order:
@@ -55,6 +56,10 @@ def render_frame(
             f"  {name:>12s} |{pressure_bar(used, int(total[s]))}| "
             f"{used:>6d}/{int(total[s]):<6d} cores  run={int(running[s]):>5d} queue={int(queued[s]):>5d}"
         )
+        if avail[s] <= 0.0:
+            line += "  DOWN"
+        elif avail[s] < 1.0:
+            line += f"  avail=x{avail[s]:.2f}"
         if show_data:
             cap = float(np.asarray(disk_cap)[s]) if disk_cap is not None else 0.0
             bar = pressure_bar(int(disk[s]), int(cap), width=8) if cap > 0 else " " * 8
@@ -96,6 +101,14 @@ def network_timeline(result: SimResult) -> np.ndarray:
     """[T, S] WAN bytes staged into each site per logged frame."""
     frames = log_frames(result)
     rows = [np.asarray(f["site_net_in"], dtype=np.float64) for f in frames]
+    return np.stack(rows) if rows else np.zeros((0, result.sites.capacity))
+
+
+def availability_timeline(result: SimResult) -> np.ndarray:
+    """[T, S] availability factor per logged frame (1 up, (0,1) degraded,
+    0 down) — the DESIGN.md §5 dashboard feed for outage/brown-out studies."""
+    frames = log_frames(result)
+    rows = [np.asarray(f["site_avail"], dtype=np.float64) for f in frames]
     return np.stack(rows) if rows else np.zeros((0, result.sites.capacity))
 
 

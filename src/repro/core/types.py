@@ -49,6 +49,7 @@ class JobsState(NamedTuple):
     xfer_src: jax.Array   # i32[J] replica site the last stage-in read from (-1 none)
     xfer_bytes: jax.Array  # f32[J] WAN bytes moved by the last stage-in (0 = cache hit)
     xfer_time: jax.Array  # f32[J] stage-in duration of the last attempt
+    preempted: jax.Array  # i32[J] attempts cut short by site outages (DESIGN.md §5)
 
     @property
     def capacity(self) -> int:
@@ -95,6 +96,7 @@ class EventLog(NamedTuple):
     site_running: jax.Array  # i32[R, S]
     site_disk: jax.Array     # f32[R, S] storage-element bytes resident
     site_net_in: jax.Array   # f32[R, S] WAN bytes staged into each site this round
+    site_avail: jax.Array    # f32[R, S] availability factor (1 up, 0 down)
     cursor: jax.Array        # i32[] next write slot (wraps)
 
     @property
@@ -114,6 +116,7 @@ class EngineState(NamedTuple):
     replicas: object = None     # ReplicaState when the data subsystem is on
     data_state: object = ()     # DataPolicy-defined pytree
     net_acc: object = ()        # f32[S] WAN bytes staged since the last log write
+    avail: object = ()          # AvailabilityState when availability dynamics are on
 
 
 class SimResult(NamedTuple):
@@ -125,6 +128,7 @@ class SimResult(NamedTuple):
     policy_state: object
     replicas: object = None     # final ReplicaState (None without a DataPolicy)
     data_state: object = ()
+    avail: object = None        # final AvailabilityState (None without availability)
 
 
 def make_jobs(
@@ -181,6 +185,7 @@ def make_jobs(
         xfer_src=jnp.full((cap,), -1, jnp.int32),
         xfer_bytes=jnp.zeros((cap,), jnp.float32),
         xfer_time=jnp.zeros((cap,), jnp.float32),
+        preempted=jnp.zeros((cap,), jnp.int32),
     )
 
 
@@ -248,5 +253,6 @@ def make_log(rows: int, n_sites: int) -> EventLog:
         site_running=jnp.zeros((r, n_sites), jnp.int32),
         site_disk=jnp.zeros((r, n_sites), jnp.float32),
         site_net_in=jnp.zeros((r, n_sites), jnp.float32),
+        site_avail=jnp.ones((r, n_sites), jnp.float32),
         cursor=jnp.zeros((), jnp.int32),
     )

@@ -1,0 +1,24 @@
+"""Shared test configuration: hypothesis profiles.
+
+CI runs with ``HYPOTHESIS_PROFILE=ci`` (see .github/workflows/ci.yml): fewer,
+derandomized examples with no deadline, so property tests are reproducible
+and never flake on shared-runner jitter or jit compile time.  Local runs get
+the ``dev`` profile (deadline off — every new shape recompiles the engine).
+"""
+import os
+
+try:
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile(
+        "ci",
+        deadline=None,
+        max_examples=8,
+        derandomize=True,
+        suppress_health_check=[HealthCheck.too_slow],
+        print_blob=True,
+    )
+    settings.register_profile("dev", deadline=None)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
+except ImportError:  # property tests importorskip hypothesis themselves
+    pass

@@ -1,0 +1,542 @@
+"""Availability dynamics (DESIGN.md §5): downtime, preemption, degradation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DONE,
+    FAILED,
+    QUEUED,
+    atlas_like_platform,
+    availability_factor,
+    downtime_fraction,
+    flaky_sites,
+    get_policy,
+    load_availability,
+    load_platform,
+    maintenance_calendar,
+    make_availability,
+    make_jobs,
+    make_sites,
+    next_window_edge,
+    rolling_brownout,
+    sample_correlated_outages,
+    simulate,
+    simulate_ensemble,
+    synthetic_panda_jobs,
+)
+from repro.core.events import availability_rows, log_frames, ml_dataset
+from repro.core.monitor import availability_timeline, render_frame
+
+
+def mini_jobs(n=8, cores=1, arrival=None, work=100.0):
+    return make_jobs(
+        job_id=np.arange(n),
+        arrival=arrival if arrival is not None else np.zeros(n),
+        work=np.full(n, work),
+        cores=np.full(n, cores),
+        memory=np.full(n, 1.0),
+        bytes_in=np.zeros(n),
+        bytes_out=np.zeros(n),
+    )
+
+
+def one_site(cores=4, speed=10.0):
+    return make_sites(cores=[cores], speed=[speed], memory=[64.0], bw_in=[1e12], bw_out=[1e12])
+
+
+def run(jobs, sites, av=None, policy="fastest_site", **kw):
+    return simulate(jobs, sites, get_policy(policy), jax.random.PRNGKey(0), availability=av, **kw)
+
+
+# --------------------------------------------------------------------------
+# state & pure helpers
+# --------------------------------------------------------------------------
+
+
+def test_make_availability_shapes_and_validation():
+    av = make_availability(3, [dict(site=1, start=10.0, end=20.0, factor=0.5)])
+    assert av.win_start.shape == (3, 1)
+    assert float(av.win_start[1, 0]) == 10.0
+    assert not np.isfinite(np.asarray(av.win_start)[[0, 2]]).any()
+    with pytest.raises(ValueError):
+        make_availability(2, [dict(site=5, start=0.0, end=1.0)])
+    with pytest.raises(ValueError):
+        make_availability(2, [dict(site=0, start=5.0, end=5.0)])
+    with pytest.raises(ValueError):
+        make_availability(2, [dict(site=0, start=0.0, end=1.0, factor=2.0)])
+    with pytest.raises(ValueError):
+        make_availability(2, [(0, 0.0, 1.0), (0, 2.0, 3.0)], max_windows=1)
+
+
+def test_availability_factor_half_open_and_overlap():
+    av = make_availability(
+        2,
+        [
+            dict(site=0, start=10.0, end=20.0, factor=0.0),
+            dict(site=0, start=15.0, end=30.0, factor=0.5),
+        ],
+    )
+    f = lambda t: np.asarray(availability_factor(av, jnp.float32(t)))
+    np.testing.assert_allclose(f(5.0), [1.0, 1.0])
+    np.testing.assert_allclose(f(10.0), [0.0, 1.0])   # start inclusive
+    np.testing.assert_allclose(f(17.0), [0.0, 1.0])   # overlap: most severe wins
+    np.testing.assert_allclose(f(20.0), [0.5, 1.0])   # end exclusive
+    np.testing.assert_allclose(f(30.0), [1.0, 1.0])
+
+
+def test_next_window_edge_is_strictly_ahead():
+    av = make_availability(2, [(0, 10.0, 20.0), (1, 15.0, 25.0)])
+    edge = lambda t: float(next_window_edge(av, jnp.float32(t)))
+    assert edge(0.0) == 10.0
+    assert edge(10.0) == 15.0  # the edge at t itself no longer counts
+    assert edge(20.0) == 25.0
+    assert edge(25.0) == float("inf")
+
+
+def test_downtime_fraction_clips_to_horizon():
+    av = make_availability(
+        2,
+        [
+            dict(site=0, start=50.0, end=150.0),               # half inside [0, 100]
+            dict(site=1, start=0.0, end=40.0, factor=0.5),     # brown-out: not downtime
+        ],
+    )
+    np.testing.assert_allclose(downtime_fraction(av, 100.0), [0.5, 0.0])
+
+
+def test_downtime_fraction_merges_overlapping_windows():
+    # correlated incidents can overlap on one site: [100, 500) u [300, 700)
+    # covers 600s, not 800s
+    av = make_availability(
+        1, [dict(site=0, start=100.0, end=500.0), dict(site=0, start=300.0, end=700.0)]
+    )
+    np.testing.assert_allclose(downtime_fraction(av, 1000.0), [0.6])
+
+
+# --------------------------------------------------------------------------
+# engine semantics
+# --------------------------------------------------------------------------
+
+
+def test_no_availability_vs_empty_calendar_bit_for_bit():
+    """The §5 no-op guarantee: an empty calendar reproduces the plain engine
+    exactly — same arrays, same clock, same round count."""
+    jobs = synthetic_panda_jobs(120, seed=0, duration=900.0)
+    sites = atlas_like_platform(4, seed=1, fail_rate=0.05)
+    r0 = simulate(jobs, sites, get_policy("panda_dispatch"), jax.random.PRNGKey(0), log_rows=64)
+    r1 = simulate(
+        jobs, sites, get_policy("panda_dispatch"), jax.random.PRNGKey(0), log_rows=64,
+        availability=make_availability(4),
+    )
+    for k in r0.jobs._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(r0.jobs, k)), np.asarray(getattr(r1.jobs, k)), err_msg=f"jobs.{k}"
+        )
+    for k in r0.sites._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(r0.sites, k)), np.asarray(getattr(r1.sites, k)), err_msg=f"sites.{k}"
+        )
+    for k in r0.log._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(r0.log, k)), np.asarray(getattr(r1.log, k)), err_msg=f"log.{k}"
+        )
+    assert float(r0.makespan) == float(r1.makespan)
+    assert int(r0.rounds) == int(r1.rounds)
+    assert r0.avail is None and r1.avail is not None
+
+
+def test_outage_blocks_starts_until_window_end():
+    # 8 jobs / 4 cores: wave 2 would start at t=10 but the site is down
+    # [5, 50) -> it starts exactly at the window end
+    av = make_availability(1, [dict(site=0, start=5.0, end=50.0)])
+    res = run(mini_jobs(8), one_site(), av)
+    starts = np.sort(np.asarray(res.jobs.t_start)[:8])
+    np.testing.assert_allclose(starts[:4], 0.0, atol=1e-5)
+    np.testing.assert_allclose(starts[4:], 50.0, atol=1e-4)
+    assert float(res.makespan) == pytest.approx(60.0, abs=1e-3)
+    assert int(res.avail.n_preempted[0]) == 0  # drain: nobody was killed
+
+
+def test_drain_lets_running_jobs_finish_inside_window():
+    av = make_availability(1, [dict(site=0, start=5.0, end=50.0, preempt=False)])
+    res = run(mini_jobs(4), one_site(), av)
+    # all 4 started at 0, finish at 10 *inside* the outage window
+    np.testing.assert_allclose(np.asarray(res.jobs.t_finish)[:4], 10.0, atol=1e-4)
+    assert (np.asarray(res.jobs.preempted)[:4] == 0).all()
+
+
+def test_preemption_requeues_with_retry_and_loses_progress():
+    av = make_availability(1, [dict(site=0, start=5.0, end=50.0, preempt=True)])
+    res = run(mini_jobs(8), one_site(), av)
+    jobs = res.jobs
+    state = np.asarray(jobs.state)[:8]
+    assert (state == DONE).all()
+    # the 4 running jobs were killed at t=5, requeued, and rerun from scratch
+    assert (np.asarray(jobs.retries)[:8] == [1, 1, 1, 1, 0, 0, 0, 0]).all()
+    assert (np.asarray(jobs.preempted)[:8] == [1, 1, 1, 1, 0, 0, 0, 0]).all()
+    assert int(res.avail.n_preempted[0]) == 4
+    starts = np.sort(np.asarray(jobs.t_start)[:8])
+    np.testing.assert_allclose(starts[:4], 50.0, atol=1e-4)  # first restart wave
+    assert float(res.makespan) == pytest.approx(70.0, abs=1e-3)
+
+
+def test_preemption_exhausts_retries_to_failed():
+    av = make_availability(1, [dict(site=0, start=5.0, end=50.0, preempt=True)])
+    res = run(mini_jobs(4), one_site(), av, max_retries=0)
+    jobs = res.jobs
+    assert (np.asarray(jobs.state)[:4] == FAILED).all()
+    np.testing.assert_allclose(np.asarray(jobs.t_finish)[:4], 5.0, atol=1e-5)
+    assert int(res.avail.n_preempted[0]) == 4
+    # terminal preemptions are not machine failures: n_failed stays clean
+    assert int(res.sites.n_failed[0]) == 0
+
+
+def test_job_finishing_exactly_at_window_start_is_not_preempted():
+    # work 50 @ speed 10 -> t_finish = 5.0 == window start: completions run
+    # before preemption in the round, so the job finishes
+    av = make_availability(1, [dict(site=0, start=5.0, end=50.0, preempt=True)])
+    res = run(mini_jobs(1, work=50.0), one_site(), av)
+    assert int(res.jobs.state[0]) == DONE
+    assert float(res.jobs.t_finish[0]) == pytest.approx(5.0, abs=1e-5)
+    assert int(res.jobs.preempted[0]) == 0
+
+
+def test_preempted_jobs_reroute_to_surviving_site():
+    sites = make_sites(
+        cores=[4, 4], speed=[10.0, 5.0], memory=[64.0, 64.0],
+        bw_in=[1e12, 1e12], bw_out=[1e12, 1e12],
+    )
+    # fastest_site puts everything on site 0; an open-ended preempting outage
+    # forces the retry onto the slow site 1
+    av = make_availability(2, [dict(site=0, start=5.0, end=1e9, preempt=True)])
+    res = run(mini_jobs(2), sites, av)
+    jobs = res.jobs
+    assert (np.asarray(jobs.state)[:2] == DONE).all()
+    assert (np.asarray(jobs.site)[:2] == 1).all()
+    np.testing.assert_allclose(np.asarray(jobs.t_start)[:2], 5.0, atol=1e-4)
+    assert float(res.makespan) == pytest.approx(5.0 + 100.0 / 5.0, abs=1e-3)
+
+
+def test_assigned_jobs_bounce_off_preempted_site():
+    # job 1 sits ASSIGNED behind job 0 on the fast 1-core site when the
+    # preempting outage hits: both must re-route to the slow site instead of
+    # job 1 stranding in the dead site's queue for the whole window
+    sites = make_sites(
+        cores=[1, 1], speed=[10.0, 5.0], memory=[64.0, 64.0],
+        bw_in=[1e12, 1e12], bw_out=[1e12, 1e12],
+    )
+    av = make_availability(2, [dict(site=0, start=5.0, end=1000.0, preempt=True)])
+    res = run(mini_jobs(2), sites, av)
+    jobs = res.jobs
+    assert (np.asarray(jobs.state)[:2] == DONE).all()
+    assert (np.asarray(jobs.site)[:2] == 1).all()
+    np.testing.assert_allclose(np.sort(np.asarray(jobs.t_start)[:2]), [5.0, 25.0], atol=1e-4)
+    # only the running job burned an attempt; the queued one just moved
+    assert np.asarray(jobs.preempted)[:2].tolist() == [1, 0]
+    assert np.asarray(jobs.retries)[:2].tolist() == [1, 0]
+    assert float(res.makespan) == pytest.approx(45.0, abs=1e-3)
+
+
+def test_down_site_is_infeasible_until_window_ends():
+    # the only site is down [0, 100): the arriving job waits at the server and
+    # the window end is the *only* event that wakes the engine
+    av = make_availability(1, [dict(site=0, start=0.0, end=100.0)])
+    res = run(mini_jobs(1), one_site(), av)
+    assert int(res.jobs.state[0]) == DONE
+    assert float(res.jobs.t_start[0]) == pytest.approx(100.0, abs=1e-4)
+    assert int(res.rounds) <= 6
+
+
+def test_permanent_outage_halts_cleanly():
+    av = make_availability(1, [dict(site=0, start=0.0, end=float("inf"))])
+    res = run(mini_jobs(1), one_site(), av, max_rounds=50)
+    assert int(res.jobs.state[0]) == QUEUED  # stuck, but no spin
+    assert int(res.rounds) < 10
+
+
+def test_brownout_scales_speed_and_caps_cores():
+    av = make_availability(1, [dict(site=0, start=0.0, end=1000.0, factor=0.5)])
+    res = run(mini_jobs(4), one_site(), av)
+    # cap floor(4 * 0.5) = 2 usable cores; speed halved -> 20s per wave
+    starts = np.sort(np.asarray(res.jobs.t_start)[:4])
+    np.testing.assert_allclose(starts, [0.0, 0.0, 20.0, 20.0], atol=1e-4)
+    wall = np.asarray(res.jobs.t_finish - res.jobs.t_start)[:4]
+    np.testing.assert_allclose(wall, 20.0, atol=1e-3)
+    assert float(res.makespan) == pytest.approx(40.0, abs=1e-3)
+
+
+def test_brownout_flooring_cores_to_zero_routes_like_outage():
+    # factor 0.1 on a 4-core site floors usable cores to 0: a de facto
+    # outage, so the dispatcher must route to the slower-but-up site instead
+    # of queueing jobs behind a site that cannot start anything
+    sites = make_sites(
+        cores=[4, 4], speed=[10.0, 5.0], memory=[64.0, 64.0],
+        bw_in=[1e12, 1e12], bw_out=[1e12, 1e12],
+    )
+    av = make_availability(2, [dict(site=0, start=0.0, end=10000.0, factor=0.1)])
+    res = run(mini_jobs(4), sites, av)
+    assert (np.asarray(res.jobs.site)[:4] == 1).all()
+    assert float(res.makespan) == pytest.approx(100.0 / 5.0, abs=1e-3)
+
+
+def test_quantum_does_not_skip_short_preempting_windows():
+    # jobs start at the first quantum tick (t=300) and run 2000s; the window
+    # [500, 700) is shorter than the quantum, so the next round's clock (800)
+    # steps clean over it — the jobs running through it must still lose the
+    # attempt (interval-overlap preemption), not sail on untouched
+    av = make_availability(1, [dict(site=0, start=500.0, end=700.0, preempt=True)])
+    jobs = mini_jobs(4, work=20000.0)
+    res = run(jobs, one_site(), av, quantum=300.0)
+    assert int(res.avail.n_preempted[0]) == 4
+    assert (np.asarray(res.jobs.retries)[:4] == 1).all()
+    assert (np.asarray(res.jobs.state)[:4] == DONE).all()
+
+
+def test_quantum_preempts_job_finishing_inside_skipped_window():
+    # job starts at the first quantum tick (300) with a 250s service time, so
+    # t_finish=550 falls inside the preempting window [500, 700) that the
+    # next round (clock 800) steps over: the outage killed it at 500, so it
+    # must be preempted and rerun, not retired DONE at 550
+    av = make_availability(1, [dict(site=0, start=500.0, end=700.0, preempt=True)])
+    res = run(mini_jobs(1, work=2500.0), one_site(cores=1), av, quantum=300.0)
+    assert int(res.jobs.preempted[0]) == 1
+    assert int(res.jobs.retries[0]) == 1
+    assert int(res.jobs.state[0]) == DONE
+    assert float(res.jobs.t_start[0]) >= 700.0  # rerun after the window
+    # and a finish safely before the window is untouched by the kill mask
+    res2 = run(mini_jobs(1, work=1500.0), one_site(cores=1), av, quantum=300.0)
+    assert int(res2.jobs.preempted[0]) == 0
+    assert float(res2.jobs.t_finish[0]) == pytest.approx(450.0, abs=1e-4)
+
+
+def test_brownout_ends_restore_full_speed_for_new_starts():
+    av = make_availability(1, [dict(site=0, start=0.0, end=15.0, factor=0.5)])
+    res = run(mini_jobs(4), one_site(), av)
+    starts = np.sort(np.asarray(res.jobs.t_start)[:4])
+    # wave 1 (2 jobs, degraded 20s) holds 2 cores; the window end at 15 is an
+    # event round that restores the core cap, so wave 2 starts at 15 on the
+    # other 2 cores at full speed (10s) and service pricing is per-start
+    np.testing.assert_allclose(starts, [0.0, 0.0, 15.0, 15.0], atol=1e-4)
+    wall = np.asarray(res.jobs.t_finish - res.jobs.t_start)
+    order = np.argsort(np.asarray(res.jobs.t_start)[:4])
+    np.testing.assert_allclose(wall[:4][order], [20.0, 20.0, 10.0, 10.0], atol=1e-3)
+    assert float(res.makespan) == pytest.approx(25.0, abs=1e-3)
+
+
+def test_acceptance_midrun_outage_changes_outcome_baseline_intact():
+    """ISSUE acceptance: a mid-run outage on the loaded site strictly
+    increases makespan and produces nonzero preemption counters, while the
+    same seed with no windows reproduces the no-availability baseline
+    bit-for-bit."""
+    jobs = synthetic_panda_jobs(150, seed=7, duration=1200.0)
+    sites = atlas_like_platform(3, seed=8)
+    pol = get_policy("panda_dispatch")
+    key = jax.random.PRNGKey(0)
+
+    base = simulate(jobs, sites, pol, key)
+    # hit the most-loaded site mid-run with a preempting outage
+    loaded = int(np.argmax(np.asarray(base.sites.n_finished)))
+    t_mid = float(base.makespan) * 0.5
+    av = make_availability(
+        3, [dict(site=loaded, start=t_mid, end=t_mid + float(base.makespan), preempt=True)]
+    )
+    hit = simulate(jobs, sites, pol, key, availability=av)
+    assert float(hit.makespan) > float(base.makespan)
+    assert int(hit.avail.n_preempted.sum()) > 0
+    assert (np.asarray(hit.jobs.state)[:150] == DONE).all()
+
+    # same seed, empty calendar == baseline, bit for bit
+    clean = simulate(jobs, sites, pol, key, availability=make_availability(3))
+    for k in base.jobs._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(base.jobs, k)), np.asarray(getattr(clean.jobs, k)), err_msg=k
+        )
+    assert float(base.makespan) == float(clean.makespan)
+
+
+def test_quantum_rounds_still_terminate_with_windows():
+    jobs = synthetic_panda_jobs(60, seed=2, duration=600.0)
+    sites = atlas_like_platform(3, seed=3)
+    av = maintenance_calendar(3, horizon=40_000.0, period=9_000.0, duration=1_500.0)
+    res = simulate(
+        jobs, sites, get_policy("panda_dispatch"), jax.random.PRNGKey(0),
+        availability=av, quantum=50.0,
+    )
+    assert (np.asarray(res.jobs.state)[:60] == DONE).all()
+
+
+def test_ensemble_vmap_jit_smoke_with_availability():
+    jobs = synthetic_panda_jobs(50, seed=4, duration=600.0)
+    sites = atlas_like_platform(3, seed=5)
+    av = make_availability(3, [dict(site=0, start=100.0, end=4000.0, preempt=True)])
+    cands = sites.speed[None, :] * jnp.array([[0.5], [1.0], [2.0]])
+    res = simulate_ensemble(
+        jobs, sites, get_policy("panda_dispatch"), jax.random.PRNGKey(1),
+        speed_candidates=cands, availability=av,
+    )
+    assert res.makespan.shape == (3,)
+    assert np.isfinite(np.asarray(res.makespan)).all()
+    assert res.avail.n_preempted.shape == (3, 3)
+
+
+def test_availability_composes_with_data_policy():
+    from repro.core import get_data_policy, make_replicas, uniform_network, zipf_dataset_sizes
+
+    rng = np.random.default_rng(0)
+    jobs = make_jobs(
+        job_id=np.arange(32), arrival=np.zeros(32), work=np.full(32, 50.0),
+        cores=np.ones(32, np.int32), memory=np.full(32, 1.0),
+        bytes_in=np.zeros(32), bytes_out=np.zeros(32),
+        dataset=rng.integers(0, 6, 32),
+    )
+    sites = make_sites(
+        cores=np.full(3, 8), speed=np.full(3, 10.0), memory=np.full(3, 64.0),
+        bw_in=np.full(3, 1e12), bw_out=np.full(3, 1e12),
+    )
+    net = uniform_network(3, bw=1e9, latency=0.01)
+    rep = make_replicas(
+        zipf_dataset_sizes(6, seed=1, mean_bytes=1e9), disk_capacity=np.full(3, 1e12), seed=2
+    )
+    av = make_availability(3, [dict(site=0, start=2.0, end=30.0, preempt=True)])
+    res = simulate(
+        jobs, sites, get_policy("round_robin"), jax.random.PRNGKey(0),
+        data_policy=get_data_policy("cache_on_read"), network=net, replicas=rep,
+        availability=av,
+    )
+    state = np.asarray(res.jobs.state)[np.asarray(res.jobs.valid)]
+    assert (state == DONE).all()
+    assert int(res.avail.n_preempted.sum()) > 0
+    assert float(res.replicas.bytes_moved) > 0
+
+
+# --------------------------------------------------------------------------
+# scenario builders & input layer
+# --------------------------------------------------------------------------
+
+
+def test_maintenance_calendar_staggers_and_repeats():
+    av = maintenance_calendar(4, horizon=15 * 86400.0, period=7 * 86400.0, duration=3600.0)
+    start = np.asarray(av.win_start)
+    assert (np.isfinite(start).sum(axis=1) >= 1).all()  # every site gets a slot
+    assert np.isfinite(start[0]).sum() == 2             # unstaggered site: 2 periods fit
+    firsts = np.sort(start[:, 0])
+    assert (np.diff(firsts) > 0).all()  # staggered, no simultaneous downtime
+    assert not np.asarray(av.win_preempt).any()  # maintenance drains
+
+
+def test_flaky_sites_only_hits_flagged_sites():
+    av = flaky_sites(5, [1, 3], horizon=86400.0, mtbf=7200.0, seed=0)
+    finite = np.isfinite(np.asarray(av.win_start))
+    assert finite[[1, 3]].any()
+    assert not finite[[0, 2, 4]].any()
+    preempt = np.asarray(av.win_preempt)
+    assert preempt[finite].all()
+    # bool-mask selection and an empty selection both work
+    av_mask = flaky_sites(5, np.array([False, True, False, True, False]),
+                          horizon=86400.0, mtbf=7200.0, seed=0)
+    np.testing.assert_array_equal(np.asarray(av_mask.win_start), np.asarray(av.win_start))
+    av_none = flaky_sites(4, [], horizon=86400.0)
+    assert not np.isfinite(np.asarray(av_none.win_start)).any()
+
+
+def test_rolling_brownout_tiles_the_horizon():
+    av = rolling_brownout(4, horizon=4000.0, factor=0.25)
+    start, end = np.asarray(av.win_start), np.asarray(av.win_end)
+    order = np.argsort(start[:, 0])
+    np.testing.assert_allclose(start[order, 0], [0.0, 1000.0, 2000.0, 3000.0])
+    np.testing.assert_allclose(end[order, 0], [1000.0, 2000.0, 3000.0, 4000.0])
+    assert np.allclose(np.asarray(av.win_factor)[:, 0], 0.25)
+
+
+def test_correlated_outages_share_tier_event_times():
+    tier = np.array([0, 0, 0, 1, 1, 1])
+    av = sample_correlated_outages(
+        6, tier, horizon=86400.0, events_per_tier=3.0, p_follow=1.0, jitter=0.0, seed=1
+    )
+    start = np.asarray(av.win_start)
+    for t in (0, 1):
+        members = np.flatnonzero(tier == t)
+        ref = start[members[0]][np.isfinite(start[members[0]])]
+        for m in members[1:]:
+            got = start[m][np.isfinite(start[m])]
+            np.testing.assert_allclose(got, ref)  # p_follow=1, no jitter: identical
+    assert np.isfinite(start).any()
+
+
+def test_load_availability_json_roundtrip():
+    sites, names, _ = load_platform(
+        {"sites": [{"name": "CERN", "cores": 100}, {"name": "BNL", "cores": 50}]}
+    )
+    av = load_availability(
+        '{"windows": [{"site": "BNL", "start": 10, "end": 20, "preempt": true},'
+        ' {"site": 0, "start": 5, "end": 8, "factor": 0.5}]}',
+        names,
+    )
+    assert float(av.win_start[1, 0]) == 10.0 and bool(av.win_preempt[1, 0])
+    assert float(av.win_factor[0, 0]) == 0.5
+    with pytest.raises(ValueError):
+        load_availability({"windows": [{"site": "FNAL", "start": 0, "end": 1}]}, names)
+
+
+# --------------------------------------------------------------------------
+# events / monitor export
+# --------------------------------------------------------------------------
+
+
+def test_availability_rows_schema_and_order():
+    av = make_availability(
+        2,
+        [
+            dict(site=1, start=5.0, end=9.0, preempt=True),
+            dict(site=0, start=2.0, end=4.0, factor=0.5),
+        ],
+    )
+    res = run(mini_jobs(4), make_sites(
+        cores=[4, 4], speed=[10.0, 10.0], memory=[64.0, 64.0],
+        bw_in=[1e12, 1e12], bw_out=[1e12, 1e12]), av)
+    rows = availability_rows(res, site_names=["CERN", "BNL"])
+    assert [r["site"] for r in rows] == ["CERN", "BNL"]
+    assert rows[0]["kind"] == "brownout" and rows[1]["kind"] == "outage"
+    assert {"time", "site", "kind", "start", "end", "factor", "preempt", "n_preempted"} == set(
+        rows[0]
+    )
+    times = [r["time"] for r in rows]
+    assert times == sorted(times)
+
+
+def test_availability_rows_empty_without_state():
+    res = run(mini_jobs(2), one_site())
+    assert availability_rows(res) == []
+
+
+def test_ml_dataset_availability_features():
+    av = make_availability(1, [dict(site=0, start=5.0, end=50.0, preempt=True)])
+    res = run(mini_jobs(8), one_site(), av)
+    ds = ml_dataset(res)
+    names = list(ds["feature_names"])
+    assert names[-3:] == ["n_preempted", "site_downtime_frac", "site_log_preempted"]
+    assert ds["features"].shape == (8, len(names))
+    assert np.isfinite(ds["features"]).all()
+    pre_col = ds["features"][:, names.index("n_preempted")]
+    assert pre_col.sum() == 4  # the preempted first wave
+    # without availability the schema is unchanged
+    assert "n_preempted" not in list(ml_dataset(run(mini_jobs(2), one_site()))["feature_names"])
+
+
+def test_monitor_availability_timeline_and_frame():
+    av = make_availability(1, [dict(site=0, start=5.0, end=50.0)])
+    res = run(mini_jobs(8), one_site(), av, log_rows=64)
+    tl = availability_timeline(res)
+    assert tl.shape[1] == 1
+    assert tl.min() == 0.0 and tl.max() == 1.0  # saw both down and up rounds
+    frames = log_frames(res)
+    down = [f for f in frames if f["site_avail"][0] == 0.0]
+    assert down
+    txt = render_frame(down[0], np.asarray(res.sites.cores))
+    assert "DOWN" in txt
+    av_b = make_availability(1, [dict(site=0, start=0.0, end=1000.0, factor=0.5)])
+    res_b = run(mini_jobs(4), one_site(), av_b, log_rows=16)
+    txt_b = render_frame(log_frames(res_b)[0], np.asarray(res_b.sites.cores))
+    assert "avail=x0.50" in txt_b

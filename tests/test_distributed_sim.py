@@ -5,6 +5,52 @@ import sys
 
 import pytest
 
+
+def test_sharded_equivalence_in_process_tiny_mesh():
+    """Non-subprocess sharded-equivalence check: the distributed entry point
+    (device_put + NamedSharding + mesh context) must reproduce the plain
+    engine exactly on whatever mesh this process has — including the
+    availability path, whose calendar is replicated like ``sites``."""
+    import jax
+    import numpy as np
+
+    from repro.core import (
+        atlas_like_platform,
+        get_policy,
+        make_availability,
+        simulate,
+        synthetic_panda_jobs,
+    )
+    from repro.core.distributed import simulate_distributed
+
+    jobs = synthetic_panda_jobs(64, seed=0, duration=600.0)
+    sites = atlas_like_platform(4, seed=1)
+    pol = get_policy("shortest_wait")
+    av = make_availability(4, [dict(site=0, start=50.0, end=5000.0, preempt=True)])
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+
+    for kw in ({}, {"availability": av}):
+        r1 = simulate(jobs, sites, pol, jax.random.PRNGKey(0), max_rounds=20_000, **kw)
+        r2 = simulate_distributed(
+            jobs, sites, pol, jax.random.PRNGKey(0), mesh, max_rounds=20_000, **kw
+        )
+        assert float(r1.makespan) == float(r2.makespan)
+        assert int(r1.rounds) == int(r2.rounds)
+        J = jobs.capacity
+        np.testing.assert_array_equal(
+            np.asarray(r1.jobs.state), np.asarray(r2.jobs.state)[:J]
+        )
+        np.testing.assert_allclose(
+            np.asarray(r1.jobs.t_start), np.asarray(r2.jobs.t_start)[:J], rtol=1e-6
+        )
+        np.testing.assert_allclose(
+            np.asarray(r1.jobs.t_finish), np.asarray(r2.jobs.t_finish)[:J], rtol=1e-6
+        )
+        np.testing.assert_array_equal(
+            np.asarray(r1.sites.n_finished), np.asarray(r2.sites.n_finished)
+        )
+    assert int(r2.avail.n_preempted.sum()) == int(r1.avail.n_preempted.sum())
+
 SCRIPT = r"""
 import jax, numpy as np
 from jax.sharding import Mesh

@@ -1,0 +1,89 @@
+"""Golden-trace regression: a fixed-seed scenario's exact outcome snapshot.
+
+Engine refactors that silently change semantics — a reordered round step, a
+different tie-break, an extra RNG draw — shift these numbers and fail tier-1
+immediately, instead of surfacing months later as a calibration drift.
+
+The snapshot lives in ``tests/data/golden_trace.json`` and is compared for
+*exact* equality (float32 values round-trip exactly through ``float``/JSON).
+After an intentional semantics change, regenerate with
+
+    REGEN_GOLDEN=1 pytest tests/test_golden_trace.py
+
+and commit the diff alongside the change that caused it.
+"""
+import json
+import os
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    atlas_like_platform,
+    get_policy,
+    make_availability,
+    simulate,
+    synthetic_panda_jobs,
+)
+
+GOLDEN = pathlib.Path(__file__).parent / "data" / "golden_trace.json"
+
+
+def _snapshot_one(res) -> dict:
+    valid = np.asarray(res.jobs.valid)
+    state = np.asarray(res.jobs.state)[valid]
+    return dict(
+        makespan=float(res.makespan),
+        rounds=int(res.rounds),
+        state_counts={str(s): int((state == s).sum()) for s in range(6)},
+        site_n_assigned=np.asarray(res.sites.n_assigned).tolist(),
+        site_n_finished=np.asarray(res.sites.n_finished).tolist(),
+        site_n_failed=np.asarray(res.sites.n_failed).tolist(),
+        sum_retries=int(np.asarray(res.jobs.retries)[valid].sum()),
+        # exact per-job timestamps for a probe subset (full arrays would bloat
+        # the snapshot without adding sensitivity)
+        t_start_head=[float(t) for t in np.asarray(res.jobs.t_start)[:8]],
+        t_finish_head=[float(t) for t in np.asarray(res.jobs.t_finish)[:8]],
+        n_preempted=(
+            np.asarray(res.avail.n_preempted).tolist() if res.avail is not None else None
+        ),
+    )
+
+
+def compute_snapshot() -> dict:
+    jobs = synthetic_panda_jobs(60, seed=11, duration=900.0)
+    sites = atlas_like_platform(4, seed=12, fail_rate=0.05)
+    pol = get_policy("panda_dispatch")
+    key = jax.random.PRNGKey(0)
+    base = simulate(jobs, sites, pol, key)
+    # site 3 carries the whole workload under this seed: hit it mid-run
+    av = make_availability(
+        4,
+        [
+            dict(site=3, start=2000.0, end=20000.0, preempt=True),
+            dict(site=2, start=500.0, end=5000.0, factor=0.5),
+        ],
+    )
+    outage = simulate(jobs, sites, pol, key, availability=av)
+    return dict(baseline=_snapshot_one(base), outage=_snapshot_one(outage))
+
+
+def test_golden_trace_exact():
+    snap = compute_snapshot()
+    if os.environ.get("REGEN_GOLDEN"):
+        GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN.write_text(json.dumps(snap, indent=2) + "\n")
+        pytest.skip(f"regenerated {GOLDEN}")
+    expected = json.loads(GOLDEN.read_text())
+    assert snap == expected
+
+
+def test_golden_scenario_is_sensitive():
+    """The committed scenario must actually exercise the dynamics it guards:
+    the outage run preempts jobs and takes longer than the baseline."""
+    expected = json.loads(GOLDEN.read_text())
+    assert sum(expected["outage"]["n_preempted"]) > 0
+    assert expected["outage"]["makespan"] > expected["baseline"]["makespan"]
+    assert expected["baseline"]["n_preempted"] is None

@@ -1,4 +1,11 @@
-"""Hypothesis property tests on simulator invariants."""
+"""Hypothesis property tests on simulator invariants.
+
+The conservation-law harness at the bottom is the engine-invariant contract
+(ISSUE 2): for random workloads and scenarios — with and without availability
+calendars and data policies — every valid job terminates, site resources
+return to their initial values, storage stays within capacity, and the
+per-site counters exactly account for every attempt.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,7 +14,20 @@ import pytest
 pytest.importorskip("hypothesis", reason="property tests need the 'dev' extra")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import DONE, FAILED, get_policy, make_jobs, make_sites, simulate
+from repro.core import (
+    DONE,
+    FAILED,
+    catalog_invariants,
+    get_data_policy,
+    get_policy,
+    make_availability,
+    make_jobs,
+    make_replicas,
+    make_sites,
+    simulate,
+    uniform_network,
+    zipf_dataset_sizes,
+)
 from repro.core.events import transition_rows
 
 POLICIES = ["random", "round_robin", "least_loaded", "shortest_wait", "panda_dispatch"]
@@ -102,3 +122,142 @@ def test_determinism_same_key(seed, frac):
     r2 = build(30, 3, seed, frac, "panda_dispatch")
     np.testing.assert_array_equal(np.asarray(r1.jobs.t_start), np.asarray(r2.jobs.t_start))
     assert float(r1.makespan) == float(r2.makespan)
+
+
+# --------------------------------------------------------------------------
+# engine-invariant conservation laws (ISSUE 2 harness)
+# --------------------------------------------------------------------------
+
+N_SITES = 4  # fixed shape: hypothesis varies values, not compile shapes
+
+
+def build_scenario(n_jobs, seed, policy, *, fail_rate, with_avail, with_data):
+    """Random-but-terminating scenario: sites always feasible, every outage
+    window finite, so each valid job must end DONE or FAILED."""
+    rng = np.random.default_rng(seed)
+    cores = np.where(rng.random(n_jobs) < 0.4, 8, 1)
+    jobs = make_jobs(
+        job_id=np.arange(n_jobs),
+        arrival=np.sort(rng.uniform(0, 100.0, n_jobs)),
+        work=rng.lognormal(np.log(400.0), 1.0, n_jobs),
+        cores=cores,
+        memory=np.where(cores > 1, 16.0, 2.0),
+        bytes_in=rng.lognormal(np.log(1e8), 1.0, n_jobs),
+        bytes_out=rng.lognormal(np.log(1e7), 1.0, n_jobs),
+        dataset=rng.integers(0, 8, n_jobs) if with_data else None,
+        capacity=n_jobs + 3,  # padding rows must stay inert
+    )
+    sites = make_sites(
+        cores=rng.integers(8, 48, N_SITES),
+        speed=rng.uniform(2.0, 20.0, N_SITES),
+        memory=rng.uniform(64.0, 256.0, N_SITES),
+        bw_in=rng.uniform(1e8, 1e10, N_SITES),
+        bw_out=rng.uniform(1e8, 1e10, N_SITES),
+        fail_rate=np.full(N_SITES, fail_rate),
+    )
+    kw = {}
+    if with_avail:
+        windows = []
+        for s in range(N_SITES - 1):  # keep one site clean so work always drains
+            for _ in range(int(rng.integers(0, 3))):
+                t0 = float(rng.uniform(0.0, 400.0))
+                windows.append(
+                    dict(
+                        site=s,
+                        start=t0,
+                        end=t0 + float(rng.uniform(20.0, 300.0)),
+                        factor=float(rng.choice([0.0, 0.0, 0.5])),
+                        preempt=bool(rng.random() < 0.7),
+                    )
+                )
+        kw["availability"] = make_availability(N_SITES, windows)
+    if with_data:
+        kw["data_policy"] = get_data_policy("cache_on_read")
+        kw["network"] = uniform_network(N_SITES, bw=1e9, latency=0.01)
+        # site 0 is the data lake holding every origin; the rest run tight
+        # caches (~2 datasets) so insertion/eviction churns under load
+        kw["replicas"] = make_replicas(
+            zipf_dataset_sizes(8, seed=seed % 1000, mean_bytes=1e9),
+            disk_capacity=np.array([1e12] + [2.5e9] * (N_SITES - 1)),
+            origin=np.zeros(8, np.int32),
+        )
+    res = simulate(jobs, sites, get_policy(policy), jax.random.PRNGKey(seed), **kw)
+    return res, jobs, sites
+
+
+def assert_conservation_laws(res, jobs0, sites0):
+    valid = np.asarray(res.jobs.valid)
+    state = np.asarray(res.jobs.state)[valid]
+    # 1. termination: every valid job ends DONE or FAILED
+    assert np.isin(state, [DONE, FAILED]).all()
+    # padding rows never move
+    assert (np.asarray(res.jobs.state)[~valid] == DONE).all()
+    assert not np.isfinite(np.asarray(res.jobs.t_start)[~valid]).any()
+    # 2. resources return to initial values
+    np.testing.assert_array_equal(
+        np.asarray(res.sites.free_cores), np.asarray(sites0.cores)
+    )
+    np.testing.assert_allclose(
+        np.asarray(res.sites.free_memory), np.asarray(sites0.memory), rtol=1e-4, atol=1e-2
+    )
+    # 3. per-site counters account for every attempt exactly:
+    #    finishes == DONE jobs; every unsuccessful attempt is a machine
+    #    failure or a preemption; each one is a resubmission or terminal
+    n_done = int((state == DONE).sum())
+    n_term_failed = int((state == FAILED).sum())
+    retries = int(np.asarray(res.jobs.retries)[valid].sum())
+    n_pre = int(np.asarray(res.avail.n_preempted).sum()) if res.avail is not None else 0
+    assert int(np.asarray(res.sites.n_finished).sum()) == n_done
+    assert int(np.asarray(res.sites.n_failed).sum()) + n_pre == retries + n_term_failed
+    if res.avail is not None:
+        assert n_pre == int(np.asarray(res.jobs.preempted)[valid].sum())
+    # 4. storage never exceeds capacity
+    if res.replicas is not None:
+        inv = catalog_invariants(res.replicas)
+        assert inv["capacity_ok"] and inv["accounting_ok"] and inv["origins_ok"]
+    # 5. timestamps stay ordered for every terminal job
+    a = np.asarray(res.jobs.arrival)[valid]
+    s = np.asarray(res.jobs.t_start)[valid]
+    f = np.asarray(res.jobs.t_finish)[valid]
+    assert (a <= s + 1e-5).all() and (s < f).all()
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n_jobs=st.integers(10, 60),
+    seed=st.integers(0, 2**16),
+    fail_rate=st.sampled_from([0.0, 0.3]),
+    policy=st.sampled_from(POLICIES),
+)
+def test_conservation_laws_plain(n_jobs, seed, fail_rate, policy):
+    res, jobs0, sites0 = build_scenario(
+        n_jobs, seed, policy, fail_rate=fail_rate, with_avail=False, with_data=False
+    )
+    assert_conservation_laws(res, jobs0, sites0)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n_jobs=st.integers(10, 60),
+    seed=st.integers(0, 2**16),
+    fail_rate=st.sampled_from([0.0, 0.2]),
+    policy=st.sampled_from(["round_robin", "least_loaded", "panda_dispatch"]),
+)
+def test_conservation_laws_with_availability(n_jobs, seed, fail_rate, policy):
+    res, jobs0, sites0 = build_scenario(
+        n_jobs, seed, policy, fail_rate=fail_rate, with_avail=True, with_data=False
+    )
+    assert_conservation_laws(res, jobs0, sites0)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    n_jobs=st.integers(10, 48),
+    seed=st.integers(0, 2**16),
+    with_avail=st.booleans(),
+)
+def test_conservation_laws_with_data_policy(n_jobs, seed, with_avail):
+    res, jobs0, sites0 = build_scenario(
+        n_jobs, seed, "round_robin", fail_rate=0.1, with_avail=with_avail, with_data=True
+    )
+    assert_conservation_laws(res, jobs0, sites0)
