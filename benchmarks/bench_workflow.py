@@ -1,0 +1,89 @@
+"""Workflow DAG throughput (DESIGN.md §6): the cost of the dependency gate
+and the coupled data-movement path.
+
+The gate adds one ``[J, P]`` gather per round plus a second after
+completions; rounds grow because stages serialize.  This bench measures
+(a) per-round overhead of ``workflow=`` on an identical workload (DAG edges
+vs. ``workflow=None``), (b) DAG scaling in chain count, and (c) the full
+coupled path: ATLAS-like 4-stage MC with output materialization through the
+replica catalog.  ``--tiny`` is the seconds-sized CI smoke configuration.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (
+    atlas_like_network,
+    atlas_like_platform,
+    atlas_mc_workflows,
+    chain_workflows,
+    get_data_policy,
+    get_policy,
+    scenario_replicas,
+    simulate,
+)
+
+from .common import csv_row
+
+
+def one_case(jobs, sites, policy, *, iters=2, **kw):
+    kw.setdefault("max_rounds", 200_000)
+    res = simulate(jobs, sites, policy, jax.random.PRNGKey(0), **kw)
+    jax.block_until_ready(res.makespan)
+    ts = []
+    for i in range(iters):
+        t0 = time.perf_counter()
+        res = simulate(jobs, sites, policy, jax.random.PRNGKey(i), **kw)
+        jax.block_until_ready(res.makespan)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), int(res.rounds), res
+
+
+def main():
+    tiny = "--tiny" in sys.argv
+    if tiny:
+        chain_grid = (8, 32)
+        n_stages, n_sites, n_mc = 4, 4, 8
+    else:
+        chain_grid = (32, 128, 512)
+        n_stages, n_sites, n_mc = 4, 16, 64
+    pol = get_policy("panda_dispatch")
+
+    print("# dependency-gate overhead: same jobs, DAG edges vs workflow=None")
+    for n_chains in chain_grid:
+        scn = chain_workflows(n_chains, n_stages, seed=0, arrival_span=3600.0)
+        sites = atlas_like_platform(n_sites, seed=1)
+        w_flat, r_flat, _ = one_case(scn.jobs, sites, pol)
+        w_dag, r_dag, _ = one_case(scn.jobs, sites, pol, workflow=scn.workflow)
+        print(csv_row(
+            f"wf_gate_C{n_chains}x{n_stages}_S{n_sites}",
+            w_dag / max(r_dag, 1) * 1e6,
+            f"rounds={r_dag};wall_s={w_dag:.3f};flat_rounds={r_flat};flat_wall_s={w_flat:.3f}",
+        ))
+
+    print("# coupled path: ATLAS 4-stage MC, outputs through the replica catalog")
+    scn = atlas_mc_workflows(n_mc, seed=0, arrival_span=3600.0)
+    sites = atlas_like_platform(n_sites, seed=1)
+    net = atlas_like_network(n_sites, seed=2)
+    rep = scenario_replicas(scn, disk_capacity=np.full(n_sites, 1e15))
+    # round_robin base scatters stages across sites, so the bench actually
+    # pays WAN materialize->stage-in traffic instead of all-local cache hits
+    wall, rounds, res = one_case(
+        scn.jobs, sites, get_policy("critical_path_first", base="round_robin"),
+        workflow=scn.workflow, data_policy=get_data_policy("cache_on_read"),
+        network=net, replicas=rep,
+    )
+    print(csv_row(
+        f"wf_atlas_mc_T{n_mc}_S{n_sites}",
+        wall / max(rounds, 1) * 1e6,
+        f"rounds={rounds};wall_s={wall:.3f};produced={int(res.wf.n_produced)};"
+        f"xfers={int(res.replicas.n_transfers)}",
+    ))
+
+
+if __name__ == "__main__":
+    main()

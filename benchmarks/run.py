@@ -1,10 +1,19 @@
 """Benchmark harness: one module per paper table/figure (+ beyond-paper).
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows.  With ``--json`` each suite
+additionally writes a ``BENCH_<name>.json`` result file (parsed rows +
+status) so the perf trajectory is machine-readable across commits:
+
+    python -m benchmarks.run [suite] [--json] [--out DIR]
 """
 from __future__ import annotations
 
+import contextlib
+import io
+import json
+import pathlib
 import sys
+import time
 import traceback
 
 from . import (
@@ -17,6 +26,7 @@ from . import (
     bench_events,
     bench_job_scaling,
     bench_site_scaling,
+    bench_workflow,
 )
 
 SUITES = {
@@ -29,16 +39,73 @@ SUITES = {
     "ensemble_vmap": bench_ensemble.main,
     "data_movement": bench_data_movement.main,
     "availability": bench_availability.main,
+    "workflow": bench_workflow.main,
 }
 
 
+def parse_rows(text: str) -> list[dict]:
+    """Recover structured rows from the ``csv_row`` lines a suite printed."""
+    rows = []
+    for line in text.splitlines():
+        parts = line.split(",", 2)
+        if len(parts) < 2 or line.startswith(("#", "=")):
+            continue
+        try:
+            us = float(parts[1])
+        except ValueError:
+            continue
+        rows.append(dict(name=parts[0], us_per_call=us,
+                         derived=parts[2] if len(parts) > 2 else ""))
+    return rows
+
+
+def write_json(name: str, fn, out_dir: pathlib.Path) -> list[str]:
+    """Run one suite with stdout captured; write ``BENCH_<name>.json``."""
+    buf = io.StringIO()
+    t0 = time.perf_counter()
+    err = None
+    try:
+        with contextlib.redirect_stdout(buf):
+            fn()
+    except Exception as e:  # noqa: BLE001
+        err = f"{type(e).__name__}: {e}"
+        traceback.print_exc()
+    text = buf.getvalue()
+    sys.stdout.write(text)
+    payload = dict(
+        suite=name,
+        status="failed" if err else "ok",
+        error=err,
+        wall_s=round(time.perf_counter() - t0, 3),
+        rows=parse_rows(text),
+    )
+    path = out_dir / f"BENCH_{name}.json"
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {path} ({len(payload['rows'])} rows)")
+    return [name] if err else []
+
+
 def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    args = [a for a in sys.argv[1:]]
+    as_json = "--json" in args
+    out_dir = pathlib.Path(".")
+    if "--out" in args:
+        i = args.index("--out")
+        if i + 1 >= len(args) or args[i + 1].startswith("-"):
+            raise SystemExit("--out needs a directory argument")
+        out_dir = pathlib.Path(args[i + 1])
+        out_dir.mkdir(parents=True, exist_ok=True)
+        del args[i: i + 2]
+    args = [a for a in args if a != "--json"]
+    only = args[0] if args else None
     failures = []
     for name, fn in SUITES.items():
         if only and only != name:
             continue
         print(f"\n=== {name} ===")
+        if as_json:
+            failures += write_json(name, fn, out_dir)
+            continue
         try:
             fn()
         except Exception as e:  # noqa: BLE001

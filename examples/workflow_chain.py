@@ -1,0 +1,127 @@
+"""Workflow DAG demo: ATLAS-like 4-stage MC production chains.
+
+Two experiments on the same DAG machinery (DESIGN.md §6):
+
+1. *Data-aware workflow scheduling.*  Each chain's stages hand multi-GB
+   intermediate datasets down the chain; the producing stage materializes its
+   output at the site it ran on.  ``workflow_locality`` steers children to
+   their parents' sites (local cache hits), while a placement-blind schedule
+   with ``always_remote`` drags every intermediate across a thin WAN —
+   locality-aware beats remote-always on makespan.
+
+2. *Critical-path-first start order.*  One deep chain competes with a
+   backlog of independent filler jobs on a small site.  FIFO strands each
+   chain stage behind the backlog; ``critical_path_first`` ranks the site
+   queue by upward rank, pulling the chain to the head — beating FIFO on
+   makespan.
+
+    PYTHONPATH=src python examples/workflow_chain.py
+"""
+import jax
+import numpy as np
+
+from repro.core import (
+    atlas_mc_workflows,
+    get_data_policy,
+    get_policy,
+    make_jobs,
+    make_sites,
+    make_workflow,
+    scenario_replicas,
+    simulate,
+    uniform_network,
+)
+from repro.core.events import transfer_rows, workflow_rows
+from repro.core.monitor import render_workflows
+
+
+def locality_vs_remote():
+    n_sites, n_tasks = 4, 8
+    sites = make_sites(
+        cores=[32] * n_sites,
+        speed=[10.0, 9.0, 11.0, 10.0],
+        memory=[512.0] * n_sites,
+        bw_in=[1e9] * n_sites,
+        bw_out=[1e9] * n_sites,
+    )
+    # thin WAN: hauling a 4 GB HITS file across it costs ~400 s per hop
+    net = uniform_network(n_sites, bw=1e7, latency=0.05)
+    scn = atlas_mc_workflows(n_tasks, seed=0, arrival_span=600.0)
+
+    print("=== 1. data-aware workflow scheduling (ATLAS 4-stage chains) ===")
+    print(f"{'schedule':>42s} | {'makespan':>9s} | {'WAN moved':>9s} | {'hits':>4s}")
+    results = {}
+    for label, policy, dpol in (
+        ("remote-always (placement-blind)", get_policy("round_robin"), "always_remote"),
+        ("locality-aware (workflow_locality)",
+         get_policy("workflow_locality", workflow=scn.workflow, base="round_robin"),
+         "cache_on_read"),
+    ):
+        res = simulate(
+            scn.jobs, sites, policy, jax.random.PRNGKey(0),
+            workflow=scn.workflow, data_policy=get_data_policy(dpol),
+            network=net, replicas=scenario_replicas(scn, np.full(n_sites, 1e14)),
+        )
+        results[label] = res
+        rep = res.replicas
+        print(f"{label:>42s} | {float(res.makespan):>8.0f}s | "
+              f"{float(rep.bytes_moved) / 1e9:>7.1f}GB | {int(rep.n_hits):>4d}")
+    remote = results["remote-always (placement-blind)"]
+    local = results["locality-aware (workflow_locality)"]
+    speedup = float(remote.makespan) / float(local.makespan)
+    saved = (float(remote.replicas.bytes_moved) - float(local.replicas.bytes_moved)) / 1e9
+    print(f"locality-aware speedup: {speedup:.2f}x  (WAN traffic cut by {saved:.1f} GB)")
+
+    print("\nstage-in transfers of produced datasets (remote-always, first 4):")
+    for r in transfer_rows(remote)[:4]:
+        print(f"  t={r['time']:>8.1f}s  job {r['job_id']:>3d} reads dataset {r['dataset']:>3d} "
+              f"{r['src']} -> {r['dst']}  {r['bytes'] / 1e9:.2f} GB in {r['duration']:.1f}s")
+
+    print("\nper-workflow timeline (locality-aware):")
+    print(render_workflows(local, max_rows=6))
+    return speedup
+
+
+def critical_path_vs_fifo():
+    n_fill, n_stages = 48, 6
+    n = n_fill + n_stages
+    jobs = make_jobs(
+        job_id=np.arange(n),
+        arrival=np.concatenate([np.zeros(n_fill), np.full(n_stages, 1.0)]),
+        work=np.full(n, 1000.0),
+        cores=np.ones(n),
+        memory=np.ones(n),
+        bytes_in=np.zeros(n),
+        bytes_out=np.zeros(n),
+    )
+    jobs, wf = make_workflow(
+        jobs, [(n_fill + k, n_fill + k + 1) for k in range(n_stages - 1)]
+    )
+    sites = make_sites(cores=[8], speed=[10.0], memory=[1e4], bw_in=[1e12], bw_out=[1e12])
+
+    print("\n=== 2. critical-path-first vs FIFO (deep chain + backlog) ===")
+    out = {}
+    for label, pol in (
+        ("fifo (arrival order)", get_policy("panda_dispatch")),
+        ("critical_path_first", get_policy("critical_path_first")),
+    ):
+        res = simulate(jobs, sites, pol, jax.random.PRNGKey(0), workflow=wf)
+        out[label] = float(res.makespan)
+        rows = workflow_rows(res)
+        chain = max(rows, key=lambda r: r["dag_depth"])
+        print(f"{label:>24s} | makespan {out[label]:>7.0f}s | "
+              f"chain finished @ {chain['t_end']:>7.0f}s")
+    speedup = out["fifo (arrival order)"] / out["critical_path_first"]
+    print(f"critical-path-first speedup: {speedup:.2f}x")
+    return speedup
+
+
+def main():
+    s1 = locality_vs_remote()
+    s2 = critical_path_vs_fifo()
+    assert s1 > 1.0, "locality-aware should beat remote-always on makespan"
+    assert s2 > 1.0, "critical-path-first should beat FIFO on makespan"
+
+
+if __name__ == "__main__":
+    main()

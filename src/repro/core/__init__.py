@@ -8,6 +8,7 @@ event-level ML dataset (``events``) and monitoring (``monitor``).
 """
 from .types import (  # noqa: F401
     ASSIGNED,
+    CANCELLED,
     DONE,
     FAILED,
     PENDING,
@@ -47,8 +48,21 @@ from .replicas import (  # noqa: F401
     catalog_invariants,
     insert_replicas,
     make_replicas,
+    materialize_outputs,
     nearest_source,
     zipf_dataset_sizes,
+)
+from .workflows import (  # noqa: F401
+    WorkflowScenario,
+    WorkflowState,
+    atlas_mc_workflows,
+    chain_workflows,
+    make_workflow,
+    map_reduce_workflows,
+    parent_status,
+    scenario_replicas,
+    validate_workflow_data,
+    workflow_locality,
 )
 from .datapolicies import (  # noqa: F401
     DataPlugin,
@@ -68,6 +82,7 @@ from .platform import (  # noqa: F401
 from .policies import (  # noqa: F401
     AllocationPlugin,
     Policy,
+    critical_path_first,
     get_policy,
     make_policy,
     register,

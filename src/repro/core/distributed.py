@@ -64,6 +64,11 @@ def shard_jobs(jobs: JobsState, sites: SiteState, mesh: Mesh, axis: str = "data"
             bytes_out=raw["bytes_out"],
             priority=raw["priority"],
             dataset=raw["dataset"],
+            wf_id=raw["wf_id"],
+            n_parents=raw["n_parents"],
+            dag_depth=raw["dag_depth"],
+            wf_crit=raw["wf_crit"],
+            out_dataset=raw["out_dataset"],
             capacity=J + pad,
         )._replace(
             state=jnp.pad(jnp.asarray(raw["state"]), (0, pad), constant_values=4),
@@ -75,13 +80,29 @@ def shard_jobs(jobs: JobsState, sites: SiteState, mesh: Mesh, axis: str = "data"
 
 def _replicate_aux(kw: dict, mesh: Mesh) -> dict:
     """Place auxiliary engine state (availability calendar, replica catalog,
-    network matrices) fully replicated on the mesh, mirroring ``sites``."""
+    network matrices, workflow DAG) fully replicated on the mesh, mirroring
+    ``sites`` — the parent matrix is read-only inside the round loop, so
+    replication costs one copy and the ``state[parents]`` gather lowers to an
+    all-gather of the (small) sharded state vector."""
     rep = NamedSharding(mesh, P())
     out = dict(kw)
-    for key in ("availability", "network", "replicas"):
+    for key in ("availability", "network", "replicas", "workflow"):
         if out.get(key) is not None:
             out[key] = jax.tree.map(lambda x: jax.device_put(jnp.asarray(x), rep), out[key])
     return out
+
+
+def _pad_workflow(kw: dict, capacity: int) -> dict:
+    """Grow the workflow parent matrix to a padded job capacity (padding rows
+    are parentless, so they stay inert like the padded jobs themselves)."""
+    wf = kw.get("workflow")
+    if wf is not None and wf.parents.shape[-2] != capacity:
+        pad = capacity - wf.parents.shape[-2]
+        kw = dict(kw)
+        kw["workflow"] = wf._replace(
+            parents=jnp.pad(wf.parents, ((0, pad), (0, 0)), constant_values=-1)
+        )
+    return kw
 
 
 def simulate_distributed(
@@ -97,7 +118,7 @@ def simulate_distributed(
     """Job-parallel simulation: identical semantics to ``engine.simulate``
     (same event rounds, same FIFO), with XLA SPMD distributing each round."""
     jobs_d, sites_d = shard_jobs(jobs, sites, mesh, axis)
-    kw = _replicate_aux(kw, mesh)
+    kw = _replicate_aux(_pad_workflow(kw, jobs_d.capacity), mesh)
     with use_mesh(mesh):
         return simulate(jobs_d, sites_d, policy, rng, **kw)
 

@@ -10,6 +10,9 @@ transition that fires at that instant as masked dense updates:
     2. availability  — sites whose outage window covers t* preempt running
                        jobs (→ QUEUED with a retry) or drain; brown-outs scale
                        effective speed/cores (DESIGN.md §5)
+    2c. workflow     — DAG gate: terminally-failed parents cascade-cancel
+                       descendants; children unlock when all parents are DONE
+                       (DESIGN.md §6)
     3. arrivals      — pending jobs with arrival  <= t*  → QUEUED at the server
     4. assignment    — the policy plugin scores QUEUED jobs against sites;
                        feasible best-site rows become ASSIGNED (site queue)
@@ -131,6 +134,7 @@ def simulate(
     network=None,
     replicas=None,
     availability=None,
+    workflow=None,
     max_rounds: int = 100_000,
     horizon: float = float("inf"),
     log_rows: int = 0,
@@ -162,6 +166,16 @@ def simulate(
     window factor.  Runs with ``availability=None`` take a code path with no
     extra ops or RNG draws, so they stay bit-for-bit identical to the
     pre-availability engine.
+
+    Passing a ``workflow`` (a ``WorkflowState`` DAG, DESIGN.md §6) gates the
+    dispatcher on dependencies: a job stays PENDING until every parent is
+    DONE, a terminally failed parent cascade-cancels its descendants (one
+    DAG level per round, counted in ``wf.n_cancelled``), and — when the data
+    subsystem is on — each completing parent materializes its
+    ``jobs.out_dataset`` into the replica catalog at the site it ran on, so
+    children's stage-in is priced from where the parent actually executed.
+    ``workflow=None`` adds no ops or RNG draws: bit-for-bit identical to the
+    workflow-free engine.
     """
     S = sites0.capacity
     J = jobs0.capacity
@@ -185,6 +199,17 @@ def simulate(
             raise ValueError(
                 f"availability has {availability.win_start.shape[-2]} sites, platform has {S}"
             )
+    wf_on = workflow is not None
+    if wf_on:
+        from .types import CANCELLED
+        from .workflows import parent_status
+
+        if workflow.parents.shape[-2] != J:
+            raise ValueError(
+                f"workflow has {workflow.parents.shape[-2]} job rows, workload has {J}"
+            )
+        if data_on:
+            from .replicas import materialize_outputs
 
     def cond(st: EngineState):
         active = (
@@ -205,7 +230,13 @@ def simulate(
         rng, k_fail, k_frac, k_policy = jax.random.split(st.rng, 4)
 
         # ---- 1. advance the clock to the next event ------------------------
-        arr_t = jnp.where((jobs.state == PENDING) & jobs.valid, jobs.arrival, INF)
+        arrivable = (jobs.state == PENDING) & jobs.valid
+        if wf_on:
+            # gated jobs are not an event source: their wake-up event is the
+            # last parent's completion, which fin_t already carries
+            ready0, _ = parent_status(st.wf.parents, jobs.state)
+            arrivable = arrivable & ready0
+        arr_t = jnp.where(arrivable, jobs.arrival, INF)
         fin_t = jnp.where(jobs.state == RUNNING, jobs.t_finish, INF)
         t_next = jnp.minimum(arr_t.min(), fin_t.min())
         if avail_on:
@@ -313,8 +344,23 @@ def simulate(
         else:
             factor = jnp.ones((S,), jnp.float32)
 
+        # ---- 2c. workflow DAG: cascade-cancel + dependency gate --------------
+        wf = st.wf
+        cancel_now = ()
+        if wf_on:
+            # recompute against post-completion states so a child whose last
+            # parent finished *this round* arrives (and can start) this round
+            ready, dead = parent_status(wf.parents, jobs.state)
+            # a dead ancestor can only be seen from PENDING: children never
+            # leave PENDING before all parents are DONE, and DONE is terminal
+            cancel_now = (jobs.state == PENDING) & jobs.valid & dead
+            jobs = jobs._replace(state=jnp.where(cancel_now, CANCELLED, jobs.state))
+            wf = wf._replace(n_cancelled=wf.n_cancelled + cancel_now.sum().astype(jnp.int32))
+
         # ---- 3. arrivals -----------------------------------------------------
         arrived = (jobs.state == PENDING) & (jobs.arrival <= clock) & jobs.valid
+        if wf_on:
+            arrived = arrived & ready
         jobs = jobs._replace(state=jnp.where(arrived, QUEUED, jobs.state))
 
         # ---- 4. policy assignment (the plugin hot spot) ----------------------
@@ -356,9 +402,18 @@ def simulate(
             sites_serv = sites
         cand = jobs.state == ASSIGNED
         sort_site = jnp.where(cand, jobs.site, S).astype(jnp.int32)
-        order = jnp.lexsort(
-            (jnp.arange(J), jobs.arrival, -jobs.priority, sort_site)
-        )
+        rank_fn = getattr(policy, "rank", None)
+        if rank_fn is None:
+            order = jnp.lexsort(
+                (jnp.arange(J), jobs.arrival, -jobs.priority, sort_site)
+            )
+        else:
+            # policy rank is a secondary start-order key: priority still
+            # dominates, rank breaks ties before arrival time
+            rank_val = rank_fn(jobs, sites, pstate, clock)
+            order = jnp.lexsort(
+                (jnp.arange(J), jobs.arrival, -rank_val, -jobs.priority, sort_site)
+            )
         site_s = sort_site[order]
         cand_s = cand[order]
         cores_s = jnp.where(cand_s, jobs.cores[order], 0).astype(jnp.int32)
@@ -390,6 +445,18 @@ def simulate(
         rep, dstate = st.replicas, st.data_state
         net_in_now = jnp.zeros((S,), jnp.float32)
         if data_on:
+            if wf_on:
+                # workflow output production (DESIGN.md §6): completing
+                # parents materialize their output dataset at the site they
+                # ran on — before source selection, so a child starting this
+                # same round already stages in from the parent's site
+                produced = done_now & (jobs.out_dataset >= 0)
+                rep = materialize_outputs(
+                    rep, jobs.out_dataset, jnp.clip(jobs.site, 0, S - 1), produced, clock
+                )
+                wf = wf._replace(
+                    n_produced=wf.n_produced + produced.sum().astype(jnp.int32)
+                )
             has_ds = jobs.dataset >= 0
             # only flat-link stage-ins contend for the site ingress link;
             # dataset jobs stage over the WAN matrix instead
@@ -466,6 +533,10 @@ def simulate(
             # a preemption round changed state: give the dispatcher one more
             # round to re-route the requeued jobs before halt detection
             progressed = progressed | jnp.any(pre)
+        if wf_on:
+            # a cancel round changed state: the cascade needs one round per
+            # DAG level even when no timed event remains
+            progressed = progressed | jnp.any(cancel_now)
         halted = (~jnp.isfinite(t_next)) & ~progressed
 
         log = st.log
@@ -516,6 +587,7 @@ def simulate(
             data_state=dstate,
             net_acc=net_acc,
             avail=avail,
+            wf=wf,
         )
 
     st0 = EngineState(
@@ -531,6 +603,7 @@ def simulate(
         data_state=data_state0,
         net_acc=jnp.zeros((S,), jnp.float32),
         avail=availability if avail_on else (),
+        wf=workflow if wf_on else (),
     )
     st = jax.lax.while_loop(cond, body, st0)
     pstate = policy.on_end(st.policy_state, st.jobs, st.sites, st.clock)
@@ -547,6 +620,7 @@ def simulate(
         replicas=st.replicas,
         data_state=dstate,
         avail=st.avail if avail_on else None,
+        wf=st.wf if wf_on else None,
     )
 
 

@@ -14,7 +14,7 @@ import json
 
 import numpy as np
 
-from .types import DONE, FAILED, SimResult
+from .types import CANCELLED, DONE, FAILED, STATE_NAMES, SimResult
 
 # transition kinds, in tie-break order at equal timestamps: completions free
 # cores before same-instant assigns/starts consume them (engine round order)
@@ -121,6 +121,72 @@ def transfer_rows(result: SimResult, site_names=None) -> list[dict]:
     return rows
 
 
+def job_rows(result: SimResult, site_names=None) -> list[dict]:
+    """One row per valid job with a *stable* schema across engine features.
+
+    The workflow columns (``n_parents``/``dag_depth``/``wf_id``) are emitted
+    for every run — constant ``0``/``0``/``-1`` without a DAG — so exported
+    datasets from plain and workflow runs concatenate cleanly (DESIGN.md §6).
+    Non-finite timestamps export as ``None`` (JSON-safe).
+    """
+    jobs = jax_to_np(result.jobs)
+    name = lambda s: (site_names[s] if site_names else f"site{s}") if s >= 0 else None
+    t = lambda x: round(float(x), 3) if np.isfinite(x) else None
+    rows = []
+    for j in range(len(jobs["arrival"])):
+        if not jobs["valid"][j]:
+            continue
+        rows.append(
+            dict(
+                job_id=int(jobs["job_id"][j]),
+                state=STATE_NAMES[int(jobs["state"][j])],
+                site=name(int(jobs["site"][j])),
+                arrival=t(jobs["arrival"][j]),
+                t_start=t(jobs["t_start"][j]),
+                t_finish=t(jobs["t_finish"][j]),
+                cores=int(jobs["cores"][j]),
+                work=float(jobs["work"][j]),
+                retries=int(jobs["retries"][j]),
+                dataset=int(jobs["dataset"][j]),
+                n_parents=int(jobs["n_parents"][j]),
+                dag_depth=int(jobs["dag_depth"][j]),
+                wf_id=int(jobs["wf_id"][j]),
+            )
+        )
+    return rows
+
+
+def workflow_rows(result: SimResult) -> list[dict]:
+    """One row per workflow (``wf_id`` group): job counts by outcome, DAG
+    depth, submit time, and makespan — the per-workflow companion to the
+    per-job stream (DESIGN.md §6).  Runs without a DAG produce no rows."""
+    jobs = jax_to_np(result.jobs)
+    sel = jobs["valid"] & (jobs["wf_id"] >= 0)
+    rows = []
+    for w in np.unique(jobs["wf_id"][sel]):
+        m = sel & (jobs["wf_id"] == w)
+        state = jobs["state"][m]
+        fin = jobs["t_finish"][m]
+        fin = fin[np.isfinite(fin)]
+        t0 = float(jobs["arrival"][m].min())
+        done = bool((state == DONE).all())
+        rows.append(
+            dict(
+                wf_id=int(w),
+                n_jobs=int(m.sum()),
+                n_done=int((state == DONE).sum()),
+                n_failed=int((state == FAILED).sum()),
+                n_cancelled=int((state == CANCELLED).sum()),
+                dag_depth=int(jobs["dag_depth"][m].max()),
+                t_submit=round(t0, 3),
+                t_end=round(float(fin.max()), 3) if fin.size else None,
+                makespan=round(float(fin.max()) - t0, 3) if (done and fin.size) else None,
+                completed=done,
+            )
+        )
+    return rows
+
+
 def availability_rows(result: SimResult, site_names=None) -> list[dict]:
     """One row per availability window (DESIGN.md §5): the outage/brown-out
     calendar alongside how many running attempts each site's outages killed.
@@ -180,7 +246,9 @@ def ml_dataset(result: SimResult) -> dict[str, np.ndarray]:
     presence) so surrogates can learn transfer-dominated walltimes.  Runs with
     an ``AvailabilityState`` append availability columns — the job's preempted
     attempts, its final site's downtime fraction and cumulative preemptions —
-    so surrogates can learn outage-shaped walltime tails.
+    so surrogates can learn outage-shaped walltime tails.  Workflow DAG
+    columns (``n_parents``/``dag_depth``/``wf_id``) are always present
+    (0/0/-1 without a DAG) so the schema is stable across run kinds.
     Labels: walltime, queue_time, failed.
     """
     jobs = jax_to_np(result.jobs)
@@ -204,6 +272,11 @@ def ml_dataset(result: SimResult) -> dict[str, np.ndarray]:
             np.log1p(jobs["xfer_bytes"]),
             jobs["xfer_time"],
             (jobs["dataset"] >= 0).astype(np.float64),
+            # workflow DAG features — constant 0/0/-1 without a workflow, so
+            # the export schema is stable across plain and DAG runs
+            jobs["n_parents"].astype(np.float64),
+            jobs["dag_depth"].astype(np.float64),
+            jobs["wf_id"].astype(np.float64),
         ],
         axis=-1,
     )[done]
@@ -211,6 +284,7 @@ def ml_dataset(result: SimResult) -> dict[str, np.ndarray]:
         "log_work", "cores", "memory_gb", "log_bytes_in", "log_bytes_out",
         "priority", "site_speed", "site_cores", "site_log_bw", "site_gamma",
         "site_fail_rate", "log_xfer_bytes", "xfer_time", "has_dataset",
+        "n_parents", "dag_depth", "wf_id",
     ]
     avail = getattr(result, "avail", None)
     if avail is not None:
@@ -253,10 +327,7 @@ def log_frames(result: SimResult) -> list[dict]:
             dict(
                 round=int(log["round_idx"][i]),
                 time=float(log["time"][i]),
-                counts={k: int(v) for k, v in zip(
-                    ("pending", "queued", "assigned", "running", "finished", "failed"),
-                    log["counts"][i],
-                )},
+                counts={k: int(v) for k, v in zip(STATE_NAMES, log["counts"][i])},
                 started=int(log["n_started"][i]),
                 completed=int(log["n_completed"][i]),
                 site_free=log["site_free"][i].tolist(),

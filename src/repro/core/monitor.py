@@ -112,6 +112,66 @@ def availability_timeline(result: SimResult) -> np.ndarray:
     return np.stack(rows) if rows else np.zeros((0, result.sites.capacity))
 
 
+def workflow_timeline(result: SimResult) -> tuple[np.ndarray, np.ndarray]:
+    """Per-workflow stage-completion matrix (DESIGN.md §6 dashboard feed).
+
+    Returns ``(wf_ids[W], t_done[W, Dmax+1])``: for each workflow and DAG
+    depth level, the time the *last* job at that depth finished (``nan``
+    where the level never fully finished — failed/cancelled levels stay
+    nan).  Runs without a DAG return empty arrays.
+    """
+    from .types import DONE
+
+    jobs = np.asarray(result.jobs.wf_id)
+    valid = np.asarray(result.jobs.valid)
+    sel = valid & (jobs >= 0)
+    if not sel.any():
+        return np.zeros((0,), np.int64), np.zeros((0, 0))
+    depth = np.asarray(result.jobs.dag_depth)
+    state = np.asarray(result.jobs.state)
+    fin = np.asarray(result.jobs.t_finish, np.float64)
+    wf_ids = np.unique(jobs[sel])
+    dmax = int(depth[sel].max())
+    out = np.full((wf_ids.size, dmax + 1), np.nan)
+    for i, w in enumerate(wf_ids):
+        for d in range(dmax + 1):
+            m = sel & (jobs == w) & (depth == d)
+            if m.any() and (state[m] == DONE).all():
+                out[i, d] = fin[m].max()
+    return wf_ids, out
+
+
+def render_workflows(result: SimResult, max_rows: int = 16, width: int = 48) -> str:
+    """ASCII per-workflow gantt: one bar per workflow spanning submit ->
+    last finish, with stage-completion ticks at each DAG depth."""
+    wf_ids, t_done = workflow_timeline(result)
+    if wf_ids.size == 0:
+        return "(no workflows)"
+    jobs = np.asarray(result.jobs.wf_id)
+    valid = np.asarray(result.jobs.valid)
+    arr = np.asarray(result.jobs.arrival, np.float64)
+    span = float(np.nanmax(t_done)) if np.isfinite(t_done).any() else 1.0
+    span = max(span, 1e-9)
+    lines = []
+    for i, w in enumerate(wf_ids[:max_rows]):
+        t0 = float(arr[valid & (jobs == w)].min())
+        cells = [" "] * width
+        a, b = int(t0 / span * (width - 1)), 0
+        ends = t_done[i][np.isfinite(t_done[i])]
+        if ends.size:
+            b = int(ends.max() / span * (width - 1))
+            for x in range(a, b + 1):
+                cells[x] = "─"
+            for td in ends:
+                cells[int(td / span * (width - 1))] = "┃"
+        done = np.isfinite(t_done[i]).all()
+        lines.append(
+            f"  wf{int(w):>4d} |{''.join(cells)}| "
+            + (f"done @ {ends.max():>10.1f}s" if done and ends.size else "incomplete")
+        )
+    return "\n".join(lines)
+
+
 def sparkline(values: np.ndarray, width: int = 60) -> str:
     if values.size == 0:
         return ""

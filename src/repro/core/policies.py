@@ -14,6 +14,12 @@ core — and remain ``vmap``-able for calibration ensembles.
                              | assign(scores, queued, feasible, sites) -> (site, mask)
     onJobEnd                 | on_step(state, jobs, sites, completed, started, clock)
     onSimulationEnd          | on_end(state, jobs, sites, clock)
+
+The optional ``rank`` hook (DESIGN.md §6) orders *starts within a site
+queue*: ``rank(jobs, sites, state, clock) -> f32[J]`` is a secondary key in
+the engine's FIFO-with-capacity sort — after ``jobs.priority``, before
+arrival time, higher first — so user priorities always dominate.
+``rank=None`` (the default) keeps the exact pre-workflow start order.
 """
 from __future__ import annotations
 
@@ -35,6 +41,7 @@ class Policy(NamedTuple):
     assign: Callable
     on_step: Callable
     on_end: Callable
+    rank: Callable | None = None  # start-order key within site queues (None = jobs.priority)
 
 
 def _no_state(jobs, sites):
@@ -45,7 +52,9 @@ def _keep_state(state, *_):
     return state
 
 
-def make_policy(name: str, score: Callable, *, init=None, assign=None, on_step=None, on_end=None) -> Policy:
+def make_policy(
+    name: str, score: Callable, *, init=None, assign=None, on_step=None, on_end=None, rank=None
+) -> Policy:
     return Policy(
         name=name,
         init=init or _no_state,
@@ -53,6 +62,7 @@ def make_policy(name: str, score: Callable, *, init=None, assign=None, on_step=N
         assign=assign or default_assign,
         on_step=on_step or _keep_state,
         on_end=on_end or _keep_state,
+        rank=rank,
     )
 
 
@@ -161,6 +171,23 @@ def panda_dispatch(w_speed=1.0, w_free=1.0, w_queue=2.0, w_fail=4.0) -> Policy:
     return make_policy("panda_dispatch", score)
 
 
+def crit_rank_fn(jobs, sites, state, clock):
+    """Start-order rank: critical-path weight — among equal-priority jobs,
+    the one whose downstream chain is heaviest starts first (the engine
+    keeps ``jobs.priority`` as the primary key)."""
+    return jobs.wf_crit
+
+
+def critical_path_first(base: str = "panda_dispatch", **params) -> Policy:
+    """Workflow-aware scheduling (DESIGN.md §6): site choice follows the
+    ``base`` policy, but within each site queue jobs start in decreasing
+    critical-path weight (``jobs.wf_crit``, the upward rank computed by
+    ``workflows.make_workflow``) instead of FIFO.  On DAG-free workloads
+    ``wf_crit`` is 0 everywhere, so this degrades to the base policy."""
+    pol = get_policy(base, **params)
+    return pol._replace(name=f"critical_path_first[{pol.name}]", rank=crit_rank_fn)
+
+
 def with_capacity_assign(policy: Policy, assign_fn) -> Policy:
     """Swap in a capacity-constrained assigner (e.g. ``repro.kernels.assign``):
     jobs beyond a site's free cores stay QUEUED at the main server instead of
@@ -180,6 +207,7 @@ REGISTRY: dict[str, Callable[..., Policy]] = {
     "data_locality": data_locality,
     "shortest_wait": shortest_wait,
     "panda_dispatch": panda_dispatch,
+    "critical_path_first": critical_path_first,
 }
 
 

@@ -51,21 +51,34 @@ def make_replicas(
     *,
     origin=None,
     placement=None,
+    materialized=None,
     seed: int = 0,
 ) -> ReplicaState:
     """Build a catalog: one pinned origin replica per dataset plus optional
     extra ``placement`` (bool[D, S]).  Default origins are drawn by capacity
-    weight (big storage elements hold more data), like PanDA's data lakes."""
+    weight (big storage elements hold more data), like PanDA's data lakes.
+
+    ``materialized`` (bool[D], default all True) marks datasets that exist at
+    t=0; False rows start with no replica anywhere and ``origin = -1`` —
+    intermediate workflow outputs that some job will materialize mid-run via
+    ``materialize_outputs`` (DESIGN.md §6).
+    """
     size = jnp.asarray(sizes, jnp.float32)
     cap = jnp.asarray(disk_capacity, jnp.float32)
     D, S = size.shape[0], cap.shape[0]
+    mat = (
+        np.ones(D, bool) if materialized is None else np.asarray(materialized, bool)
+    )
     if origin is None:
         rng = np.random.default_rng(seed)
         w = np.maximum(np.asarray(cap, np.float64), 0.0)
         w = w / max(w.sum(), 1e-9)
-        origin = rng.choice(S, size=D, p=w)
+        origin = np.where(mat, rng.choice(S, size=D, p=w), -1)
     origin = jnp.asarray(origin, jnp.int32)
-    present = jnp.zeros((D, S), bool).at[jnp.arange(D), jnp.clip(origin, 0, S - 1)].set(True)
+    seeded = jnp.asarray(mat) & (origin >= 0)
+    present = (
+        jnp.zeros((D, S), bool).at[jnp.arange(D), jnp.clip(origin, 0, S - 1)].set(seeded)
+    )
     if placement is not None:
         present = present | jnp.asarray(placement, bool)
     disk_used = (present * size[:, None]).sum(0)
@@ -79,6 +92,34 @@ def make_replicas(
         n_hits=jnp.zeros((), jnp.int32),
         n_transfers=jnp.zeros((), jnp.int32),
         bytes_moved=jnp.zeros((), jnp.float32),
+    )
+
+
+def materialize_outputs(
+    rep: ReplicaState, dataset: jax.Array, site: jax.Array, mask: jax.Array, clock
+) -> ReplicaState:
+    """Row-wise output production (DESIGN.md §6): where ``mask[j]``, dataset
+    ``dataset[j]`` comes into existence at ``site[j]`` — the site the
+    producing job actually ran on — and that copy becomes the dataset's
+    pinned origin (the authoritative replica children stage in from; never
+    LRU-evicted).
+
+    Like ``make_replicas``' initial origin copies, the authoritative copy
+    bypasses the capacity check — size origin storage elements for the data
+    they must hold; only policy-managed caches are capacity-bound.
+    """
+    D, S = rep.present.shape
+    d = jnp.clip(dataset, 0, D - 1)
+    s = jnp.clip(site, 0, S - 1).astype(jnp.int32)
+    dd = jnp.where(mask, d, D)  # out-of-range rows drop out of the scatters
+    origin = rep.origin.at[dd].set(s, mode="drop")
+    add = jnp.zeros((D, S), bool).at[dd, s].set(True, mode="drop")
+    new = add & ~rep.present
+    return rep._replace(
+        present=rep.present | add,
+        origin=origin,
+        disk_used=rep.disk_used + (new * rep.size[:, None]).sum(0),
+        last_access=jnp.where(add, jnp.float32(clock), rep.last_access),
     )
 
 
@@ -189,10 +230,14 @@ def catalog_invariants(rep: ReplicaState) -> dict:
     size = np.asarray(rep.size)
     used = np.asarray(rep.disk_used)
     cap = np.asarray(rep.disk_cap)
-    origin = np.clip(np.asarray(rep.origin), 0, present.shape[1] - 1)
+    origin_raw = np.asarray(rep.origin)
+    origin = np.clip(origin_raw, 0, present.shape[1] - 1)
     recomputed = (present * size[:, None]).sum(0)
+    # origin < 0 = declared-but-never-materialized dataset (e.g. the producer
+    # was cascade-cancelled): exempt from the pinned-copy check
+    has_origin = origin_raw >= 0
     return dict(
         capacity_ok=bool((used <= cap + 1e-2).all()),
         accounting_ok=bool(np.allclose(used, recomputed, rtol=1e-5, atol=1.0)),
-        origins_ok=bool(present[np.arange(present.shape[0]), origin].all()),
+        origins_ok=bool(present[np.arange(present.shape[0]), origin][has_origin].all()),
     )

@@ -21,9 +21,10 @@ ASSIGNED = 2  # placed in a site queue, awaiting free cores
 RUNNING = 3   # executing on site cores
 DONE = 4
 FAILED = 5    # terminally failed (retries exhausted)
-N_STATES = 6
+CANCELLED = 6  # cascade-cancelled: an ancestor in its workflow DAG failed
+N_STATES = 7
 
-STATE_NAMES = ("pending", "queued", "assigned", "running", "finished", "failed")
+STATE_NAMES = ("pending", "queued", "assigned", "running", "finished", "failed", "cancelled")
 
 
 class JobsState(NamedTuple):
@@ -50,6 +51,11 @@ class JobsState(NamedTuple):
     xfer_bytes: jax.Array  # f32[J] WAN bytes moved by the last stage-in (0 = cache hit)
     xfer_time: jax.Array  # f32[J] stage-in duration of the last attempt
     preempted: jax.Array  # i32[J] attempts cut short by site outages (DESIGN.md §5)
+    wf_id: jax.Array      # i32[J] workflow the job belongs to, -1 = standalone
+    n_parents: jax.Array  # i32[J] number of DAG parents (0 = root / standalone)
+    dag_depth: jax.Array  # i32[J] longest root->job path length (0 for roots)
+    wf_crit: jax.Array    # f32[J] critical-path weight: own work + heaviest descendant chain
+    out_dataset: jax.Array  # i32[J] dataset this job materializes on completion, -1 = none
 
     @property
     def capacity(self) -> int:
@@ -117,6 +123,7 @@ class EngineState(NamedTuple):
     data_state: object = ()     # DataPolicy-defined pytree
     net_acc: object = ()        # f32[S] WAN bytes staged since the last log write
     avail: object = ()          # AvailabilityState when availability dynamics are on
+    wf: object = ()             # WorkflowState when the workflow DAG subsystem is on
 
 
 class SimResult(NamedTuple):
@@ -129,6 +136,7 @@ class SimResult(NamedTuple):
     replicas: object = None     # final ReplicaState (None without a DataPolicy)
     data_state: object = ()
     avail: object = None        # final AvailabilityState (None without availability)
+    wf: object = None           # final WorkflowState (None without a workflow DAG)
 
 
 def make_jobs(
@@ -142,6 +150,11 @@ def make_jobs(
     bytes_out,
     priority=None,
     dataset=None,
+    wf_id=None,
+    n_parents=None,
+    dag_depth=None,
+    wf_crit=None,
+    out_dataset=None,
     capacity: int | None = None,
 ) -> JobsState:
     """Build a JobsState from per-job vectors, padding to ``capacity`` rows."""
@@ -163,6 +176,16 @@ def make_jobs(
         priority = jnp.zeros((n,), jnp.float32)
     if dataset is None:
         dataset = jnp.full((n,), -1, jnp.int32)
+    if wf_id is None:
+        wf_id = jnp.full((n,), -1, jnp.int32)
+    if n_parents is None:
+        n_parents = jnp.zeros((n,), jnp.int32)
+    if dag_depth is None:
+        dag_depth = jnp.zeros((n,), jnp.int32)
+    if wf_crit is None:
+        wf_crit = jnp.zeros((n,), jnp.float32)
+    if out_dataset is None:
+        out_dataset = jnp.full((n,), -1, jnp.int32)
     valid = jnp.arange(cap) < n
     return JobsState(
         job_id=pad_i(job_id, -1),
@@ -186,6 +209,11 @@ def make_jobs(
         xfer_bytes=jnp.zeros((cap,), jnp.float32),
         xfer_time=jnp.zeros((cap,), jnp.float32),
         preempted=jnp.zeros((cap,), jnp.int32),
+        wf_id=pad_i(wf_id, -1),
+        n_parents=pad_i(n_parents),
+        dag_depth=pad_i(dag_depth),
+        wf_crit=pad_f(wf_crit),
+        out_dataset=pad_i(out_dataset, -1),
     )
 
 

@@ -8,7 +8,10 @@ ingests real traces (CSV/JSON/columnar dicts) when available.
 
 Availability scenarios (DESIGN.md §5) live here too: ``maintenance_calendar``,
 ``flaky_sites`` and ``rolling_brownout`` build the downtime calendars that
-turn a clean-grid replay into a realistic operating-conditions study.
+turn a clean-grid replay into a realistic operating-conditions study; the
+workflow scenario builders (DESIGN.md §6: ``chain_workflows``,
+``map_reduce_workflows``, ``atlas_mc_workflows``) are re-exported from
+``workflows`` so workload construction stays a one-module import.
 """
 from __future__ import annotations
 
@@ -20,6 +23,14 @@ import numpy as np
 
 from .availability import AvailabilityState, make_availability
 from .types import JobsState, make_jobs
+from .workflows import (  # noqa: F401  (workload-construction re-exports)
+    WorkflowScenario,
+    atlas_mc_workflows,
+    chain_workflows,
+    make_workflow,
+    map_reduce_workflows,
+    scenario_replicas,
+)
 
 
 def synthetic_panda_jobs(

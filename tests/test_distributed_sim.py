@@ -51,6 +51,63 @@ def test_sharded_equivalence_in_process_tiny_mesh():
         )
     assert int(r2.avail.n_preempted.sum()) == int(r1.avail.n_preempted.sum())
 
+
+def test_sharded_equivalence_in_process_with_workflow_dag():
+    """A DAG workload through the distributed entry point reproduces the
+    plain engine exactly: the parent matrix is replicated aux (and padded to
+    the sharded job capacity), the gating gather shards with the jobs."""
+    import jax
+    import numpy as np
+
+    from repro.core import (
+        DONE,
+        chain_workflows,
+        get_data_policy,
+        get_policy,
+        scenario_replicas,
+        simulate,
+        uniform_network,
+    )
+    from repro.core import make_sites
+    from repro.core.distributed import simulate_distributed
+
+    # 30 rows: not a multiple of the mesh axis, so the workflow pads too
+    scn = chain_workflows(10, 3, seed=0, arrival_span=200.0)
+    sites = make_sites(
+        cores=[16, 8, 8], speed=[10.0, 8.0, 12.0], memory=[256.0] * 3,
+        bw_in=[1e9] * 3, bw_out=[1e9] * 3,
+    )
+    net = uniform_network(3, bw=2e8, latency=0.02)
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    kw = dict(
+        workflow=scn.workflow,
+        data_policy=get_data_policy("cache_on_read"),
+        network=net,
+        replicas=scenario_replicas(scn, disk_capacity=np.full(3, 1e12)),
+        max_rounds=20_000,
+    )
+    # workflow_locality closes over the *unpadded* parent matrix: it must
+    # re-pad inside score when the distributed path grows the job capacity
+    for pol in (
+        get_policy("critical_path_first"),
+        get_policy("workflow_locality", workflow=scn.workflow),
+    ):
+        r1 = simulate(scn.jobs, sites, pol, jax.random.PRNGKey(0), **kw)
+        r2 = simulate_distributed(scn.jobs, sites, pol, jax.random.PRNGKey(0), mesh, **kw)
+        J = scn.jobs.capacity
+        assert float(r1.makespan) == float(r2.makespan)
+        assert int(r1.rounds) == int(r2.rounds)
+        np.testing.assert_array_equal(np.asarray(r1.jobs.state), np.asarray(r2.jobs.state)[:J])
+        np.testing.assert_allclose(
+            np.asarray(r1.jobs.t_start), np.asarray(r2.jobs.t_start)[:J], rtol=1e-6
+        )
+        assert (np.asarray(r2.jobs.state)[:J] == DONE).all()
+        assert int(r1.wf.n_produced) == int(r2.wf.n_produced) == 30  # every stage materializes
+        np.testing.assert_array_equal(
+            np.asarray(r1.replicas.present), np.asarray(r2.replicas.present)
+        )
+
+
 SCRIPT = r"""
 import jax, numpy as np
 from jax.sharding import Mesh
@@ -79,6 +136,20 @@ cands = sites.speed[None, :] * jnp.exp(0.2 * jax.random.normal(jax.random.PRNGKe
 re = simulate_ensemble_distributed(jobs, sites, pol, jax.random.PRNGKey(2), cands, mesh, max_rounds=20000)
 assert re.makespan.shape == (8,)
 assert np.isfinite(np.asarray(re.makespan)).all()
+
+# workflow DAG with job padding (15 rows over 8 devices -> 16) through a
+# policy that closes over the unpadded parent matrix
+from repro.core import DONE, chain_workflows, make_sites
+scn = chain_workflows(5, 3, seed=0)
+sites3 = make_sites(cores=[16]*3, speed=[10.0]*3, memory=[256.0]*3,
+                    bw_in=[1e9]*3, bw_out=[1e9]*3)
+wpol = get_policy("workflow_locality", workflow=scn.workflow)
+rw1 = simulate(scn.jobs, sites3, wpol, jax.random.PRNGKey(0),
+               workflow=scn.workflow, max_rounds=20000)
+rw2 = simulate_distributed(scn.jobs, sites3, wpol, jax.random.PRNGKey(0), mesh,
+                           workflow=scn.workflow, max_rounds=20000)
+assert float(rw1.makespan) == float(rw2.makespan)
+assert (np.asarray(rw2.jobs.state)[:15] == DONE).all()
 print("DIST-OK")
 """
 

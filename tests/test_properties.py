@@ -15,6 +15,7 @@ pytest.importorskip("hypothesis", reason="property tests need the 'dev' extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
+    CANCELLED,
     DONE,
     FAILED,
     catalog_invariants,
@@ -24,6 +25,7 @@ from repro.core import (
     make_jobs,
     make_replicas,
     make_sites,
+    make_workflow,
     simulate,
     uniform_network,
     zipf_dataset_sizes,
@@ -261,3 +263,96 @@ def test_conservation_laws_with_data_policy(n_jobs, seed, with_avail):
         n_jobs, seed, "round_robin", fail_rate=0.1, with_avail=with_avail, with_data=True
     )
     assert_conservation_laws(res, jobs0, sites0)
+
+
+# --------------------------------------------------------------------------
+# workflow DAG conservation laws (ISSUE 3): dependency gating, cascade-cancel
+# partition, termination
+# --------------------------------------------------------------------------
+
+
+def random_dag_edges(n_jobs, rng, *, p_edge=0.35, max_parents=3):
+    """Random DAG over [0, n_jobs): edges only point forward (acyclic by
+    construction), bounded in-degree so the parent matrix stays small."""
+    edges = []
+    n_par = np.zeros(n_jobs, np.int64)
+    for c in range(1, n_jobs):
+        for p in rng.choice(c, size=min(c, max_parents), replace=False):
+            if n_par[c] < max_parents and rng.random() < p_edge:
+                edges.append((int(p), int(c)))
+                n_par[c] += 1
+    return edges
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n_jobs=st.integers(8, 40),
+    seed=st.integers(0, 2**16),
+    fail_rate=st.sampled_from([0.0, 0.4]),
+    policy=st.sampled_from(["round_robin", "panda_dispatch", "critical_path_first"]),
+)
+def test_conservation_laws_with_workflow(n_jobs, seed, fail_rate, policy):
+    """DAG invariants: no child starts before its last parent finishes,
+    DONE + FAILED + CANCELLED partitions every DAG, cancellation happens iff
+    a parent died, and the run terminates with resources restored."""
+    rng = np.random.default_rng(seed)
+    jobs = make_jobs(
+        job_id=np.arange(n_jobs),
+        arrival=np.sort(rng.uniform(0, 50.0, n_jobs)),
+        work=rng.lognormal(np.log(300.0), 1.0, n_jobs),
+        cores=np.where(rng.random(n_jobs) < 0.3, 8, 1),
+        memory=np.full(n_jobs, 2.0),
+        bytes_in=rng.lognormal(np.log(1e7), 1.0, n_jobs),
+        bytes_out=rng.lognormal(np.log(1e6), 1.0, n_jobs),
+        capacity=n_jobs + 2,  # padding rows must stay inert
+    )
+    jobs, wf = make_workflow(jobs, random_dag_edges(n_jobs, rng))
+    sites = make_sites(
+        cores=rng.integers(8, 32, N_SITES),
+        speed=rng.uniform(2.0, 20.0, N_SITES),
+        memory=rng.uniform(64.0, 256.0, N_SITES),
+        bw_in=rng.uniform(1e8, 1e10, N_SITES),
+        bw_out=rng.uniform(1e8, 1e10, N_SITES),
+        fail_rate=np.full(N_SITES, fail_rate),
+    )
+    res = simulate(jobs, sites, get_policy(policy), jax.random.PRNGKey(seed),
+                   workflow=wf, max_retries=2)
+
+    valid = np.asarray(res.jobs.valid)
+    state = np.asarray(res.jobs.state)[valid]
+    # termination + partition: every valid job ends DONE, FAILED or CANCELLED
+    assert np.isin(state, [DONE, FAILED, CANCELLED]).all()
+    assert (np.asarray(res.jobs.state)[~valid] == DONE).all()
+    # resources restored
+    np.testing.assert_array_equal(np.asarray(res.sites.free_cores), np.asarray(sites.cores))
+    np.testing.assert_allclose(
+        np.asarray(res.sites.free_memory), np.asarray(sites.memory), rtol=1e-4, atol=1e-2
+    )
+    # dependency gate: no child starts before its last parent finishes; a
+    # child ran at all only if every parent is DONE
+    ts = np.asarray(res.jobs.t_start)
+    tf = np.asarray(res.jobs.t_finish)
+    full_state = np.asarray(res.jobs.state)
+    par = np.asarray(wf.parents)
+    for j in np.flatnonzero(valid):
+        ps = par[j][par[j] >= 0]
+        if np.isfinite(ts[j]):
+            assert (full_state[ps] == DONE).all()
+            if ps.size:
+                assert ts[j] >= tf[ps].max() - 1e-4
+    # cascade exactness: cancelled iff some parent is FAILED or CANCELLED
+    for j in np.flatnonzero(valid):
+        ps = par[j][par[j] >= 0]
+        parent_dead = ps.size and np.isin(full_state[ps], [FAILED, CANCELLED]).any()
+        if full_state[j] == CANCELLED:
+            assert parent_dead
+        if parent_dead:
+            assert full_state[j] == CANCELLED
+    # counter: the WorkflowState tally matches the state partition
+    assert int(res.wf.n_cancelled) == int((state == CANCELLED).sum())
+    # finished/failed site counters still account exactly (no double count
+    # from the workflow layer)
+    n_done = int((state == DONE).sum())
+    retries = int(np.asarray(res.jobs.retries)[valid].sum())
+    assert int(np.asarray(res.sites.n_finished).sum()) == n_done
+    assert int(np.asarray(res.sites.n_failed).sum()) == retries + int((state == FAILED).sum())

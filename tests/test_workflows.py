@@ -1,0 +1,439 @@
+"""Workflow DAG subsystem (DESIGN.md §6): gating, cascade-cancel, output
+materialization through the replica catalog, workflow-aware policies, and the
+ISSUE 3 acceptance demos."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    CANCELLED,
+    DONE,
+    FAILED,
+    atlas_mc_workflows,
+    catalog_invariants,
+    chain_workflows,
+    get_data_policy,
+    get_policy,
+    make_jobs,
+    make_replicas,
+    make_sites,
+    make_workflow,
+    map_reduce_workflows,
+    materialize_outputs,
+    scenario_replicas,
+    simulate,
+    simulate_ensemble,
+    uniform_network,
+)
+from repro.core.events import job_rows, ml_dataset, transfer_rows, workflow_rows
+from repro.core.monitor import workflow_timeline
+from repro.core.workflows import parent_status
+
+
+def flat_sites(n=4, cores=16, speed=10.0, fail_rate=0.0):
+    return make_sites(
+        cores=[cores] * n,
+        speed=[speed] * n,
+        memory=[256.0] * n,
+        bw_in=[1e9] * n,
+        bw_out=[1e9] * n,
+        fail_rate=[fail_rate] * n,
+    )
+
+
+def diamond_jobs():
+    """4-job diamond: 0 -> {1, 2} -> 3."""
+    jobs = make_jobs(
+        job_id=np.arange(4),
+        arrival=np.zeros(4),
+        work=np.array([100.0, 200.0, 300.0, 50.0]),
+        cores=np.ones(4),
+        memory=np.ones(4),
+        bytes_in=np.zeros(4),
+        bytes_out=np.zeros(4),
+    )
+    return make_workflow(jobs, [(0, 1), (0, 2), (1, 3), (2, 3)], out_dataset=np.arange(4))
+
+
+# --------------------------------------------------------------------------
+# DAG construction
+# --------------------------------------------------------------------------
+
+
+def test_make_workflow_depth_crit_parents():
+    jobs, wf = diamond_jobs()
+    np.testing.assert_array_equal(np.asarray(jobs.dag_depth), [0, 1, 1, 2])
+    np.testing.assert_array_equal(np.asarray(jobs.n_parents), [0, 1, 1, 2])
+    # upward rank: crit[3]=50, crit[1]=250, crit[2]=350, crit[0]=100+350
+    np.testing.assert_allclose(np.asarray(jobs.wf_crit), [450.0, 250.0, 350.0, 50.0])
+    assert wf.max_parents == 2
+    np.testing.assert_array_equal(np.asarray(wf.parents)[3], [1, 2])
+    np.testing.assert_array_equal(np.asarray(jobs.wf_id), [0, 0, 0, 0])
+
+
+def test_make_workflow_rejects_cycles_and_bad_edges():
+    jobs = make_jobs(
+        job_id=np.arange(3), arrival=np.zeros(3), work=np.ones(3), cores=np.ones(3),
+        memory=np.ones(3), bytes_in=np.zeros(3), bytes_out=np.zeros(3),
+    )
+    with pytest.raises(ValueError, match="cycle"):
+        make_workflow(jobs, [(0, 1), (1, 2), (2, 0)])
+    with pytest.raises(ValueError, match="self-edge"):
+        make_workflow(jobs, [(1, 1)])
+    with pytest.raises(ValueError, match="outside"):
+        make_workflow(jobs, [(0, 7)])
+
+
+def test_parent_status_masks():
+    jobs, wf = diamond_jobs()
+    state = np.array([DONE, DONE, 3, 0], np.int32)  # 2 running, 3 pending
+    ready, dead = parent_status(wf.parents, np.asarray(state))
+    np.testing.assert_array_equal(np.asarray(ready), [True, True, True, False])
+    assert not np.asarray(dead).any()
+    state = np.array([DONE, FAILED, DONE, 0], np.int32)
+    ready, dead = parent_status(wf.parents, np.asarray(state))
+    np.testing.assert_array_equal(np.asarray(dead), [False, False, False, True])
+
+
+# --------------------------------------------------------------------------
+# engine: gating, cascade, makespan structure
+# --------------------------------------------------------------------------
+
+
+def test_children_never_start_before_parents_finish():
+    scn = chain_workflows(4, 4, seed=3, work_sigma=0.6)
+    res = simulate(scn.jobs, flat_sites(), get_policy("panda_dispatch"), jax.random.PRNGKey(0),
+                   workflow=scn.workflow)
+    ts = np.asarray(res.jobs.t_start)
+    tf = np.asarray(res.jobs.t_finish)
+    par = np.asarray(scn.workflow.parents)
+    valid = np.asarray(res.jobs.valid)
+    assert (np.asarray(res.jobs.state)[valid] == DONE).all()
+    for j in np.flatnonzero(valid):
+        for p in par[j]:
+            if p >= 0:
+                assert ts[j] >= tf[p] - 1e-4
+
+
+def test_chain_makespan_is_at_least_serial_critical_path():
+    # one chain on one fast site: makespan >= sum of stage compute times
+    scn = chain_workflows(1, 5, seed=0, work_sigma=0.0, base_work=1000.0, input_bytes=0.0)
+    sites = flat_sites(1, cores=64, speed=10.0)
+    res = simulate(scn.jobs, sites, get_policy("panda_dispatch"), jax.random.PRNGKey(0),
+                   workflow=scn.workflow)
+    assert float(res.makespan) >= 5 * 1000.0 / 10.0 - 1e-3
+
+
+def test_cascade_cancel_counts_and_partition():
+    # all sites always fail -> roots exhaust retries, descendants cancelled
+    scn = chain_workflows(3, 4, seed=1)
+    res = simulate(scn.jobs, flat_sites(fail_rate=1.0), get_policy("round_robin"),
+                   jax.random.PRNGKey(0), workflow=scn.workflow, max_retries=1)
+    state = np.asarray(res.jobs.state)[np.asarray(res.jobs.valid)]
+    assert (state == FAILED).sum() == 3      # the three roots
+    assert (state == CANCELLED).sum() == 9   # all nine descendants
+    assert int(res.wf.n_cancelled) == 9
+    # partition: every valid job is DONE, FAILED or CANCELLED
+    assert np.isin(state, [DONE, FAILED, CANCELLED]).all()
+    # cancelled jobs never ran
+    cancelled = np.asarray(res.jobs.state) == CANCELLED
+    assert not np.isfinite(np.asarray(res.jobs.t_start)[cancelled]).any()
+    # resources fully restored
+    np.testing.assert_array_equal(np.asarray(res.sites.free_cores), np.asarray(res.sites.cores))
+
+
+def test_mixed_failure_only_affected_workflow_cancelled():
+    # site 0 always fails; chains pinned there die, others finish
+    scn = chain_workflows(2, 3, seed=2)
+    sites = flat_sites(2, fail_rate=0.0)
+    sites = sites._replace(fail_rate=np.array([1.0, 0.0], np.float32))
+
+    # force chain 0 to site 0 and chain 1 to site 1 via a pinning policy
+    from repro.core import make_policy
+
+    def score(jobs, sites_, state, clock, rng):
+        want = jobs.wf_id[:, None] == np.arange(2)[None, :]
+        return want.astype(np.float32)
+
+    res = simulate(scn.jobs, sites, make_policy("pin", score), jax.random.PRNGKey(0),
+                   workflow=scn.workflow, max_retries=0)
+    state = np.asarray(res.jobs.state)
+    wf_id = np.asarray(res.jobs.wf_id)
+    assert (state[wf_id == 1] == DONE).all()
+    assert (state[wf_id == 0][0] == FAILED) and (state[wf_id == 0][1:] == CANCELLED).all()
+
+
+# --------------------------------------------------------------------------
+# output materialization through the replica catalog (ISSUE acceptance)
+# --------------------------------------------------------------------------
+
+
+def test_fan_in_children_stage_from_parent_site_via_catalog():
+    """ISSUE 3 acceptance: a fan-in DAG's children stage in parent outputs
+    from the parent's execution site via the replica catalog — the transfer
+    stream references the produced datasets."""
+    scn = map_reduce_workflows(2, 4, seed=0, root_out_bytes=8e9, map_out_bytes=1e9)
+    sites = flat_sites(4)
+    net = uniform_network(4, bw=1e8, latency=0.02)
+    rep = scenario_replicas(scn, disk_capacity=np.full(4, 1e12))
+    res = simulate(
+        scn.jobs, sites, get_policy("round_robin"), jax.random.PRNGKey(0),
+        workflow=scn.workflow, data_policy=get_data_policy("always_remote"),
+        network=net, replicas=rep,
+    )
+    valid = np.asarray(res.jobs.valid)
+    assert (np.asarray(res.jobs.state)[valid] == DONE).all()
+    assert int(res.wf.n_produced) == int((np.asarray(scn.jobs.out_dataset)[valid] >= 0).sum())
+
+    rows = transfer_rows(res)
+    assert rows, "expected stage-in transfers through the catalog"
+    produced = np.asarray(scn.jobs.out_dataset)
+    site = np.asarray(res.jobs.site)
+    tf = np.asarray(res.jobs.t_finish)
+    ts = np.asarray(res.jobs.t_start)
+    checked_remote = 0
+    for r in rows:
+        d = r["dataset"]
+        # every staged dataset is one some job produced (dataset id == row)
+        assert produced[d] == d
+        # the source is the producing parent's execution site, and the read
+        # happens only after the parent finished there
+        assert r["src"] == f"site{site[d]}"
+        assert ts[r["job_id"]] >= tf[d] - 1e-4
+        if not r["cache_hit"]:
+            checked_remote += 1
+    assert checked_remote > 0
+    # catalog stays consistent (origin = producer site, pinned)
+    inv = catalog_invariants(res.replicas)
+    assert inv["accounting_ok"] and inv["origins_ok"]
+    org = np.asarray(res.replicas.origin)
+    for d in np.flatnonzero(produced >= 0):
+        assert org[d] == site[d]
+
+
+def test_unproduced_outputs_stay_unmaterialized():
+    scn = chain_workflows(1, 3, seed=0)
+    net = uniform_network(4)
+    rep = scenario_replicas(scn, disk_capacity=np.full(4, 1e12))
+    res = simulate(
+        scn.jobs, flat_sites(fail_rate=1.0), get_policy("round_robin"),
+        jax.random.PRNGKey(0), workflow=scn.workflow, max_retries=0,
+        data_policy=get_data_policy("cache_on_read"), network=net, replicas=rep,
+    )
+    # root failed -> nothing produced, descendants cancelled, catalog empty
+    assert int(res.wf.n_produced) == 0
+    assert not np.asarray(res.replicas.present).any()
+    assert (np.asarray(res.replicas.origin) == -1).all()
+    assert catalog_invariants(res.replicas)["origins_ok"]
+
+
+def test_validate_workflow_data_rejects_ungated_readers():
+    """A job reading an unmaterialized dataset that no DAG ancestor produces
+    is a configuration error: the gate cannot guarantee the data exists."""
+    from repro.core import validate_workflow_data
+
+    scn = chain_workflows(1, 3, seed=0)
+    scenario_replicas(scn, disk_capacity=np.full(4, 1e12))  # builders pass
+
+    # a reader with no DAG edge to the producer of its input dataset
+    bad = make_jobs(
+        job_id=np.arange(2), arrival=np.zeros(2), work=np.ones(2), cores=np.ones(2),
+        memory=np.ones(2), bytes_in=np.zeros(2), bytes_out=np.zeros(2),
+        dataset=np.array([-1, 0]), out_dataset=np.array([0, -1]),
+    )
+    bad, wf = make_workflow(bad, [], out_dataset=np.array([0, -1]))  # no edges
+    rep2 = make_replicas(np.array([1e9], np.float32), np.full(2, 1e12),
+                         origin=np.array([-1]), materialized=np.zeros(1, bool))
+    with pytest.raises(ValueError, match="no DAG ancestor"):
+        validate_workflow_data(bad, wf, rep2)
+    # and with no producer at all
+    none = bad._replace(out_dataset=np.full(2, -1, np.int32))
+    with pytest.raises(ValueError, match="no job produces"):
+        validate_workflow_data(none, wf, rep2)
+
+
+def test_materialize_outputs_pins_origin():
+    rep = make_replicas(np.array([5.0, 7.0], np.float32), np.array([100.0, 100.0]),
+                        origin=np.array([-1, -1]), materialized=np.zeros(2, bool))
+    rep = materialize_outputs(rep, np.array([0, 1]), np.array([1, 0]),
+                              np.array([True, False]), 3.0)
+    assert bool(rep.present[0, 1]) and not np.asarray(rep.present)[1].any()
+    assert int(rep.origin[0]) == 1 and int(rep.origin[1]) == -1
+    np.testing.assert_allclose(np.asarray(rep.disk_used), [0.0, 5.0])
+
+
+# --------------------------------------------------------------------------
+# workflow-aware policies
+# --------------------------------------------------------------------------
+
+
+def test_critical_path_first_beats_fifo_on_contended_chain():
+    """One deep chain + many fillers on a small site: ranking by upward rank
+    pulls each chain stage to the queue head, FIFO strands it behind the
+    backlog each stage."""
+    n_fill, n_stages = 48, 6
+    work = np.concatenate([np.full(n_fill, 1000.0), np.full(n_stages, 1000.0)])
+    jobs = make_jobs(
+        job_id=np.arange(n_fill + n_stages),
+        arrival=np.concatenate([np.zeros(n_fill), np.full(n_stages, 1.0)]),
+        work=work,
+        cores=np.ones(n_fill + n_stages),
+        memory=np.ones(n_fill + n_stages),
+        bytes_in=np.zeros(n_fill + n_stages),
+        bytes_out=np.zeros(n_fill + n_stages),
+    )
+    edges = [(n_fill + k, n_fill + k + 1) for k in range(n_stages - 1)]
+    jobs, wf = make_workflow(jobs, edges)
+    sites = flat_sites(1, cores=8)
+    key = jax.random.PRNGKey(0)
+    fifo = simulate(jobs, sites, get_policy("panda_dispatch"), key, workflow=wf)
+    crit = simulate(jobs, sites, get_policy("critical_path_first"), key, workflow=wf)
+    assert (np.asarray(fifo.jobs.state)[: n_fill + n_stages] == DONE).all()
+    assert float(crit.makespan) < float(fifo.makespan) * 0.75
+
+
+def test_rank_is_secondary_to_user_priority():
+    """jobs.priority dominates the start order; wf_crit only breaks ties —
+    a high-priority standalone job starts before a low-priority chain head
+    even under critical_path_first."""
+    n = 6
+    jobs = make_jobs(
+        job_id=np.arange(n),
+        arrival=np.zeros(n),
+        work=np.full(n, 100.0),
+        cores=np.ones(n),
+        memory=np.ones(n),
+        bytes_in=np.zeros(n),
+        bytes_out=np.zeros(n),
+        # rows 0-1: a chain with low priority; rows 2-5: standalone, higher
+        priority=np.array([0.2, 0.2, 0.9, 0.9, 0.9, 0.9]),
+    )
+    jobs, wf = make_workflow(jobs, [(0, 1)])
+    sites = flat_sites(1, cores=1)  # strictly serial: start order is visible
+    res = simulate(jobs, sites, get_policy("critical_path_first"), jax.random.PRNGKey(0),
+                   workflow=wf)
+    ts = np.asarray(res.jobs.t_start)
+    assert ts[2:].max() < ts[0]  # every priority-0.9 job starts before the chain
+
+
+def test_workflow_locality_places_children_with_parents():
+    scn = chain_workflows(4, 3, seed=5)
+    pol = get_policy("workflow_locality", workflow=scn.workflow, base="round_robin")
+    res = simulate(scn.jobs, flat_sites(4), pol, jax.random.PRNGKey(0),
+                   workflow=scn.workflow)
+    site = np.asarray(res.jobs.site)
+    par = np.asarray(scn.workflow.parents)
+    valid = np.asarray(res.jobs.valid)
+    for j in np.flatnonzero(valid):
+        p = par[j, 0]
+        if p >= 0:
+            assert site[j] == site[p]
+
+
+# --------------------------------------------------------------------------
+# no-op guarantee, vmap, exports
+# --------------------------------------------------------------------------
+
+
+def test_workflow_none_is_bit_for_bit_noop():
+    from repro.core import atlas_like_platform, synthetic_panda_jobs
+
+    jobs = synthetic_panda_jobs(100, seed=4, duration=600.0)
+    sites = atlas_like_platform(4, seed=5, fail_rate=0.05)
+    pol = get_policy("panda_dispatch")
+    r0 = simulate(jobs, sites, pol, jax.random.PRNGKey(0), log_rows=64)
+    r1 = simulate(jobs, sites, pol, jax.random.PRNGKey(0), log_rows=64, workflow=None)
+    for k in r0.jobs._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(r0.jobs, k)), np.asarray(getattr(r1.jobs, k)), err_msg=f"jobs.{k}"
+        )
+    for k in r0.log._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(r0.log, k)), np.asarray(getattr(r1.log, k)), err_msg=f"log.{k}"
+        )
+    assert float(r0.makespan) == float(r1.makespan)
+    assert int(r0.rounds) == int(r1.rounds)
+    assert r1.wf is None
+
+
+def test_workflow_under_ensemble_vmap():
+    scn = chain_workflows(2, 3, seed=0)
+    sites = flat_sites(2)
+    cands = np.stack([np.asarray(sites.speed), np.asarray(sites.speed) * 2.0])
+    res = simulate_ensemble(
+        scn.jobs, sites, get_policy("panda_dispatch"), jax.random.PRNGKey(0),
+        speed_candidates=np.asarray(cands, np.float32), workflow=scn.workflow,
+    )
+    assert res.makespan.shape == (2,)
+    assert float(res.makespan[1]) < float(res.makespan[0])
+    state = np.asarray(res.jobs.state)[:, np.asarray(scn.jobs.valid)]
+    assert (state == DONE).all()
+
+
+def test_atlas_mc_size_profile():
+    scn = atlas_mc_workflows(2, seed=0, evnt_bytes=2e8)
+    sz = scn.ds_sizes.reshape(2, 4)
+    # evgen -> simul inflates 20x; recon and deriv reduce
+    np.testing.assert_allclose(sz[0], [2e8, 4e9, 5e8, 5e7])
+    cores = np.asarray(scn.jobs.cores)[: 8].reshape(2, 4)
+    np.testing.assert_array_equal(cores[0], [1, 8, 8, 1])
+
+
+# --------------------------------------------------------------------------
+# exports: stable ML schema, workflow rows, timeline
+# --------------------------------------------------------------------------
+
+
+def test_ml_schema_stable_across_plain_and_dag_runs():
+    from repro.core import atlas_like_platform, synthetic_panda_jobs
+
+    plain = simulate(
+        synthetic_panda_jobs(30, seed=0, duration=300.0),
+        atlas_like_platform(2, seed=1),
+        get_policy("panda_dispatch"), jax.random.PRNGKey(0),
+    )
+    scn = chain_workflows(3, 3, seed=0)
+    dag = simulate(scn.jobs, flat_sites(2), get_policy("panda_dispatch"),
+                   jax.random.PRNGKey(0), workflow=scn.workflow)
+    ds_p, ds_d = ml_dataset(plain), ml_dataset(dag)
+    assert list(ds_p["feature_names"]) == list(ds_d["feature_names"])
+    for nm in ("n_parents", "dag_depth", "wf_id"):
+        assert nm in list(ds_p["feature_names"])
+    i = list(ds_p["feature_names"]).index("wf_id")
+    assert (ds_p["features"][:, i] == -1).all()       # constant -1 without a DAG
+    assert (ds_d["features"][:, i] >= 0).all()
+    j = list(ds_p["feature_names"]).index("dag_depth")
+    assert (ds_p["features"][:, j] == 0).all()
+
+    rows_p, rows_d = job_rows(plain), job_rows(dag)
+    assert set(rows_p[0]) == set(rows_d[0])
+    assert all(r["wf_id"] == -1 and r["n_parents"] == 0 for r in rows_p)
+    assert workflow_rows(plain) == []
+    wrows = workflow_rows(dag)
+    assert len(wrows) == 3 and all(r["completed"] for r in wrows)
+    assert all(r["makespan"] is not None and r["makespan"] > 0 for r in wrows)
+
+
+def test_example_workflow_chain_acceptance():
+    """ISSUE 3 acceptance: in examples/workflow_chain.py, locality-aware
+    beats remote-always and critical-path-first beats FIFO on makespan."""
+    import pathlib
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "examples"))
+    try:
+        import workflow_chain
+    finally:
+        sys.path.pop(0)
+    assert workflow_chain.locality_vs_remote() > 1.0
+    assert workflow_chain.critical_path_vs_fifo() > 1.0
+
+
+def test_workflow_timeline_monotone_in_depth():
+    scn = chain_workflows(2, 4, seed=0)
+    res = simulate(scn.jobs, flat_sites(2), get_policy("panda_dispatch"),
+                   jax.random.PRNGKey(0), workflow=scn.workflow)
+    ids, td = workflow_timeline(res)
+    assert ids.shape == (2,) and td.shape == (2, 4)
+    assert np.isfinite(td).all()
+    assert (np.diff(td, axis=1) > 0).all()  # later stages finish later
