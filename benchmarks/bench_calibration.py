@@ -33,8 +33,11 @@ def run(n_jobs: int = 3000, n_sites: int = 50, seed: int = 2):
 
 
 def main():
-    out = run()
-    print("# Fig 3 calibration: geomean relative MAE across 50 sites")
+    import sys
+
+    tiny = "--tiny" in sys.argv
+    out = run(n_jobs=400, n_sites=8) if tiny else run()
+    print(f"# Fig 3 calibration: geomean relative MAE across {8 if tiny else 50} sites")
     e0 = out["initial"][0]
     print(csv_row("calibration_initial", 0.0, f"geomean_err={e0:.3f}"))
     for m in ("grid", "random", "cma_es", "gp_bo"):

@@ -34,7 +34,9 @@ def run(n_jobs: int = 2000):
 
 
 def main():
-    res1, res50 = run()
+    import sys
+
+    res1, res50 = run(n_jobs=400 if "--tiny" in sys.argv else 2000)
     m1, m50 = compute_metrics(res1), compute_metrics(res50)
     speedup = float(res1.makespan) / float(res50.makespan)
     print("# distributed vs single-site (fixed workload)")

@@ -1,0 +1,136 @@
+"""Engine round-loop throughput + scenario-ensemble scaling (ISSUE 4).
+
+Numbers the perf trajectory tracks across commits:
+
+- ``rounds_per_sec``: raw event-round throughput of one ``simulate`` call —
+  the denominator every subsystem's overhead is priced against.
+- ``ensemble_speedup_16``: end-to-end throughput of ``simulate_many`` over a
+  Python loop of ``simulate`` calls for the same 16-scenario ensemble.  The
+  ensemble is *ragged* — every scenario has a different workload size, the
+  normal shape of surrogate-dataset generation — so the loop retraces and
+  recompiles per scenario while ``stack_scenarios`` pads the batch to one
+  static shape and the whole ensemble runs from a single compile (the ISSUE 4
+  acceptance row; target >= 3x, measured end-to-end including compilation,
+  which dominates exactly like it does in real sweep workloads).
+- ``ensemble_steady_*``: the same-shape warm-cache comparison, reported for
+  transparency.  On a single CPU device the round loop is compute-bound, so
+  lockstep vmap rounds buy little there; the batched program pays off on
+  accelerators and sharded ensembles (``simulate_ensemble_distributed``).
+
+``--tiny`` is the seconds-sized CI smoke configuration.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    Scenario,
+    atlas_like_platform,
+    get_policy,
+    simulate,
+    simulate_many,
+    stack_scenarios,
+    synthetic_panda_jobs,
+)
+
+from .common import csv_row
+
+K = 16
+
+
+def _timed(fn, iters=3):
+    fn()  # compile
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _once(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def main():
+    tiny = "--tiny" in sys.argv
+    n_jobs, n_sites = (120, 4) if tiny else (400, 8)
+    # ragged ensemble: every scenario a different workload size (all distinct
+    # static shapes), the natural raggedness of scenario sweeps
+    rag_sizes = range(48, 48 + 2 * K, 2) if tiny else range(200, 200 + 8 * K, 8)
+    pol = get_policy("panda_dispatch")
+    sites = atlas_like_platform(n_sites, seed=1)
+
+    # --- ragged 16-scenario ensemble, end-to-end (compile included) -------
+    factors = jnp.linspace(0.5, 2.0, K)
+    scenarios = [
+        Scenario(
+            synthetic_panda_jobs(n, seed=10 + i, duration=1800.0),
+            sites._replace(speed=sites.speed * factors[i]),
+        )
+        for i, n in enumerate(rag_sizes)
+    ]
+    keys = jax.random.split(jax.random.PRNGKey(2), K)
+
+    t_loop = _once(
+        lambda: [
+            jax.block_until_ready(simulate(s.jobs, s.sites, pol, keys[i]).makespan)
+            for i, s in enumerate(scenarios)
+        ]
+    )
+    stacked = stack_scenarios(scenarios)  # pads ragged jobs to one shape
+    t_many = _once(
+        lambda: jax.block_until_ready(
+            simulate_many(stacked, pol, jax.random.PRNGKey(2)).makespan
+        )
+    )
+    speedup = t_loop / t_many
+    print(f"# ragged ensemble (K={K}, jobs {rag_sizes.start}..{rag_sizes[-1]}): "
+          "loop recompiles per size, simulate_many compiles once")
+    print(csv_row("ensemble_loop_16", t_loop * 1e6, f"compiles={K}"))
+    print(csv_row("ensemble_simulate_many_16", t_many * 1e6, "compiles=1"))
+    print(csv_row("ensemble_speedup_16", speedup,
+                  f"target>=3.0 {'OK' if speedup >= 3.0 else 'MISS'}"))
+
+    # --- same-shape steady state (warm jit cache), for transparency -------
+    warm = [jax.tree.map(lambda x: x[i], Scenario(stacked.jobs, stacked.sites, {}))
+            for i in range(K)]
+
+    def seq():
+        for i in range(K):
+            jax.block_until_ready(
+                simulate(warm[i].jobs, warm[i].sites, pol, keys[i]).makespan
+            )
+
+    def many():
+        jax.block_until_ready(
+            simulate_many(stacked, pol, jax.random.PRNGKey(2)).makespan
+        )
+
+    t_seq = _timed(seq)
+    t_m = _timed(many)
+    print(csv_row("ensemble_steady_loop_16", t_seq * 1e6, ""))
+    print(csv_row("ensemble_steady_many_16", t_m * 1e6, f"ratio=x{t_seq / t_m:.2f}"))
+
+    # --- single-run round throughput -------------------------------------
+    jobs = synthetic_panda_jobs(n_jobs, seed=0, duration=1800.0)
+    res = simulate(jobs, sites, pol, jax.random.PRNGKey(0))
+    rounds = int(res.rounds)
+    t_one = _timed(
+        lambda: jax.block_until_ready(
+            simulate(jobs, sites, pol, jax.random.PRNGKey(1)).makespan
+        )
+    )
+    print(f"# engine rounds: J={n_jobs} S={n_sites}, {rounds} rounds/run")
+    print(csv_row("simulate_one", t_one * 1e6, f"rounds_per_sec={rounds / t_one:.0f}"))
+
+
+if __name__ == "__main__":
+    main()

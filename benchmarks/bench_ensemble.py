@@ -15,8 +15,11 @@ from .common import csv_row
 
 
 def main():
-    jobs = synthetic_panda_jobs(400, seed=0, duration=3600.0)
-    sites = atlas_like_platform(10, seed=1)
+    import sys
+
+    n_jobs, n_sites = (120, 4) if "--tiny" in sys.argv else (400, 10)
+    jobs = synthetic_panda_jobs(n_jobs, seed=0, duration=3600.0)
+    sites = atlas_like_platform(n_sites, seed=1)
     pol = get_policy("panda_dispatch")
     K = 16
     cands = sites.speed[None, :] * jnp.exp(

@@ -13,7 +13,9 @@ from .common import csv_row
 
 
 def main():
-    n = 2000
+    import sys
+
+    n = 400 if "--tiny" in sys.argv else 2000
     jobs = synthetic_panda_jobs(n, seed=0, duration=6 * 3600.0)
     sites = atlas_like_platform(20, seed=1)
     res = simulate(jobs, sites, get_policy("panda_dispatch"), jax.random.PRNGKey(0),

@@ -39,9 +39,12 @@ def run(job_counts=(1000, 2500, 5000, 10000), n_sites: int = 1, iters: int = 2,
 
 
 def main():
+    import sys
+
+    counts = (250, 1000) if "--tiny" in sys.argv else (1000, 2500, 5000, 10000)
     print("# Fig 4(a) job scaling (1 site)")
     for mode, quantum in (("exact", 0.0), ("quantum30s", 30.0)):
-        rows = run(quantum=quantum)
+        rows = run(job_counts=counts, quantum=quantum)
         base_n, base_t, _ = rows[0]
         for n, wall, rounds in rows:
             alpha = np.log(wall / base_t) / np.log(n / base_n) if n > base_n else 1.0

@@ -36,9 +36,14 @@ def run(site_counts=(1, 5, 10, 25, 50), jobs_per_site: int = 200, iters: int = 2
 
 
 def main():
-    print("# Fig 4(b) multi-site scaling (200 jobs/site)")
+    import sys
+
+    tiny = "--tiny" in sys.argv
+    counts = (1, 4, 10) if tiny else (1, 5, 10, 25, 50)
+    per_site = 50 if tiny else 200
+    print(f"# Fig 4(b) multi-site scaling ({per_site} jobs/site)")
     for mode, quantum in (("exact", 0.0), ("quantum30s", 30.0)):
-        rows = run(quantum=quantum)
+        rows = run(site_counts=counts, jobs_per_site=per_site, quantum=quantum)
         s0, t0, _ = rows[0]
         for s, wall, makespan in rows:
             alpha = np.log(wall / t0) / np.log(s / s0) if s > s0 else 1.0

@@ -22,6 +22,7 @@ from . import (
     bench_calibration,
     bench_data_movement,
     bench_distributed,
+    bench_engine_rounds,
     bench_ensemble,
     bench_events,
     bench_job_scaling,
@@ -36,6 +37,7 @@ SUITES = {
     "abstract_6x_distributed": bench_distributed.main,
     "table1_events": bench_events.main,
     "assign_kernel": bench_assign_kernel.main,
+    "engine_rounds": bench_engine_rounds.main,
     "ensemble_vmap": bench_ensemble.main,
     "data_movement": bench_data_movement.main,
     "availability": bench_availability.main,
@@ -96,7 +98,9 @@ def main() -> None:
         out_dir = pathlib.Path(args[i + 1])
         out_dir.mkdir(parents=True, exist_ok=True)
         del args[i: i + 2]
-    args = [a for a in args if a != "--json"]
+    # --tiny stays visible in sys.argv: each suite reads it there for its
+    # seconds-sized CI smoke configuration
+    args = [a for a in args if a not in ("--json", "--tiny")]
     only = args[0] if args else None
     failures = []
     for name, fn in SUITES.items():

@@ -23,11 +23,30 @@ from .types import (  # noqa: F401
     make_jobs,
     make_log,
     make_sites,
+    pad_jobs_capacity,
 )
-from .engine import simulate, simulate_ensemble, service_time, compute_time, walltimes, queue_times  # noqa: F401
+from .engine import (  # noqa: F401
+    Scenario,
+    compute_time,
+    queue_times,
+    service_time,
+    simulate,
+    simulate_ensemble,
+    simulate_many,
+    stack_scenarios,
+    walltimes,
+)
+from .subsystems import (  # noqa: F401
+    RoundCtx,
+    Subsystem,
+    make_subsystem,
+    pad_ext_jobs,
+    resolve_subsystems,
+)
 from .availability import (  # noqa: F401
     AvailabilityState,
     availability_factor,
+    availability_subsystem,
     downtime_fraction,
     make_availability,
     next_window_edge,
@@ -63,10 +82,13 @@ from .workflows import (  # noqa: F401
     scenario_replicas,
     validate_workflow_data,
     workflow_locality,
+    workflow_subsystem,
 )
 from .datapolicies import (  # noqa: F401
+    DataExt,
     DataPlugin,
     DataPolicy,
+    data_subsystem,
     get_data_policy,
     make_data_policy,
     register_data,

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .types import ASSIGNED, FAILED, QUEUED, RUNNING
+
 INF = jnp.float32(jnp.inf)
 
 
@@ -164,6 +166,136 @@ def downtime_fraction(avail: AvailabilityState, horizon) -> np.ndarray:
             edge = max(edge, b)
         out[s] = covered / horizon
     return np.clip(out, 0.0, 1.0)
+
+
+# --------------------------------------------------------------------------
+# the availability Subsystem (DESIGN.md §7): the engine wiring above,
+# re-expressed as hooks on the composable round-loop protocol
+# --------------------------------------------------------------------------
+
+
+def _av_validate(sub, av: AvailabilityState, jobs, sites) -> None:
+    S = sites.capacity
+    if av.win_start.shape[-2] != S:
+        raise ValueError(
+            f"availability has {av.win_start.shape[-2]} sites, platform has {S}"
+        )
+
+
+def _av_event_times(sub, ctx):
+    # window starts/ends are event sources: rounds land exactly on edges
+    return next_window_edge(ctx.ext["availability"], ctx.clock_prev)
+
+
+def _av_completion_filter(sub, ctx, comp):
+    # a preempting outage opening before the job's finish kills it first;
+    # only reachable when quantum > 0 jumps the clock past both the window
+    # start and t_finish in one round (at quantum=0 rounds land on every
+    # edge, so this mask is identically False).  The survivor stays RUNNING
+    # and the on_completions hook preempts it.
+    av = ctx.ext["availability"]
+    jobs = ctx.jobs
+    ksite = jnp.clip(jobs.site, 0, ctx.S - 1)
+    ws = av.win_start[ksite]                                   # [J, W]
+    wkill = av.win_preempt[ksite] & (av.win_factor[ksite] <= 0.0)
+    killed_first = jnp.any(
+        wkill & (ws > ctx.clock_prev) & (ws < jobs.t_finish[:, None]), axis=-1
+    )
+    return comp & ~killed_first
+
+
+def _av_on_completions(sub, ctx):
+    """Outage preemption & brown-out scaling (engine step 2b, DESIGN.md §5)."""
+    from .engine import _site_sum
+
+    av = ctx.ext["availability"]
+    jobs, sites, S = ctx.jobs, ctx.sites, ctx.S
+    factor = availability_factor(av, ctx.clock)     # f32[S]
+    # brown-out: a factor-f window caps usable cores at floor(f*cores); a
+    # site whose cap floors to 0 is a de facto outage, so the dispatcher
+    # routes around it just like a factor-0 window
+    eff_cap = jnp.floor(sites.cores.astype(jnp.float32) * factor).astype(jnp.int32)
+    ctx.scratch["availability"] = dict(factor=factor, eff_cap=eff_cap, avail_up=eff_cap > 0)
+    # preempt: running jobs on a site whose preempting outage overlaps
+    # (prev clock, clock] lose this attempt now (completions already retired
+    # jobs whose t_finish <= clock, so a job finishing at the edge still
+    # finishes; interval overlap keeps windows shorter than a quantum from
+    # being skipped)
+    site_c0 = jnp.clip(jobs.site, 0, S - 1)
+    preempting = preempting_sites(av, ctx.clock_prev, ctx.clock)[site_c0]
+    pre = (jobs.state == RUNNING) & preempting
+    pre_resub = pre & (jobs.retries < ctx.max_retries)
+    pre_fail = pre & ~pre_resub
+    pre_site = jnp.where(pre, jobs.site, S)
+    # jobs still waiting in the dead site's queue bounce back to the server —
+    # no attempt was lost, so no retry — instead of sitting stranded behind
+    # an outage while other sites idle (drain windows leave the site queue
+    # paused, as announced maintenance does)
+    bounce = (jobs.state == ASSIGNED) & preempting
+    ctx.jobs = jobs._replace(
+        state=jnp.where(
+            pre_resub | bounce, QUEUED, jnp.where(pre_fail, FAILED, jobs.state)
+        ),
+        retries=jobs.retries + pre_resub.astype(jnp.int32),
+        site=jnp.where(pre_resub | bounce, -1, jobs.site),
+        t_finish=jnp.where(pre_resub, INF, jnp.where(pre_fail, ctx.clock, jobs.t_finish)),
+        preempted=jobs.preempted + pre.astype(jnp.int32),
+    )
+    ctx.sites = sites._replace(
+        free_cores=sites.free_cores + _site_sum(jnp.where(pre, jobs.cores, 0), pre_site, S),
+        free_memory=sites.free_memory
+        + _site_sum(jnp.where(pre, jobs.memory, 0.0), pre_site, S),
+    )
+    ctx.ext["availability"] = av._replace(
+        n_preempted=av.n_preempted + _site_sum(pre.astype(jnp.int32), pre_site, S)
+    )
+    # a preemption round changed state: give the dispatcher one more round
+    # to re-route the requeued jobs before halt detection
+    ctx.progressed = jnp.logical_or(ctx.progressed, jnp.any(pre))
+
+
+def _av_pre_assign(sub, ctx):
+    sc = ctx.scratch["availability"]
+    # the dispatcher routes around sites currently in a full outage
+    ctx.feasible = ctx.feasible & sc["avail_up"][None, :]
+    # starts only claim cores up to the brown-out cap net of busy ones, at
+    # speed scaled by the window factor; a full outage admits no starts
+    sites = ctx.sites
+    busy = sites.cores - sites.free_cores
+    ctx.start_cores = jnp.clip(sc["eff_cap"] - busy, 0, sites.free_cores)
+    ctx.sites_serv = ctx.sites_serv._replace(
+        speed=jnp.maximum(ctx.sites_serv.speed * sc["factor"], 1e-9)
+    )
+
+
+def _av_log_spec(sub, av, jobs, sites):
+    return {"site_avail": jnp.ones((sites.capacity,), jnp.float32)}
+
+
+def _av_log_columns(sub, ctx, write):
+    return {"site_avail": ctx.scratch["availability"]["factor"]}
+
+
+def _av_finalize(sub, av, jobs, sites, clock):
+    return av, {"avail": av}
+
+
+def availability_subsystem() -> "Subsystem":
+    """Availability dynamics as a composable engine subsystem; its ext slot
+    carries the ``AvailabilityState`` calendar + preemption counters."""
+    from .subsystems import Subsystem
+
+    return Subsystem(
+        name="availability",
+        validate=_av_validate,
+        event_times=_av_event_times,
+        completion_filter=_av_completion_filter,
+        on_completions=_av_on_completions,
+        pre_assign=_av_pre_assign,
+        log_spec=_av_log_spec,
+        log_columns=_av_log_columns,
+        finalize=_av_finalize,
+    )
 
 
 def sample_correlated_outages(

@@ -79,6 +79,127 @@ def make_data_policy(
 
 
 # --------------------------------------------------------------------------
+# the data Subsystem (DESIGN.md §7): replica-aware stage-in as hooks on the
+# composable round-loop protocol.  The DataPolicy rides in ``sub.config``;
+# the ext slot carries (network, catalog, policy state, WAN-ingress accum).
+# --------------------------------------------------------------------------
+
+
+class DataExt(NamedTuple):
+    """The data subsystem's ``EngineState.ext["data"]`` slot."""
+
+    network: object      # NetworkState link matrices (read-only in the loop)
+    replicas: ReplicaState
+    state: object        # DataPolicy-defined pytree
+    net_acc: jax.Array   # f32[S] WAN bytes staged since the last log write
+
+
+def _data_init(sub, state0, jobs, sites):
+    network, replicas = state0
+    replicas, dstate = sub.config.init(jobs, sites, network, replicas)
+    return DataExt(
+        network=network,
+        replicas=replicas,
+        state=dstate,
+        net_acc=jnp.zeros((sites.capacity,), jnp.float32),
+    )
+
+
+def _data_on_start(sub, ctx):
+    """Replica-aware stage-in (engine step 5b, DESIGN.md §3): dataset jobs
+    swap the flat latency+stage-in terms for a WAN transfer from the
+    policy-selected replica, with catalog bookkeeping (LRU touch,
+    cache-on-read insertion, hit/transfer counters)."""
+    from .engine import _site_sum, service_time, stage_in_time
+    from .network import shared_transfer_times
+    from .replicas import insert_replicas, touch
+
+    policy = sub.config
+    dext = ctx.ext["data"]
+    network, rep, dstate = dext.network, dext.replicas, dext.state
+    jobs, sites, S = ctx.jobs, ctx.sites, ctx.S
+    started, site_c, share, start_site = ctx.started, ctx.site_c, ctx.share, ctx.start_site
+    clock = ctx.clock
+
+    has_ds = jobs.dataset >= 0
+    # only flat-link stage-ins contend for the site ingress link; dataset
+    # jobs stage over the WAN matrix instead
+    n_flat_start = _site_sum((started & ~has_ds).astype(jnp.int32), start_site, S)
+    share_in = n_flat_start[site_c].astype(jnp.float32)
+    t_serv = service_time(jobs, ctx.sites_serv, site_c, share_in, share)
+    D = rep.present.shape[0]
+    d_c = jnp.clip(jobs.dataset, 0, D - 1)
+    ds_bytes = rep.size[d_c]
+    local = rep.present[d_c, site_c]
+    read = started & has_ds
+    src = policy.select_source(jobs, sites, network, rep, dstate, site_c, clock)
+    src_c = jnp.clip(src, 0, S - 1)
+    xfer = read & ~local
+    t_net, _ = shared_transfer_times(network, src_c, site_c, ds_bytes, xfer)
+    # swap the flat latency+stage-in terms for the WAN transfer
+    in_flat = stage_in_time(jobs, ctx.sites_serv, site_c, share_in)
+    ctx.t_serv = jnp.where(has_ds, t_serv - in_flat + t_net, t_serv)
+    # catalog bookkeeping: touch LRU clocks, cache-on-read insertion
+    rep = touch(rep, jobs.dataset, src_c, xfer, clock)
+    rep = touch(rep, jobs.dataset, site_c, read & local, clock)
+    want_cache = policy.should_cache(jobs, sites, network, rep, dstate, site_c, clock) & xfer
+    rep = insert_replicas(rep, jobs.dataset, site_c, want_cache, clock)
+    moved = jnp.where(xfer, ds_bytes, 0.0)
+    rep = rep._replace(
+        n_hits=rep.n_hits + (read & local).sum().astype(jnp.int32),
+        n_transfers=rep.n_transfers + xfer.sum().astype(jnp.int32),
+        bytes_moved=rep.bytes_moved + moved.sum(),
+    )
+    net_in_now = _site_sum(moved, jnp.where(xfer, jobs.site, S), S)
+    ctx.jobs = jobs._replace(
+        xfer_src=jnp.where(read, src_c, jobs.xfer_src),
+        xfer_bytes=jnp.where(read, moved, jobs.xfer_bytes),
+        xfer_time=jnp.where(read, t_net, jobs.xfer_time),
+    )
+    dstate = policy.on_step(dstate, ctx.jobs, rep, started, xfer, clock)
+    ctx.ext["data"] = DataExt(
+        network=network, replicas=rep, state=dstate, net_acc=dext.net_acc + net_in_now
+    )
+
+
+def _data_log_spec(sub, dext: DataExt, jobs, sites):
+    return {"site_disk": dext.replicas.disk_used, "site_net_in": dext.net_acc}
+
+
+def _data_log_columns(sub, ctx, write):
+    dext = ctx.ext["data"]
+    cols = {"site_disk": dext.replicas.disk_used, "site_net_in": dext.net_acc}
+    # WAN ingress accumulates between log writes so monitor_every > 1 still
+    # conserves bytes in the exported timeline; reset on write
+    ctx.ext["data"] = dext._replace(net_acc=jnp.where(write, 0.0, dext.net_acc))
+    return cols
+
+
+def _data_finalize(sub, dext: DataExt, jobs, sites, clock):
+    dstate = sub.config.on_end(dext.state, jobs, dext.replicas, clock)
+    dext = dext._replace(state=dstate)
+    return dext, {"replicas": dext.replicas, "data_state": dstate}
+
+
+def data_subsystem(policy: DataPolicy) -> "Subsystem":
+    """Data movement as a composable engine subsystem.  Initial state is the
+    ``(NetworkState, ReplicaState)`` pair; the DataPolicy (static functions)
+    rides in ``config`` so identically-configured subsystems share jit cache
+    entries."""
+    from .subsystems import Subsystem
+
+    return Subsystem(
+        name="data",
+        config=policy,
+        init=_data_init,
+        on_start=_data_on_start,
+        log_spec=_data_log_spec,
+        log_columns=_data_log_columns,
+        finalize=_data_finalize,
+    )
+
+
+# --------------------------------------------------------------------------
 # built-in data policies
 # --------------------------------------------------------------------------
 

@@ -49,59 +49,41 @@ def shard_jobs(jobs: JobsState, sites: SiteState, mesh: Mesh, axis: str = "data"
     J = jobs.capacity
     pad = (-J) % n_dev
     if pad:
-        from .types import make_jobs
-        import numpy as np
+        from .types import pad_jobs_capacity
 
-        # rebuild with a padded capacity; existing rows preserved
-        raw = {k: np.asarray(v)[:J] for k, v in jobs._asdict().items()}
-        jobs = make_jobs(
-            job_id=raw["job_id"],
-            arrival=raw["arrival"],
-            work=raw["work"],
-            cores=raw["cores"],
-            memory=raw["memory"],
-            bytes_in=raw["bytes_in"],
-            bytes_out=raw["bytes_out"],
-            priority=raw["priority"],
-            dataset=raw["dataset"],
-            wf_id=raw["wf_id"],
-            n_parents=raw["n_parents"],
-            dag_depth=raw["dag_depth"],
-            wf_crit=raw["wf_crit"],
-            out_dataset=raw["out_dataset"],
-            capacity=J + pad,
-        )._replace(
-            state=jnp.pad(jnp.asarray(raw["state"]), (0, pad), constant_values=4),
-            valid=jnp.pad(jnp.asarray(raw["valid"]), (0, pad), constant_values=False),
-        )
+        jobs = pad_jobs_capacity(jobs, J + pad)
     jsh, ssh, _ = job_shardings(mesh, axis, jobs, sites)
     return jax.device_put(jobs, jsh), jax.device_put(sites, ssh)
 
 
-def _replicate_aux(kw: dict, mesh: Mesh) -> dict:
-    """Place auxiliary engine state (availability calendar, replica catalog,
-    network matrices, workflow DAG) fully replicated on the mesh, mirroring
-    ``sites`` — the parent matrix is read-only inside the round loop, so
-    replication costs one copy and the ``state[parents]`` gather lowers to an
-    all-gather of the (small) sharded state vector."""
+def _prepare_subsystems(kw: dict, jobs, sites, mesh: Mesh, old_capacity: int) -> dict:
+    """Normalize the subsystem kwargs into explicit ``(Subsystem, state)``
+    pairs with state padded to the (possibly grown) job capacity and fully
+    replicated on the mesh, mirroring ``sites``.  Subsystem state is
+    read-only or all-reduced inside the round loop, so replication costs one
+    copy — and the engine never sees a mesh-specific code path.
+
+    Entirely generic: capacity padding goes through each subsystem's
+    ``pad_jobs`` hook and replication is one ``tree.map`` over the whole ext
+    mapping, so new subsystems distribute with zero code here."""
+    from .subsystems import pad_ext_jobs, resolve_subsystems
+
+    kw = dict(kw)
+    subs, ext = resolve_subsystems(
+        data_policy=kw.pop("data_policy", None),
+        network=kw.pop("network", None),
+        replicas=kw.pop("replicas", None),
+        availability=kw.pop("availability", None),
+        workflow=kw.pop("workflow", None),
+        subsystems=kw.pop("subsystems", ()),
+        jobs=jobs,
+        sites=sites,
+        validate=False,  # validated by simulate() against the padded shapes
+    )
+    ext = pad_ext_jobs(subs, ext, old_capacity, jobs.capacity)
     rep = NamedSharding(mesh, P())
-    out = dict(kw)
-    for key in ("availability", "network", "replicas", "workflow"):
-        if out.get(key) is not None:
-            out[key] = jax.tree.map(lambda x: jax.device_put(jnp.asarray(x), rep), out[key])
-    return out
-
-
-def _pad_workflow(kw: dict, capacity: int) -> dict:
-    """Grow the workflow parent matrix to a padded job capacity (padding rows
-    are parentless, so they stay inert like the padded jobs themselves)."""
-    wf = kw.get("workflow")
-    if wf is not None and wf.parents.shape[-2] != capacity:
-        pad = capacity - wf.parents.shape[-2]
-        kw = dict(kw)
-        kw["workflow"] = wf._replace(
-            parents=jnp.pad(wf.parents, ((0, pad), (0, 0)), constant_values=-1)
-        )
+    ext = jax.tree.map(lambda x: jax.device_put(jnp.asarray(x), rep), ext)
+    kw["subsystems"] = tuple((sub, ext[sub.name]) for sub in subs)
     return kw
 
 
@@ -118,7 +100,7 @@ def simulate_distributed(
     """Job-parallel simulation: identical semantics to ``engine.simulate``
     (same event rounds, same FIFO), with XLA SPMD distributing each round."""
     jobs_d, sites_d = shard_jobs(jobs, sites, mesh, axis)
-    kw = _replicate_aux(_pad_workflow(kw, jobs_d.capacity), mesh)
+    kw = _prepare_subsystems(kw, jobs_d, sites_d, mesh, jobs.capacity)
     with use_mesh(mesh):
         return simulate(jobs_d, sites_d, policy, rng, **kw)
 
@@ -166,7 +148,7 @@ def simulate_ensemble_distributed(
         raise ValueError(f"candidates {K} must divide over {n_dev} devices")
     cand = jax.device_put(speed_candidates, NamedSharding(mesh, P(axis, None)))
     keys = jax.device_put(jax.random.split(rng, K), NamedSharding(mesh, P(axis, None)))
-    kw = _replicate_aux(kw, mesh)
+    kw = _prepare_subsystems(kw, jobs, sites, mesh, jobs.capacity)
 
     def one(speed, key):
         return simulate(jobs, sites._replace(speed=speed), policy, key, **kw)

@@ -7,12 +7,8 @@ transition that fires at that instant as masked dense updates:
 
   round(t*):
     1. completions   — running jobs with t_finish <= t*  → DONE/FAILED/resubmit
-    2. availability  — sites whose outage window covers t* preempt running
-                       jobs (→ QUEUED with a retry) or drain; brown-outs scale
-                       effective speed/cores (DESIGN.md §5)
-    2c. workflow     — DAG gate: terminally-failed parents cascade-cancel
-                       descendants; children unlock when all parents are DONE
-                       (DESIGN.md §6)
+    2. subsystems    — post-completion transitions (outage preemption,
+                       DAG cascade-cancel, ...) via ``on_completions`` hooks
     3. arrivals      — pending jobs with arrival  <= t*  → QUEUED at the server
     4. assignment    — the policy plugin scores QUEUED jobs against sites;
                        feasible best-site rows become ASSIGNED (site queue)
@@ -21,8 +17,14 @@ transition that fires at that instant as masked dense updates:
                        whose cumulative core/memory demand fits free resources
     6. bookkeeping   — service times, failure sampling, counters, event log
 
-With an ``AvailabilityState`` the clock min-reduction also includes the next
-window start/end, so availability transitions are exact event rounds.
+The round body is an ordered phase pipeline over a *static* tuple of
+``Subsystem`` hook bundles (DESIGN.md §7): each subsystem contributes clock
+event sources, arrival gates, completion filters, post-completion
+transitions, feasibility/speed modifiers, service-time adjustments, and event
+log columns, and owns one slot of the generic ``EngineState.ext`` mapping.
+Specialization happens at trace time — a run without a subsystem compiles to
+the exact program the hand-written engine produced, with no ``lax.cond``
+overhead (the golden-trace matrix pins all 8 on/off combinations).
 
 FIFO-with-capacity ≡ sort + segmented prefix-sum + mask is the central
 de-actorification trick (DESIGN.md §2).
@@ -30,11 +32,12 @@ de-actorification trick (DESIGN.md §2).
 from __future__ import annotations
 
 import functools
-from typing import Callable
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from .subsystems import RoundCtx, resolve_subsystems
 from .types import (
     ASSIGNED,
     DONE,
@@ -90,6 +93,53 @@ def service_time(
     )
 
 
+def _site_sum(values: jax.Array, site: jax.Array, num_sites: int) -> jax.Array:
+    """Scatter per-job values onto their site: ``segment_sum`` with one extra
+    padding segment (site == ``num_sites``) for non-participating rows.
+
+    The ubiquitous engine scatter — completions, preemption, starts, and log
+    pressure columns all reduce job rows to per-site totals this way.
+    """
+    return jax.ops.segment_sum(values, site, num_segments=num_sites + 1)[:num_sites]
+
+
+# Below this job capacity the start order is computed by pairwise ranking
+# instead of ``jnp.lexsort``: batched ``lax.sort`` does not amortize under
+# vmap (a 16-way ``simulate_many`` ensemble pays ~18x one sort per round,
+# see benchmarks/bench_engine_rounds.py), while the O(J^2) comparison matrix
+# vectorizes perfectly.  Both paths produce the *same* permutation — the
+# job-index tiebreak makes the order strict, so the rank is unique — and the
+# downstream cumulative sums fold in the identical sequence, keeping results
+# bit-for-bit equal.  Large-J single runs keep the O(J log J) sort.
+_PAIRWISE_ORDER_MAX_J = 512
+
+
+def _start_order(
+    sort_site: jax.Array, priority: jax.Array, rank_val: jax.Array, arrival: jax.Array
+) -> jax.Array:
+    """Start-order permutation by (site, -priority, -rank, arrival, index)."""
+    J = sort_site.shape[-1]
+    idx = jnp.arange(J)
+    if J > _PAIRWISE_ORDER_MAX_J:
+        return jnp.lexsort((idx, arrival, -rank_val, -priority, sort_site))
+
+    def asc(k):  # strictly-before / tie masks on one [J, J] key level
+        return k[:, None] < k[None, :], k[:, None] == k[None, :]
+
+    def desc(k):
+        return k[:, None] > k[None, :], k[:, None] == k[None, :]
+
+    s_lt, s_eq = asc(sort_site)
+    p_lt, p_eq = desc(priority)
+    r_lt, r_eq = desc(rank_val)
+    a_lt, a_eq = asc(arrival)
+    before = s_lt | (
+        s_eq & (p_lt | (p_eq & (r_lt | (r_eq & (a_lt | (a_eq & (idx[:, None] < idx[None, :])))))))
+    )
+    rank = jnp.sum(before, axis=0, dtype=jnp.int32)   # unique in [0, J)
+    return jnp.zeros((J,), jnp.int32).at[rank].set(idx)
+
+
 def _segment_exclusive_base(values: jax.Array, seg_ids: jax.Array, num_segments: int):
     """For values sorted by seg_ids: per-element cumulative sum *within* its segment."""
     total_cum = jnp.cumsum(values)
@@ -116,7 +166,7 @@ def default_assign(scores: jax.Array, queued: jax.Array, feasible: jax.Array, si
     jax.jit,
     static_argnames=(
         "policy",
-        "data_policy",
+        "subsystems",
         "max_rounds",
         "log_rows",
         "max_retries",
@@ -124,17 +174,14 @@ def default_assign(scores: jax.Array, queued: jax.Array, feasible: jax.Array, si
         "quantum",
     ),
 )
-def simulate(
+def _simulate(
     jobs0: JobsState,
     sites0: SiteState,
     policy,
     rng: jax.Array,
+    ext0: dict,
     *,
-    data_policy=None,
-    network=None,
-    replicas=None,
-    availability=None,
-    workflow=None,
+    subsystems: tuple = (),
     max_rounds: int = 100_000,
     horizon: float = float("inf"),
     log_rows: int = 0,
@@ -142,74 +189,21 @@ def simulate(
     monitor_every: int = 1,
     quantum: float = 0.0,
 ) -> SimResult:
-    """Run the grid simulation to completion (or ``max_rounds``/``horizon``).
-
-    ``quantum`` > 0 batches all events inside [t*, t* + quantum] into one
-    round (SimGrid-style time-precision knob): timestamps quantize to the
-    window but each round retires many events — the lever that turns
-    O(events) rounds into O(horizon/quantum) for dense workloads (paper
-    Fig. 4 scaling regime).
-
-    Passing a ``data_policy`` (with a ``NetworkState`` and a ``ReplicaState``)
-    switches stage-in for dataset-carrying jobs to the replica-aware WAN
-    model: each starting job reads its dataset from the policy-selected
-    replica over the shared link matrix (zero-cost local cache hits), and the
-    policy may cache-on-read into the site's storage element (DESIGN.md §3).
-    Jobs with ``dataset == -1`` — and every run without a data policy — keep
-    the flat per-site link model, so existing callers are unchanged.
-
-    Passing an ``availability`` (an ``AvailabilityState`` downtime calendar)
-    turns on availability dynamics (DESIGN.md §5): window edges become event
-    rounds, full outages block assignment/starts and either preempt running
-    jobs (back to QUEUED with a retry; progress is lost) or drain them, and
-    brown-out windows scale a site's effective speed and usable cores by the
-    window factor.  Runs with ``availability=None`` take a code path with no
-    extra ops or RNG draws, so they stay bit-for-bit identical to the
-    pre-availability engine.
-
-    Passing a ``workflow`` (a ``WorkflowState`` DAG, DESIGN.md §6) gates the
-    dispatcher on dependencies: a job stays PENDING until every parent is
-    DONE, a terminally failed parent cascade-cancels its descendants (one
-    DAG level per round, counted in ``wf.n_cancelled``), and — when the data
-    subsystem is on — each completing parent materializes its
-    ``jobs.out_dataset`` into the replica catalog at the site it ran on, so
-    children's stage-in is priced from where the parent actually executed.
-    ``workflow=None`` adds no ops or RNG draws: bit-for-bit identical to the
-    workflow-free engine.
-    """
+    """The jitted phase pipeline; ``subsystems`` is a static Subsystem tuple,
+    ``ext0`` the matching name -> state pytree mapping (see subsystems.py)."""
     S = sites0.capacity
     J = jobs0.capacity
     policy_state0 = policy.init(jobs0, sites0)
-    log0 = make_log(log_rows, S)
-    data_on = data_policy is not None
-    if data_on:
-        if network is None or replicas is None:
-            raise ValueError("data_policy requires both network= and replicas=")
-        from .network import shared_transfer_times
-        from .replicas import insert_replicas, touch
 
-        replicas0, data_state0 = data_policy.init(jobs0, sites0, network, replicas)
-    else:
-        replicas0, data_state0 = None, ()
-    avail_on = availability is not None
-    if avail_on:
-        from .availability import availability_factor, next_window_edge, preempting_sites
-
-        if availability.win_start.shape[-2] != S:
-            raise ValueError(
-                f"availability has {availability.win_start.shape[-2]} sites, platform has {S}"
-            )
-    wf_on = workflow is not None
-    if wf_on:
-        from .types import CANCELLED
-        from .workflows import parent_status
-
-        if workflow.parents.shape[-2] != J:
-            raise ValueError(
-                f"workflow has {workflow.parents.shape[-2]} job rows, workload has {J}"
-            )
-        if data_on:
-            from .replicas import materialize_outputs
+    ext0 = dict(ext0)
+    for sub in subsystems:
+        if sub.init is not None:
+            ext0[sub.name] = sub.init(sub, ext0[sub.name], jobs0, sites0)
+    log_extra0 = {}
+    for sub in subsystems:
+        if sub.log_spec is not None:
+            log_extra0.update(sub.log_spec(sub, ext0[sub.name], jobs0, sites0))
+    log0 = make_log(log_rows, S, extra=log_extra0)
 
     def cond(st: EngineState):
         active = (
@@ -228,46 +222,39 @@ def simulate(
     def body(st: EngineState) -> EngineState:
         jobs, sites = st.jobs, st.sites
         rng, k_fail, k_frac, k_policy = jax.random.split(st.rng, 4)
+        ctx = RoundCtx(
+            jobs=jobs, sites=sites, ext=dict(st.ext),
+            clock_prev=st.clock, max_retries=max_retries,
+        )
 
         # ---- 1. advance the clock to the next event ------------------------
         arrivable = (jobs.state == PENDING) & jobs.valid
-        if wf_on:
-            # gated jobs are not an event source: their wake-up event is the
-            # last parent's completion, which fin_t already carries
-            ready0, _ = parent_status(st.wf.parents, jobs.state)
-            arrivable = arrivable & ready0
+        for sub in subsystems:
+            if sub.arrival_gate is not None:
+                # gated jobs are not an event source: their wake-up event is
+                # whatever un-gates them (e.g. a DAG parent's completion)
+                arrivable = arrivable & sub.arrival_gate(sub, ctx)
         arr_t = jnp.where(arrivable, jobs.arrival, INF)
         fin_t = jnp.where(jobs.state == RUNNING, jobs.t_finish, INF)
         t_next = jnp.minimum(arr_t.min(), fin_t.min())
-        if avail_on:
-            # window starts/ends are event sources: rounds land exactly on edges
-            t_next = jnp.minimum(t_next, next_window_edge(st.avail, st.clock))
+        for sub in subsystems:
+            if sub.event_times is not None:
+                # subsystem event sources (e.g. outage window edges) join the
+                # min-reduction so rounds land exactly on their boundaries
+                t_next = jnp.minimum(t_next, sub.event_times(sub, ctx))
         if quantum > 0.0:
             t_next = t_next + quantum
         clock = jnp.where(jnp.isfinite(t_next), jnp.maximum(st.clock, t_next), st.clock)
+        ctx.clock = clock
 
         # ---- 2. completions -------------------------------------------------
         comp = (jobs.state == RUNNING) & (jobs.t_finish <= clock)
-        if avail_on:
-            # a preempting outage opening before the job's finish kills it
-            # first; only reachable when quantum > 0 jumps the clock past
-            # both the window start and t_finish in one round (at quantum=0
-            # rounds land on every edge, so this mask is identically False).
-            # The survivor stays RUNNING and step 2b preempts it.
-            ksite = jnp.clip(jobs.site, 0, S - 1)
-            ws = st.avail.win_start[ksite]                             # [J, W]
-            wkill = st.avail.win_preempt[ksite] & (st.avail.win_factor[ksite] <= 0.0)
-            killed_first = jnp.any(
-                wkill & (ws > st.clock) & (ws < jobs.t_finish[:, None]), axis=-1
-            )
-            comp = comp & ~killed_first
+        for sub in subsystems:
+            if sub.completion_filter is not None:
+                comp = sub.completion_filter(sub, ctx, comp)
         comp_site = jnp.where(comp, jobs.site, S)  # padded segment for non-events
-        freed_cores = jax.ops.segment_sum(
-            jnp.where(comp, jobs.cores, 0), comp_site, num_segments=S + 1
-        )[:S]
-        freed_mem = jax.ops.segment_sum(
-            jnp.where(comp, jobs.memory, 0.0), comp_site, num_segments=S + 1
-        )[:S]
+        freed_cores = _site_sum(jnp.where(comp, jobs.cores, 0), comp_site, S)
+        freed_mem = _site_sum(jnp.where(comp, jobs.memory, 0.0), comp_site, S)
         failed_now = comp & jobs.will_fail
         resubmit = failed_now & (jobs.retries < max_retries)
         perm_fail = failed_now & ~resubmit
@@ -287,96 +274,46 @@ def simulate(
             free_cores=sites.free_cores + freed_cores,
             free_memory=sites.free_memory + freed_mem,
             n_finished=sites.n_finished
-            + jax.ops.segment_sum(done_now.astype(jnp.int32), comp_site, num_segments=S + 1)[:S],
+            + _site_sum(done_now.astype(jnp.int32), comp_site, S),
             n_failed=sites.n_failed
-            + jax.ops.segment_sum(failed_now.astype(jnp.int32), comp_site, num_segments=S + 1)[:S],
+            + _site_sum(failed_now.astype(jnp.int32), comp_site, S),
         )
+        ctx.jobs, ctx.sites = jobs, sites
+        ctx.comp, ctx.done_now, ctx.failed_now = comp, done_now, failed_now
 
-        # ---- 2b. availability: outage preemption & brown-out scaling ---------
-        avail = st.avail
-        pre = jnp.zeros((J,), bool)
-        if avail_on:
-            factor = availability_factor(avail, clock)     # f32[S]
-            # brown-out: a factor-f window caps usable cores at floor(f*cores);
-            # a site whose cap floors to 0 is a de facto outage, so the
-            # dispatcher routes around it just like a factor-0 window
-            eff_cap = jnp.floor(sites.cores.astype(jnp.float32) * factor).astype(jnp.int32)
-            avail_up = eff_cap > 0
-            # preempt: running jobs on a site whose preempting outage overlaps
-            # (prev clock, clock] lose this attempt now (completions above
-            # already retired jobs whose t_finish <= clock, so a job finishing
-            # at the edge still finishes; interval overlap keeps windows
-            # shorter than a quantum from being skipped)
-            site_c0 = jnp.clip(jobs.site, 0, S - 1)
-            preempting = preempting_sites(avail, st.clock, clock)[site_c0]
-            pre = (jobs.state == RUNNING) & preempting
-            pre_resub = pre & (jobs.retries < max_retries)
-            pre_fail = pre & ~pre_resub
-            pre_site = jnp.where(pre, jobs.site, S)
-            # jobs still waiting in the dead site's queue bounce back to the
-            # server — no attempt was lost, so no retry — instead of sitting
-            # stranded behind an outage while other sites idle (drain windows
-            # leave the site queue paused, as announced maintenance does)
-            bounce = (jobs.state == ASSIGNED) & preempting
-            jobs = jobs._replace(
-                state=jnp.where(
-                    pre_resub | bounce, QUEUED, jnp.where(pre_fail, FAILED, jobs.state)
-                ),
-                retries=jobs.retries + pre_resub.astype(jnp.int32),
-                site=jnp.where(pre_resub | bounce, -1, jobs.site),
-                t_finish=jnp.where(pre_resub, INF, jnp.where(pre_fail, clock, jobs.t_finish)),
-                preempted=jobs.preempted + pre.astype(jnp.int32),
-            )
-            sites = sites._replace(
-                free_cores=sites.free_cores
-                + jax.ops.segment_sum(
-                    jnp.where(pre, jobs.cores, 0), pre_site, num_segments=S + 1
-                )[:S],
-                free_memory=sites.free_memory
-                + jax.ops.segment_sum(
-                    jnp.where(pre, jobs.memory, 0.0), pre_site, num_segments=S + 1
-                )[:S],
-            )
-            avail = avail._replace(
-                n_preempted=avail.n_preempted
-                + jax.ops.segment_sum(pre.astype(jnp.int32), pre_site, num_segments=S + 1)[:S]
-            )
-        else:
-            factor = jnp.ones((S,), jnp.float32)
-
-        # ---- 2c. workflow DAG: cascade-cancel + dependency gate --------------
-        wf = st.wf
-        cancel_now = ()
-        if wf_on:
-            # recompute against post-completion states so a child whose last
-            # parent finished *this round* arrives (and can start) this round
-            ready, dead = parent_status(wf.parents, jobs.state)
-            # a dead ancestor can only be seen from PENDING: children never
-            # leave PENDING before all parents are DONE, and DONE is terminal
-            cancel_now = (jobs.state == PENDING) & jobs.valid & dead
-            jobs = jobs._replace(state=jnp.where(cancel_now, CANCELLED, jobs.state))
-            wf = wf._replace(n_cancelled=wf.n_cancelled + cancel_now.sum().astype(jnp.int32))
+        # ---- 2b. subsystem post-completion transitions -----------------------
+        # (availability preemption/brown-out, workflow cascade-cancel, ...)
+        for sub in subsystems:
+            if sub.on_completions is not None:
+                sub.on_completions(sub, ctx)
+        jobs, sites = ctx.jobs, ctx.sites
 
         # ---- 3. arrivals -----------------------------------------------------
         arrived = (jobs.state == PENDING) & (jobs.arrival <= clock) & jobs.valid
-        if wf_on:
-            arrived = arrived & ready
+        for sub in subsystems:
+            if sub.arrival_gate is not None:
+                # re-gate against post-completion states so a job un-gated
+                # *this round* arrives (and can start) this round
+                arrived = arrived & sub.arrival_gate(sub, ctx)
         jobs = jobs._replace(state=jnp.where(arrived, QUEUED, jobs.state))
+        ctx.jobs, ctx.arrived = jobs, arrived
 
         # ---- 4. policy assignment (the plugin hot spot) ----------------------
         queued = jobs.state == QUEUED
         # static feasibility: job can ever fit the site
-        feasible = (
+        ctx.feasible = (
             sites.active[None, :]
             & (jobs.cores[:, None] <= sites.cores[None, :])
             & (jobs.memory[:, None] <= sites.memory[None, :])
         )
-        if avail_on:
-            # the dispatcher routes around sites currently in a full outage
-            feasible = feasible & avail_up[None, :]
+        ctx.start_cores = sites.free_cores
+        ctx.sites_serv = sites
+        for sub in subsystems:
+            if sub.pre_assign is not None:
+                sub.pre_assign(sub, ctx)
         pstate = st.policy_state
         scores = policy.score(jobs, sites, pstate, clock, k_policy)  # [J, S]
-        site_pick, assigned_now = policy.assign(scores, queued, feasible, sites)
+        site_pick, assigned_now = policy.assign(scores, queued, ctx.feasible, sites)
         assigned_now = assigned_now & queued
         jobs = jobs._replace(
             state=jnp.where(assigned_now, ASSIGNED, jobs.state),
@@ -385,35 +322,22 @@ def simulate(
         )
         asg_site = jnp.where(assigned_now, site_pick, S)
         sites = sites._replace(
-            n_assigned=sites.n_assigned
-            + jax.ops.segment_sum(assigned_now.astype(jnp.int32), asg_site, num_segments=S + 1)[:S]
+            n_assigned=sites.n_assigned + _site_sum(assigned_now.astype(jnp.int32), asg_site, S)
         )
+        ctx.jobs, ctx.sites = jobs, sites
 
         # ---- 5. starts: per-site FIFO with capacity --------------------------
-        if avail_on:
-            # starts only claim cores up to the brown-out cap net of busy
-            # ones, at speed scaled by the window factor; a full outage
-            # (eff_cap = 0) admits no starts at all
-            busy = sites.cores - sites.free_cores
-            start_cores = jnp.clip(eff_cap - busy, 0, sites.free_cores)
-            sites_serv = sites._replace(speed=jnp.maximum(sites.speed * factor, 1e-9))
-        else:
-            start_cores = sites.free_cores
-            sites_serv = sites
         cand = jobs.state == ASSIGNED
         sort_site = jnp.where(cand, jobs.site, S).astype(jnp.int32)
+        # policy rank is a secondary start-order key: priority still
+        # dominates, rank breaks ties before arrival time (a rank-less
+        # policy contributes a constant key, which the stable lexsort ignores)
         rank_fn = getattr(policy, "rank", None)
-        if rank_fn is None:
-            order = jnp.lexsort(
-                (jnp.arange(J), jobs.arrival, -jobs.priority, sort_site)
-            )
-        else:
-            # policy rank is a secondary start-order key: priority still
-            # dominates, rank breaks ties before arrival time
-            rank_val = rank_fn(jobs, sites, pstate, clock)
-            order = jnp.lexsort(
-                (jnp.arange(J), jobs.arrival, -rank_val, -jobs.priority, sort_site)
-            )
+        rank_val = (
+            jnp.zeros((J,), jnp.float32) if rank_fn is None
+            else rank_fn(jobs, sites, pstate, clock)
+        )
+        order = _start_order(sort_site, jobs.priority, rank_val, jobs.arrival)
         site_s = sort_site[order]
         cand_s = cand[order]
         cores_s = jnp.where(cand_s, jobs.cores[order], 0).astype(jnp.int32)
@@ -422,85 +346,30 @@ def simulate(
         cum_mem = _segment_exclusive_base(mem_s, site_s, S + 1)
         fits = (
             cand_s
-            & (cum_cores <= start_cores[jnp.minimum(site_s, S - 1)])
+            & (cum_cores <= ctx.start_cores[jnp.minimum(site_s, S - 1)])
             & (cum_mem <= sites.free_memory[jnp.minimum(site_s, S - 1)] + 1e-6)
             & (site_s < S)
         )
         started = jnp.zeros((J,), bool).at[order].set(fits)
 
         start_site = jnp.where(started, jobs.site, S)
-        used_cores = jax.ops.segment_sum(
-            jnp.where(started, jobs.cores, 0), start_site, num_segments=S + 1
-        )[:S]
-        used_mem = jax.ops.segment_sum(
-            jnp.where(started, jobs.memory, 0.0), start_site, num_segments=S + 1
-        )[:S]
-        n_start_per_site = jax.ops.segment_sum(
-            started.astype(jnp.int32), start_site, num_segments=S + 1
-        )[:S]
+        used_cores = _site_sum(jnp.where(started, jobs.cores, 0), start_site, S)
+        used_mem = _site_sum(jnp.where(started, jobs.memory, 0.0), start_site, S)
+        n_start_per_site = _site_sum(started.astype(jnp.int32), start_site, S)
         site_c = jnp.minimum(jobs.site, S - 1)
         share = n_start_per_site[site_c].astype(jnp.float32)
 
-        # ---- 5b. data movement: replica-aware stage-in (DESIGN.md §3) --------
-        rep, dstate = st.replicas, st.data_state
-        net_in_now = jnp.zeros((S,), jnp.float32)
-        if data_on:
-            if wf_on:
-                # workflow output production (DESIGN.md §6): completing
-                # parents materialize their output dataset at the site they
-                # ran on — before source selection, so a child starting this
-                # same round already stages in from the parent's site
-                produced = done_now & (jobs.out_dataset >= 0)
-                rep = materialize_outputs(
-                    rep, jobs.out_dataset, jnp.clip(jobs.site, 0, S - 1), produced, clock
-                )
-                wf = wf._replace(
-                    n_produced=wf.n_produced + produced.sum().astype(jnp.int32)
-                )
-            has_ds = jobs.dataset >= 0
-            # only flat-link stage-ins contend for the site ingress link;
-            # dataset jobs stage over the WAN matrix instead
-            n_flat_start = jax.ops.segment_sum(
-                (started & ~has_ds).astype(jnp.int32), start_site, num_segments=S + 1
-            )[:S]
-            share_in = n_flat_start[site_c].astype(jnp.float32)
-            t_serv = service_time(jobs, sites_serv, site_c, share_in, share)
-            D = rep.present.shape[0]
-            d_c = jnp.clip(jobs.dataset, 0, D - 1)
-            ds_bytes = rep.size[d_c]
-            local = rep.present[d_c, site_c]
-            read = started & has_ds
-            src = data_policy.select_source(jobs, sites, network, rep, dstate, site_c, clock)
-            src_c = jnp.clip(src, 0, S - 1)
-            xfer = read & ~local
-            t_net, _ = shared_transfer_times(network, src_c, site_c, ds_bytes, xfer)
-            # swap the flat latency+stage-in terms for the WAN transfer
-            in_flat = stage_in_time(jobs, sites_serv, site_c, share_in)
-            t_serv = jnp.where(has_ds, t_serv - in_flat + t_net, t_serv)
-            # catalog bookkeeping: touch LRU clocks, cache-on-read insertion
-            rep = touch(rep, jobs.dataset, src_c, xfer, clock)
-            rep = touch(rep, jobs.dataset, site_c, read & local, clock)
-            want_cache = (
-                data_policy.should_cache(jobs, sites, network, rep, dstate, site_c, clock) & xfer
-            )
-            rep = insert_replicas(rep, jobs.dataset, site_c, want_cache, clock)
-            moved = jnp.where(xfer, ds_bytes, 0.0)
-            rep = rep._replace(
-                n_hits=rep.n_hits + (read & local).sum().astype(jnp.int32),
-                n_transfers=rep.n_transfers + xfer.sum().astype(jnp.int32),
-                bytes_moved=rep.bytes_moved + moved.sum(),
-            )
-            net_in_now = jax.ops.segment_sum(
-                moved, jnp.where(xfer, jobs.site, S), num_segments=S + 1
-            )[:S]
-            jobs = jobs._replace(
-                xfer_src=jnp.where(read, src_c, jobs.xfer_src),
-                xfer_bytes=jnp.where(read, moved, jobs.xfer_bytes),
-                xfer_time=jnp.where(read, t_net, jobs.xfer_time),
-            )
-            dstate = data_policy.on_step(dstate, jobs, rep, started, xfer, clock)
-        else:
-            t_serv = service_time(jobs, sites_serv, site_c, share, share)
+        # ---- 5b. service times + subsystem adjustments -----------------------
+        ctx.started, ctx.site_c = started, site_c
+        ctx.share, ctx.start_site = share, start_site
+        ctx.t_serv = service_time(jobs, ctx.sites_serv, site_c, share, share)
+        for sub in subsystems:
+            if sub.on_start is not None:
+                # e.g. workflow output materialization, then replica-aware
+                # stage-in repricing (DESIGN.md §3/§6) — tuple order matters
+                sub.on_start(sub, ctx)
+        jobs = ctx.jobs
+        t_serv = ctx.t_serv
 
         u_fail = jax.random.uniform(k_fail, (J,))
         will_fail = started & (u_fail < sites.fail_rate[jnp.minimum(jobs.site, S - 1)])
@@ -518,25 +387,16 @@ def simulate(
             free_cores=sites.free_cores - used_cores,
             free_memory=sites.free_memory - used_mem,
         )
+        ctx.jobs, ctx.sites = jobs, sites
 
         pstate = policy.on_step(pstate, jobs, sites, comp, started, clock)
-        disk_now = rep.disk_used if data_on else jnp.zeros((S,), jnp.float32)
-        # accumulate WAN ingress between log writes so monitor_every > 1
-        # still conserves bytes in the exported timeline
-        net_acc = st.net_acc + net_in_now
 
         # ---- 6. halt detection & event log -----------------------------------
         n_started = started.sum()
         n_completed = comp.sum()
-        progressed = (n_started > 0) | (n_completed > 0) | jnp.any(arrived)
-        if avail_on:
-            # a preemption round changed state: give the dispatcher one more
-            # round to re-route the requeued jobs before halt detection
-            progressed = progressed | jnp.any(pre)
-        if wf_on:
-            # a cancel round changed state: the cascade needs one round per
-            # DAG level even when no timed event remains
-            progressed = progressed | jnp.any(cancel_now)
+        # subsystem transitions (preemption, cascade rounds) count as progress
+        # so halt detection gives the dispatcher a round to react to them
+        progressed = (n_started > 0) | (n_completed > 0) | jnp.any(arrived) | ctx.progressed
         halted = (~jnp.isfinite(t_next)) & ~progressed
 
         log = st.log
@@ -548,16 +408,17 @@ def simulate(
             )(jnp.arange(N_STATES))
             q_site = jnp.where(jobs.state == ASSIGNED, jobs.site, S)
             r_site = jnp.where(jobs.state == RUNNING, jobs.site, S)
-            site_queued = jax.ops.segment_sum(
-                jnp.ones((J,), jnp.int32), q_site, num_segments=S + 1
-            )[:S]
-            site_running = jax.ops.segment_sum(
-                jnp.ones((J,), jnp.int32), r_site, num_segments=S + 1
-            )[:S]
+            site_queued = _site_sum(jnp.ones((J,), jnp.int32), q_site, S)
+            site_running = _site_sum(jnp.ones((J,), jnp.int32), r_site, S)
 
             def wr(buf, val):
                 return jnp.where(write, buf.at[slot].set(val), buf)
 
+            extra = dict(log.extra)
+            for sub in subsystems:
+                if sub.log_columns is not None:
+                    for k, v in sub.log_columns(sub, ctx, write).items():
+                        extra[k] = wr(extra[k], v)
             log = EventLog(
                 time=wr(log.time, clock),
                 round_idx=wr(log.round_idx, st.round),
@@ -567,12 +428,9 @@ def simulate(
                 site_free=wr(log.site_free, sites.free_cores),
                 site_queued=wr(log.site_queued, site_queued),
                 site_running=wr(log.site_running, site_running),
-                site_disk=wr(log.site_disk, disk_now),
-                site_net_in=wr(log.site_net_in, net_acc),
-                site_avail=wr(log.site_avail, factor),
+                extra=extra,
                 cursor=log.cursor + write.astype(jnp.int32),
             )
-            net_acc = jnp.where(write, 0.0, net_acc)
 
         return EngineState(
             clock=clock,
@@ -583,11 +441,7 @@ def simulate(
             policy_state=pstate,
             log=log,
             halted=halted,
-            replicas=rep,
-            data_state=dstate,
-            net_acc=net_acc,
-            avail=avail,
-            wf=wf,
+            ext=ctx.ext,
         )
 
     st0 = EngineState(
@@ -599,17 +453,16 @@ def simulate(
         policy_state=policy_state0,
         log=log0,
         halted=jnp.array(False),
-        replicas=replicas0,
-        data_state=data_state0,
-        net_acc=jnp.zeros((S,), jnp.float32),
-        avail=availability if avail_on else (),
-        wf=workflow if wf_on else (),
+        ext=ext0,
     )
     st = jax.lax.while_loop(cond, body, st0)
     pstate = policy.on_end(st.policy_state, st.jobs, st.sites, st.clock)
-    dstate = (
-        data_policy.on_end(st.data_state, st.jobs, st.replicas, st.clock) if data_on else ()
-    )
+    ext = dict(st.ext)
+    result_fields = {}
+    for sub in subsystems:
+        if sub.finalize is not None:
+            ext[sub.name], fields = sub.finalize(sub, ext[sub.name], st.jobs, st.sites, st.clock)
+            result_fields.update(fields)
     return SimResult(
         makespan=st.clock,
         rounds=st.round,
@@ -617,11 +470,181 @@ def simulate(
         sites=st.sites,
         log=st.log,
         policy_state=pstate,
-        replicas=st.replicas,
-        data_state=dstate,
-        avail=st.avail if avail_on else None,
-        wf=st.wf if wf_on else None,
+        ext=ext,
+        **result_fields,
     )
+
+
+def simulate(
+    jobs0: JobsState,
+    sites0: SiteState,
+    policy,
+    rng: jax.Array,
+    *,
+    data_policy=None,
+    network=None,
+    replicas=None,
+    availability=None,
+    workflow=None,
+    subsystems=(),
+    max_rounds: int = 100_000,
+    horizon: float = float("inf"),
+    log_rows: int = 0,
+    max_retries: int = 3,
+    monitor_every: int = 1,
+    quantum: float = 0.0,
+) -> SimResult:
+    """Run the grid simulation to completion (or ``max_rounds``/``horizon``).
+
+    ``quantum`` > 0 batches all events inside [t*, t* + quantum] into one
+    round (SimGrid-style time-precision knob): timestamps quantize to the
+    window but each round retires many events — the lever that turns
+    O(events) rounds into O(horizon/quantum) for dense workloads (paper
+    Fig. 4 scaling regime).
+
+    Engine extensions are ``Subsystem`` hook bundles (DESIGN.md §7) composed
+    into the round loop at trace time.  The built-in trio keeps its keyword
+    API — each maps onto a subsystem in canonical order:
+
+    - ``data_policy=`` (with ``network=`` and ``replicas=``) switches stage-in
+      for dataset-carrying jobs to the replica-aware WAN model: each starting
+      job reads its dataset from the policy-selected replica over the shared
+      link matrix (zero-cost local cache hits), and the policy may
+      cache-on-read into the site's storage element (DESIGN.md §3).  Jobs with
+      ``dataset == -1`` — and every run without a data policy — keep the flat
+      per-site link model.
+
+    - ``availability=`` (an ``AvailabilityState`` downtime calendar) turns on
+      availability dynamics (DESIGN.md §5): window edges become event rounds,
+      full outages block assignment/starts and either preempt running jobs
+      (back to QUEUED with a retry) or drain them, and brown-out windows scale
+      a site's effective speed and usable cores by the window factor.
+
+    - ``workflow=`` (a ``WorkflowState`` DAG, DESIGN.md §6) gates the
+      dispatcher on dependencies: a job stays PENDING until every parent is
+      DONE, a terminally failed parent cascade-cancels its descendants, and —
+      when the data subsystem is on — each completing parent materializes its
+      ``jobs.out_dataset`` into the replica catalog at the site it ran on.
+
+    ``subsystems=((Subsystem, state0), ...)`` appends custom subsystems after
+    the built-ins (see ``examples/custom_subsystem.py``).  Every ``None``/
+    absent subsystem costs nothing: specialization is static, so such runs
+    stay bit-for-bit identical to an engine compiled without the subsystem.
+    """
+    subs, ext0 = resolve_subsystems(
+        data_policy=data_policy,
+        network=network,
+        replicas=replicas,
+        availability=availability,
+        workflow=workflow,
+        subsystems=subsystems,
+        jobs=jobs0,
+        sites=sites0,
+    )
+    return _simulate(
+        jobs0, sites0, policy, rng, ext0,
+        subsystems=subs,
+        max_rounds=max_rounds,
+        horizon=horizon,
+        log_rows=log_rows,
+        max_retries=max_retries,
+        monitor_every=monitor_every,
+        quantum=quantum,
+    )
+
+
+# --------------------------------------------------------------------------
+# scenario ensembles: one compile, many simulations
+# --------------------------------------------------------------------------
+
+
+class Scenario(NamedTuple):
+    """One point of a scenario ensemble: a workload + platform + per-scenario
+    subsystem states (calendars, catalogs, DAGs) keyed by subsystem name.
+
+    Feed a list of these (identical shapes/treedefs) to ``simulate_many`` —
+    or pre-stack them with ``stack_scenarios`` — to batch the whole ensemble
+    through one vmapped compile.
+    """
+
+    jobs: JobsState
+    sites: SiteState
+    ext: dict | None = None
+
+
+def stack_scenarios(scenarios, *, subsystems: tuple = ()) -> Scenario:
+    """Stack a list of Scenarios into one leading-K pytree.
+
+    Ragged workloads (different job counts per scenario) are canonicalized by
+    padding every ``jobs`` to the largest capacity with inert rows — the
+    static-shape normalization that lets the whole ensemble share a single
+    compile where a ``simulate`` loop would retrace per size.  Job-shaped
+    subsystem state (e.g. a workflow parent matrix) pads alongside through
+    each subsystem's ``pad_jobs`` hook when ``subsystems`` is given
+    (``simulate_many`` passes its own).  Sites and non-job-shaped subsystem
+    state must already share shapes (pad calendars/catalogs with their
+    builders' ``max_windows=``/``capacity=`` knobs).
+    """
+    from .subsystems import pad_ext_jobs
+    from .types import pad_jobs_capacity
+
+    scenarios = list(scenarios)
+    if not scenarios:
+        raise ValueError("need at least one scenario")
+    cap = max(s.jobs.capacity for s in scenarios)
+    norm = [
+        Scenario(
+            pad_jobs_capacity(s.jobs, cap),
+            s.sites,
+            pad_ext_jobs(subsystems, s.ext or {}, s.jobs.capacity, cap),
+        )
+        for s in scenarios
+    ]
+    return jax.tree.map(lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *norm)
+
+
+def simulate_many(
+    scenarios,
+    policy,
+    rng: jax.Array,
+    *,
+    subsystems: tuple = (),
+    **kw,
+) -> SimResult:
+    """Batched ensemble execution: K scenarios, one compile, one device program.
+
+    ``scenarios`` is a list of ``Scenario``s (stacked here) or an already
+    stacked ``Scenario`` whose leaves carry a leading K axis — stacked
+    workloads, platforms (speeds), and subsystem states (outage calendars,
+    replica catalogs, workflow DAGs) all vary per scenario.  ``subsystems``
+    is a tuple of the static ``Subsystem`` bundles matching the keys of
+    ``Scenario.ext`` (empty for plain runs).  Each scenario gets its own RNG
+    stream; the returned ``SimResult`` has a leading K axis on every leaf.
+
+    This is the surrogate-dataset / design-space lever (ROADMAP): the paper
+    runs scenarios one process at a time, a vmapped ensemble retires them in
+    lockstep rounds at device throughput (``benchmarks/bench_engine_rounds``).
+    """
+    if not isinstance(scenarios, Scenario):
+        scenarios = stack_scenarios(scenarios, subsystems=subsystems)
+    ext = scenarios.ext or {}
+    known = {sub.name for sub in subsystems}
+    if set(ext) != known:
+        raise ValueError(
+            f"scenario ext keys {sorted(ext)} must match the attached "
+            f"subsystems {sorted(known)} one-to-one"
+        )
+    for sub in subsystems:
+        if sub.validate is not None:
+            # shape checks use negative axes, so the leading K is transparent
+            sub.validate(sub, ext[sub.name], scenarios.jobs, scenarios.sites)
+    K = scenarios.jobs.arrival.shape[0]
+    keys = jax.random.split(rng, K)
+
+    def one(jobs, sites, ext_k, key):
+        return _simulate(jobs, sites, policy, key, ext_k, subsystems=subsystems, **kw)
+
+    return jax.vmap(one)(scenarios.jobs, scenarios.sites, ext, keys)
 
 
 def simulate_ensemble(

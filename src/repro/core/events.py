@@ -315,8 +315,15 @@ def ml_dataset(result: SimResult) -> dict[str, np.ndarray]:
 
 
 def log_frames(result: SimResult) -> list[dict]:
-    """Per-round monitoring snapshots captured in-sim (EventLog ring buffer)."""
+    """Per-round monitoring snapshots captured in-sim (EventLog ring buffer).
+
+    Core pressure columns are always present; subsystem-declared columns
+    (``EventLog.extra``, DESIGN.md §7 — e.g. ``site_disk``/``site_net_in``
+    from the data subsystem, ``site_avail`` from availability) appear under
+    their declared names whenever the subsystem ran, so the export schema
+    assembles itself from whatever was attached."""
     log = jax_to_np(result.log)
+    extra = {k: np.asarray(v) for k, v in result.log.extra.items()}
     n = int(log["cursor"])
     rows = min(n, len(log["time"]))
     out = []
@@ -333,13 +340,11 @@ def log_frames(result: SimResult) -> list[dict]:
                 site_free=log["site_free"][i].tolist(),
                 site_queued=log["site_queued"][i].tolist(),
                 site_running=log["site_running"][i].tolist(),
-                site_disk=log["site_disk"][i].tolist(),
-                site_net_in=log["site_net_in"][i].tolist(),
-                site_avail=log["site_avail"][i].tolist(),
+                **{k: v[i].tolist() for k, v in extra.items()},
             )
         )
     return out
 
 
 def jax_to_np(tree) -> dict[str, np.ndarray]:
-    return {k: np.asarray(v) for k, v in tree._asdict().items()}
+    return {k: np.asarray(v) for k, v in tree._asdict().items() if not isinstance(v, dict)}

@@ -90,26 +90,31 @@ def utilization_timeline(result: SimResult) -> np.ndarray:
     return np.stack(rows) if rows else np.zeros((0, cores.size))
 
 
+def extra_timeline(result: SimResult, column: str, default: float = 0.0) -> np.ndarray:
+    """[T, S] per-frame values of a subsystem-declared log column
+    (``EventLog.extra``, DESIGN.md §7); ``default`` fills frames from runs
+    where the owning subsystem was not attached."""
+    frames = log_frames(result)
+    S = result.sites.capacity
+    fallback = np.full((S,), default)
+    rows = [np.asarray(f.get(column, fallback), dtype=np.float64) for f in frames]
+    return np.stack(rows) if rows else np.zeros((0, S))
+
+
 def storage_timeline(result: SimResult) -> np.ndarray:
     """[T, S] storage-element occupancy (bytes) per logged frame."""
-    frames = log_frames(result)
-    rows = [np.asarray(f["site_disk"], dtype=np.float64) for f in frames]
-    return np.stack(rows) if rows else np.zeros((0, result.sites.capacity))
+    return extra_timeline(result, "site_disk")
 
 
 def network_timeline(result: SimResult) -> np.ndarray:
     """[T, S] WAN bytes staged into each site per logged frame."""
-    frames = log_frames(result)
-    rows = [np.asarray(f["site_net_in"], dtype=np.float64) for f in frames]
-    return np.stack(rows) if rows else np.zeros((0, result.sites.capacity))
+    return extra_timeline(result, "site_net_in")
 
 
 def availability_timeline(result: SimResult) -> np.ndarray:
     """[T, S] availability factor per logged frame (1 up, (0,1) degraded,
     0 down) — the DESIGN.md §5 dashboard feed for outage/brown-out studies."""
-    frames = log_frames(result)
-    rows = [np.asarray(f["site_avail"], dtype=np.float64) for f in frames]
-    return np.stack(rows) if rows else np.zeros((0, result.sites.capacity))
+    return extra_timeline(result, "site_avail", default=1.0)
 
 
 def workflow_timeline(result: SimResult) -> tuple[np.ndarray, np.ndarray]:

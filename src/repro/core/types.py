@@ -90,6 +90,10 @@ class EventLog(NamedTuple):
 
     ``site_free``/``site_running``/``site_queued`` are per-site columns so the
     monitor can render node pressure; ``counts`` are global per-state tallies.
+    ``extra`` holds subsystem-declared columns (DESIGN.md §7) keyed by name —
+    e.g. ``site_disk``/``site_net_in`` from the data subsystem, ``site_avail``
+    from availability — so new subsystems export dashboard feeds without
+    touching this type.
     """
 
     time: jax.Array          # f32[R]
@@ -100,9 +104,7 @@ class EventLog(NamedTuple):
     site_free: jax.Array     # i32[R, S]
     site_queued: jax.Array   # i32[R, S] jobs sitting in each site queue
     site_running: jax.Array  # i32[R, S]
-    site_disk: jax.Array     # f32[R, S] storage-element bytes resident
-    site_net_in: jax.Array   # f32[R, S] WAN bytes staged into each site this round
-    site_avail: jax.Array    # f32[R, S] availability factor (1 up, 0 down)
+    extra: dict              # {name: [R, ...]} subsystem-declared columns
     cursor: jax.Array        # i32[] next write slot (wraps)
 
     @property
@@ -111,6 +113,10 @@ class EventLog(NamedTuple):
 
 
 class EngineState(NamedTuple):
+    """The while-loop carry: core engine state plus the generic subsystem
+    extension mapping ``ext`` (a dict pytree, one slot per Subsystem name —
+    DESIGN.md §7).  Subsystem-specific fields never appear here."""
+
     clock: jax.Array        # f32[]
     round: jax.Array        # i32[]
     jobs: JobsState
@@ -119,11 +125,7 @@ class EngineState(NamedTuple):
     policy_state: object    # policy-defined pytree
     log: EventLog
     halted: jax.Array       # bool[] no further progress possible
-    replicas: object = None     # ReplicaState when the data subsystem is on
-    data_state: object = ()     # DataPolicy-defined pytree
-    net_acc: object = ()        # f32[S] WAN bytes staged since the last log write
-    avail: object = ()          # AvailabilityState when availability dynamics are on
-    wf: object = ()             # WorkflowState when the workflow DAG subsystem is on
+    ext: dict               # {subsystem name: subsystem-defined state pytree}
 
 
 class SimResult(NamedTuple):
@@ -137,6 +139,7 @@ class SimResult(NamedTuple):
     data_state: object = ()
     avail: object = None        # final AvailabilityState (None without availability)
     wf: object = None           # final WorkflowState (None without a workflow DAG)
+    ext: object = None          # {name: final state} for every attached subsystem
 
 
 def make_jobs(
@@ -217,6 +220,29 @@ def make_jobs(
     )
 
 
+def pad_jobs_capacity(jobs: JobsState, capacity: int) -> JobsState:
+    """Grow a JobsState to ``capacity`` rows of inert padding (DONE/invalid,
+    never arriving) — the shape canonicalization used by ragged scenario
+    ensembles (``stack_scenarios``) and mesh sharding (``shard_jobs``)."""
+    J = jobs.capacity
+    if capacity == J:
+        return jobs
+    if capacity < J:
+        raise ValueError(f"capacity {capacity} < current job capacity {J}")
+    n = capacity - J
+    fills = dict(
+        job_id=-1, arrival=jnp.inf, state=DONE, site=-1, t_assign=jnp.inf,
+        t_start=jnp.inf, t_finish=jnp.inf, valid=False, dataset=-1,
+        xfer_src=-1, wf_id=-1, out_dataset=-1, cores=1,
+    )
+
+    def pad(name, x):
+        fill = fills.get(name, 0)
+        return jnp.pad(x, [(0, n)] + [(0, 0)] * (x.ndim - 1), constant_values=fill)
+
+    return JobsState(**{k: pad(k, v) for k, v in jobs._asdict().items()})
+
+
 def make_sites(
     *,
     cores,
@@ -268,7 +294,9 @@ def make_sites(
     )
 
 
-def make_log(rows: int, n_sites: int) -> EventLog:
+def make_log(rows: int, n_sites: int, extra: dict | None = None) -> EventLog:
+    """Allocate the ring buffer.  ``extra`` maps subsystem column names to
+    their time-zero row values; unwritten rows keep that initial value."""
     r = max(rows, 1)
     return EventLog(
         time=jnp.full((r,), jnp.nan, jnp.float32),
@@ -279,8 +307,9 @@ def make_log(rows: int, n_sites: int) -> EventLog:
         site_free=jnp.zeros((r, n_sites), jnp.int32),
         site_queued=jnp.zeros((r, n_sites), jnp.int32),
         site_running=jnp.zeros((r, n_sites), jnp.int32),
-        site_disk=jnp.zeros((r, n_sites), jnp.float32),
-        site_net_in=jnp.zeros((r, n_sites), jnp.float32),
-        site_avail=jnp.ones((r, n_sites), jnp.float32),
+        extra={
+            k: jnp.broadcast_to(jnp.asarray(v)[None], (r,) + jnp.asarray(v).shape)
+            for k, v in (extra or {}).items()
+        },
         cursor=jnp.zeros((), jnp.int32),
     )

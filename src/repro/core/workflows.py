@@ -38,8 +38,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .replicas import ReplicaState, make_replicas
-from .types import CANCELLED, DONE, FAILED, JobsState, make_jobs
+from .replicas import ReplicaState, make_replicas, materialize_outputs
+from .types import CANCELLED, DONE, FAILED, PENDING, JobsState, make_jobs
 from . import policies as _policies
 
 
@@ -80,6 +80,95 @@ def parent_status(parents: jax.Array, job_state: jax.Array):
     ready = jnp.all(~has | (ps == DONE), axis=-1)
     dead = jnp.any(has & ((ps == FAILED) | (ps == CANCELLED)), axis=-1)
     return ready, dead
+
+
+# --------------------------------------------------------------------------
+# the workflow Subsystem (DESIGN.md §7): dependency gate, cascade-cancel, and
+# output materialization as hooks on the composable round-loop protocol
+# --------------------------------------------------------------------------
+
+
+def _wf_validate(sub, wf: WorkflowState, jobs, sites) -> None:
+    J = jobs.capacity
+    if wf.parents.shape[-2] != J:
+        raise ValueError(
+            f"workflow has {wf.parents.shape[-2]} job rows, workload has {J}"
+        )
+
+
+def _wf_arrival_gate(sub, ctx):
+    # gated jobs wait for their last parent's completion; called once for the
+    # clock min-reduction (pre-completion states) and once for arrivals
+    # (post-completion states, so a child un-gated this round arrives now)
+    ready, _ = parent_status(ctx.ext["workflow"].parents, ctx.jobs.state)
+    return ready
+
+
+def _wf_on_completions(sub, ctx):
+    """Cascade-cancel (engine step 2c): a terminally dead parent cancels its
+    PENDING descendants, one DAG level per round."""
+    wf = ctx.ext["workflow"]
+    jobs = ctx.jobs
+    # a dead ancestor can only be seen from PENDING: children never leave
+    # PENDING before all parents are DONE, and DONE is terminal
+    _, dead = parent_status(wf.parents, jobs.state)
+    cancel_now = (jobs.state == PENDING) & jobs.valid & dead
+    ctx.jobs = jobs._replace(state=jnp.where(cancel_now, CANCELLED, jobs.state))
+    ctx.ext["workflow"] = wf._replace(
+        n_cancelled=wf.n_cancelled + cancel_now.sum().astype(jnp.int32)
+    )
+    # a cancel round changed state: the cascade needs one round per DAG
+    # level even when no timed event remains
+    ctx.progressed = jnp.logical_or(ctx.progressed, jnp.any(cancel_now))
+
+
+def _wf_on_start(sub, ctx):
+    """Output production (DESIGN.md §6): completing parents materialize their
+    output dataset at the site they ran on — before the data subsystem's
+    source selection (it runs later in the tuple), so a child starting this
+    same round already stages in from the parent's site.  A no-op unless the
+    data subsystem is attached: without a catalog there is nowhere to
+    materialize into."""
+    dext = ctx.ext.get("data")
+    if dext is None:
+        return
+    jobs = ctx.jobs
+    produced = ctx.done_now & (jobs.out_dataset >= 0)
+    rep = materialize_outputs(
+        dext.replicas, jobs.out_dataset, jnp.clip(jobs.site, 0, ctx.S - 1), produced, ctx.clock
+    )
+    ctx.ext["data"] = dext._replace(replicas=rep)
+    wf = ctx.ext["workflow"]
+    ctx.ext["workflow"] = wf._replace(
+        n_produced=wf.n_produced + produced.sum().astype(jnp.int32)
+    )
+
+
+def _wf_pad_jobs(sub, wf: WorkflowState, old_capacity: int, new_capacity: int):
+    """Grow the parent matrix to a padded job capacity (padding rows are
+    parentless, so they stay inert like the padded jobs themselves)."""
+    pad = new_capacity - wf.parents.shape[-2]
+    return wf._replace(parents=jnp.pad(wf.parents, ((0, pad), (0, 0)), constant_values=-1))
+
+
+def _wf_finalize(sub, wf, jobs, sites, clock):
+    return wf, {"wf": wf}
+
+
+def workflow_subsystem() -> "Subsystem":
+    """The workflow DAG as a composable engine subsystem; its ext slot
+    carries the ``WorkflowState`` (parent matrix + counters)."""
+    from .subsystems import Subsystem
+
+    return Subsystem(
+        name="workflow",
+        validate=_wf_validate,
+        arrival_gate=_wf_arrival_gate,
+        on_completions=_wf_on_completions,
+        on_start=_wf_on_start,
+        pad_jobs=_wf_pad_jobs,
+        finalize=_wf_finalize,
+    )
 
 
 # --------------------------------------------------------------------------

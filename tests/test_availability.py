@@ -139,9 +139,15 @@ def test_no_availability_vs_empty_calendar_bit_for_bit():
             np.asarray(getattr(r0.sites, k)), np.asarray(getattr(r1.sites, k)), err_msg=f"sites.{k}"
         )
     for k in r0.log._fields:
+        if k == "extra":
+            continue
         np.testing.assert_array_equal(
             np.asarray(getattr(r0.log, k)), np.asarray(getattr(r1.log, k)), err_msg=f"log.{k}"
         )
+    # subsystem-declared log columns exist only when the subsystem is attached
+    # (DESIGN.md §7); an empty calendar's factor column is identically 1
+    assert "site_avail" not in r0.log.extra
+    np.testing.assert_array_equal(np.asarray(r1.log.extra["site_avail"]), 1.0)
     assert float(r0.makespan) == float(r1.makespan)
     assert int(r0.rounds) == int(r1.rounds)
     assert r0.avail is None and r1.avail is not None

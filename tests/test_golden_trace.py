@@ -12,6 +12,7 @@ After an intentional semantics change, regenerate with
 
 and commit the diff alongside the change that caused it.
 """
+import itertools
 import json
 import os
 import pathlib
@@ -22,13 +23,19 @@ import pytest
 
 from repro.core import (
     atlas_like_platform,
+    get_data_policy,
     get_policy,
     make_availability,
+    make_replicas,
+    make_workflow,
     simulate,
     synthetic_panda_jobs,
+    uniform_network,
+    zipf_dataset_sizes,
 )
 
 GOLDEN = pathlib.Path(__file__).parent / "data" / "golden_trace.json"
+GOLDEN_MATRIX = pathlib.Path(__file__).parent / "data" / "golden_matrix.json"
 
 
 def _snapshot_one(res) -> dict:
@@ -78,6 +85,140 @@ def test_golden_trace_exact():
         pytest.skip(f"regenerated {GOLDEN}")
     expected = json.loads(GOLDEN.read_text())
     assert snap == expected
+
+
+# --------------------------------------------------------------------------
+# subsystem on/off matrix (ISSUE 4): every combination of the data-movement,
+# availability, and workflow subsystems must stay bit-for-bit stable
+# --------------------------------------------------------------------------
+
+N_DS = 12
+
+
+def _snapshot_combo(res) -> dict:
+    """Per-combo snapshot: the base engine probe plus each subsystem's own
+    counters, so a regression in any one layer shifts its combo rows."""
+    snap = _snapshot_one(res)
+    snap["state_counts"]["6"] = int(
+        (np.asarray(res.jobs.state)[np.asarray(res.jobs.valid)] == 6).sum()
+    )
+    rep = res.replicas
+    snap["data"] = (
+        dict(
+            n_hits=int(rep.n_hits),
+            n_transfers=int(rep.n_transfers),
+            bytes_moved=float(rep.bytes_moved),
+            disk_used=np.asarray(rep.disk_used).tolist(),
+        )
+        if rep is not None
+        else None
+    )
+    wf = res.wf
+    snap["workflow"] = (
+        dict(n_cancelled=int(wf.n_cancelled), n_produced=int(wf.n_produced))
+        if wf is not None
+        else None
+    )
+    return snap
+
+
+def matrix_scenario():
+    """One deterministic scenario feeding all 8 subsystem combinations.
+
+    Every catalogued dataset is materialized at t=0 (origins at site 0's data
+    lake), so the data subsystem is valid with or without the workflow gate;
+    the DAG chains half the jobs pairwise so cancellation, gating, and (with
+    data on) output materialization all fire.
+    """
+    jobs = synthetic_panda_jobs(60, seed=11, duration=900.0, n_datasets=N_DS)
+    sites = atlas_like_platform(4, seed=12, fail_rate=0.05)
+    availability = make_availability(
+        4,
+        [
+            dict(site=3, start=2000.0, end=20000.0, preempt=True),
+            dict(site=2, start=500.0, end=5000.0, factor=0.5),
+            dict(site=1, start=8000.0, end=12000.0, factor=0.0, preempt=False),
+        ],
+    )
+    network = uniform_network(4, bw=5e8, latency=0.05)
+    replicas = make_replicas(
+        zipf_dataset_sizes(N_DS, seed=3, mean_bytes=2e9),
+        disk_capacity=np.array([1e13, 6e9, 6e9, 6e9]),
+        origin=np.zeros(N_DS, np.int32),
+    )
+    data_policy = get_data_policy("cache_on_read")
+    # pairwise chains over consecutive jobs; even rows materialize an output
+    # the odd child job consumes through the catalog when data is on
+    edges = [(j - 1, j) for j in range(1, 60, 2)]
+    out_dataset = np.where(np.arange(60) % 2 == 0, np.arange(60) % N_DS, -1)
+    jobs_wf, workflow = make_workflow(jobs, edges, out_dataset=out_dataset)
+    return dict(
+        jobs=jobs,
+        jobs_wf=jobs_wf,
+        sites=sites,
+        availability=availability,
+        network=network,
+        replicas=replicas,
+        data_policy=data_policy,
+        workflow=workflow,
+    )
+
+
+def combo_kwargs(scn: dict, data: bool, avail: bool, wf: bool):
+    jobs = scn["jobs_wf"] if wf else scn["jobs"]
+    kw = {}
+    if data:
+        kw.update(
+            data_policy=scn["data_policy"],
+            network=scn["network"],
+            replicas=scn["replicas"],
+        )
+    if avail:
+        kw["availability"] = scn["availability"]
+    if wf:
+        kw["workflow"] = scn["workflow"]
+    return jobs, kw
+
+
+def compute_matrix_snapshot() -> dict:
+    scn = matrix_scenario()
+    pol = get_policy("panda_dispatch")
+    key = jax.random.PRNGKey(0)
+    out = {}
+    for data, avail, wf in itertools.product((False, True), repeat=3):
+        name = "+".join(
+            n for n, on in (("data", data), ("avail", avail), ("wf", wf)) if on
+        ) or "plain"
+        jobs, kw = combo_kwargs(scn, data, avail, wf)
+        out[name] = _snapshot_combo(simulate(jobs, scn["sites"], pol, key, **kw))
+    return out
+
+
+def test_golden_matrix_exact():
+    """Bit-for-bit parity for all 8 subsystem on/off combinations."""
+    snap = compute_matrix_snapshot()
+    if os.environ.get("REGEN_GOLDEN"):
+        GOLDEN_MATRIX.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN_MATRIX.write_text(json.dumps(snap, indent=2) + "\n")
+        pytest.skip(f"regenerated {GOLDEN_MATRIX}")
+    expected = json.loads(GOLDEN_MATRIX.read_text())
+    assert snap == expected
+
+
+def test_golden_matrix_is_sensitive():
+    """Each subsystem must leave a visible fingerprint in its combo rows."""
+    expected = json.loads(GOLDEN_MATRIX.read_text())
+    assert set(expected) == {
+        "plain", "data", "avail", "wf", "data+avail", "data+wf", "avail+wf",
+        "data+avail+wf",
+    }
+    # availability preempts; data moves bytes; the coupled combo materializes
+    assert sum(expected["avail"]["n_preempted"]) > 0
+    assert expected["data"]["data"]["n_transfers"] > 0
+    assert expected["data+avail+wf"]["workflow"]["n_produced"] > 0
+    # subsystems genuinely interact: no two combos collapse to the same run
+    spans = {k: (v["makespan"], v["rounds"]) for k, v in expected.items()}
+    assert len(set(spans.values())) == len(spans)
 
 
 def test_golden_scenario_is_sensitive():

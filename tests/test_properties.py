@@ -184,7 +184,7 @@ def build_scenario(n_jobs, seed, policy, *, fail_rate, with_avail, with_data):
             origin=np.zeros(8, np.int32),
         )
     res = simulate(jobs, sites, get_policy(policy), jax.random.PRNGKey(seed), **kw)
-    return res, jobs, sites
+    return res, jobs, sites, kw
 
 
 def assert_conservation_laws(res, jobs0, sites0):
@@ -232,7 +232,7 @@ def assert_conservation_laws(res, jobs0, sites0):
     policy=st.sampled_from(POLICIES),
 )
 def test_conservation_laws_plain(n_jobs, seed, fail_rate, policy):
-    res, jobs0, sites0 = build_scenario(
+    res, jobs0, sites0, _ = build_scenario(
         n_jobs, seed, policy, fail_rate=fail_rate, with_avail=False, with_data=False
     )
     assert_conservation_laws(res, jobs0, sites0)
@@ -246,7 +246,7 @@ def test_conservation_laws_plain(n_jobs, seed, fail_rate, policy):
     policy=st.sampled_from(["round_robin", "least_loaded", "panda_dispatch"]),
 )
 def test_conservation_laws_with_availability(n_jobs, seed, fail_rate, policy):
-    res, jobs0, sites0 = build_scenario(
+    res, jobs0, sites0, _ = build_scenario(
         n_jobs, seed, policy, fail_rate=fail_rate, with_avail=True, with_data=False
     )
     assert_conservation_laws(res, jobs0, sites0)
@@ -259,10 +259,53 @@ def test_conservation_laws_with_availability(n_jobs, seed, fail_rate, policy):
     with_avail=st.booleans(),
 )
 def test_conservation_laws_with_data_policy(n_jobs, seed, with_avail):
-    res, jobs0, sites0 = build_scenario(
+    res, jobs0, sites0, _ = build_scenario(
         n_jobs, seed, "round_robin", fail_rate=0.1, with_avail=with_avail, with_data=True
     )
     assert_conservation_laws(res, jobs0, sites0)
+
+
+# --------------------------------------------------------------------------
+# subsystem-API equivalence (ISSUE 4): the legacy kwargs surface and an
+# explicit subsystems=(...) tuple are the same engine, bit for bit
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    n_jobs=st.integers(10, 48),
+    seed=st.integers(0, 2**16),
+    with_avail=st.booleans(),
+    with_data=st.booleans(),
+)
+def test_kwargs_and_subsystems_tuple_identical(n_jobs, seed, with_avail, with_data):
+    """Running the same seed through ``availability=``/``data_policy=`` kwargs
+    and through an explicit ``subsystems=((Subsystem, state0), ...)`` tuple
+    must produce identical ``SimResult`` pytrees — same leaves, same
+    treedef — so the kwargs surface is provably sugar over the protocol."""
+    from repro.core import availability_subsystem, data_subsystem
+
+    res1, jobs, sites, kw = build_scenario(
+        n_jobs, seed, "panda_dispatch", fail_rate=0.1,
+        with_avail=with_avail, with_data=with_data,
+    )
+    # attach the exact same state objects explicitly, in canonical order
+    pairs = []
+    if with_avail:
+        pairs.append((availability_subsystem(), kw["availability"]))
+    if with_data:
+        pairs.append(
+            (data_subsystem(kw["data_policy"]), (kw["network"], kw["replicas"]))
+        )
+    res2 = simulate(
+        jobs, sites, get_policy("panda_dispatch"), jax.random.PRNGKey(seed),
+        subsystems=tuple(pairs),
+    )
+    leaves1, tree1 = jax.tree.flatten(res1)
+    leaves2, tree2 = jax.tree.flatten(res2)
+    assert tree1 == tree2
+    for a, b in zip(leaves1, leaves2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 # --------------------------------------------------------------------------
