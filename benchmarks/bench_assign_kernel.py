@@ -4,24 +4,30 @@ router-shaped problems.  On CPU the interpret-mode kernel measures semantics,
 not speed; the oracle timing is the deployable-jnp datapoint."""
 from __future__ import annotations
 
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.assign.ops import assign
+from repro.kernels.assign.ops import assign, make_capacity_assign
 from repro.kernels.assign.ref import assign_ref
 
 from .common import csv_row, timed
 
 
 def main():
+    tiny = "--tiny" in sys.argv
     cases = [
         ("jobs_x_sites", 4096, 64, 1),      # simulator dispatch shape
         ("tokens_x_experts_granite", 8192, 32, 8),
         ("tokens_x_experts_kimi", 4096, 384, 8),
     ]
+    if tiny:
+        # seconds-sized CI smoke: still drives the Pallas kernel (interpret
+        # mode on CPU) against the jnp oracle, just on a small shape
+        cases = [("tiny_smoke", 256, 8, 1)]
     print("# assignment kernel (jobs->sites == tokens->experts)")
     for name, N, E, k in cases:
         rng = np.random.default_rng(0)
@@ -39,6 +45,35 @@ def main():
             for a, b in zip(out_k, out_r)
         )
         print(csv_row(f"assign_pallas_match_{name}", 0.0, f"allclose={ok}"))
+
+    if tiny:
+        # the engine-facing combinator: backend-aware default (kernel on TPU,
+        # jnp oracle elsewhere) plus a forced-kernel interpret-mode row so CI
+        # exercises the Pallas path end-to-end through the Policy API
+        from repro.core import get_policy, simulate, with_capacity_assign
+        from repro.core.platform import atlas_like_platform
+        from repro.core.workload import synthetic_panda_jobs
+
+        jobs = synthetic_panda_jobs(48, seed=0, duration=300.0)
+        sites = atlas_like_platform(3, seed=1)
+        auto = jax.default_backend() == "tpu"
+        results = {}
+        for tag, flag in (("backend_default", None), ("forced_kernel", True)):
+            pol = with_capacity_assign(
+                get_policy("panda_dispatch"),
+                make_capacity_assign(jobs_cores=jobs.cores, use_kernel=flag),
+            )
+            t0 = time.perf_counter()
+            res = simulate(jobs, sites, pol, jax.random.PRNGKey(0))
+            ms = float(res.makespan)
+            results[tag] = ms
+            print(csv_row(
+                f"capacity_assign_{tag}", (time.perf_counter() - t0) * 1e6,
+                f"use_kernel={'tpu-auto' if flag is None else flag};"
+                f"backend={jax.default_backend()};auto_resolves={auto}",
+            ))
+        match = results["backend_default"] == results["forced_kernel"]
+        print(csv_row("capacity_assign_kernel_match", 0.0, f"equal={match}"))
 
 
 if __name__ == "__main__":

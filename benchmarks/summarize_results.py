@@ -1,13 +1,34 @@
-"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from results/.
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from results/,
+and gate CI on benchmark regressions.
 
     PYTHONPATH=src python -m benchmarks.summarize_results [--dryrun DIR] [--roofline DIR]
+
+Perf-regression gate (ISSUE 5): diff freshly produced tiny-suite
+``BENCH_*.json`` rows against the committed baselines with a tolerance band
+and exit non-zero on large regressions:
+
+    python -m benchmarks.summarize_results --check-bench bench-results \
+        [--baselines benchmarks/baselines] [--tol-time 1.5] [--tol-speedup 0.5]
+
+Timing rows (``us_per_call``) fail when more than ``(1 + tol_time)`` times
+the baseline; rows whose name contains ``speedup`` are ratios (higher is
+better, machine-independent) and fail below ``(1 - tol_speedup)`` times the
+baseline.  The deliberately generous default bands absorb shared-runner
+jitter and runner-class differences (baselines are committed from one
+machine; absolute timings — especially compile-dominated rows — routinely
+vary 2-3x across hosts): the gate is for *large* regressions (a suite
+erroring out, an accidental recompile in a hot loop, a 4x slowdown), not
+micro-noise.  Sub-millisecond rows are skipped outright (``--min-us``) —
+they measure dispatch overhead, not the simulator.
 """
 from __future__ import annotations
 
 import argparse
 import glob
 import json
+import os
 import re
+import sys
 
 
 def fmt_bytes(b):
@@ -80,13 +101,88 @@ def perf_table(d):
     return "\n".join(out)
 
 
+def _is_speedup_row(name: str) -> bool:
+    return "speedup" in name
+
+
+def check_bench(
+    new_dir: str, base_dir: str, tol_time: float, tol_speedup: float, min_us: float
+) -> int:
+    """Compare fresh BENCH_*.json rows against committed baselines.
+
+    Returns the number of violations (0 = gate passes).  Rows with
+    ``us_per_call <= 0`` are correctness markers (e.g. ``*_match``), not
+    timings, and are skipped, as are timing rows whose baseline is under
+    ``min_us`` (microbenchmarks dominated by dispatch noise); rows new in
+    this commit pass by definition and become gated once the baselines are
+    regenerated.
+    """
+    failures = 0
+    baselines = sorted(glob.glob(os.path.join(base_dir, "BENCH_*.json")))
+    if not baselines:
+        print(f"perf gate: no baselines under {base_dir}", file=sys.stderr)
+        return 1
+    print(f"{'suite':<22} {'row':<34} {'base':>12} {'new':>12}  verdict")
+    for bf in baselines:
+        base = json.load(open(bf))
+        suite = base["suite"]
+        nf = os.path.join(new_dir, os.path.basename(bf))
+        if not os.path.exists(nf):
+            print(f"{suite:<22} {'<suite missing>':<34} {'':>12} {'':>12}  FAIL")
+            failures += 1
+            continue
+        new = json.load(open(nf))
+        if new.get("status") != "ok":
+            print(f"{suite:<22} {'<suite errored>':<34} {'':>12} {'':>12}  "
+                  f"FAIL ({new.get('error')})")
+            failures += 1
+            continue
+        new_rows = {r["name"]: r for r in new["rows"]}
+        for row in base["rows"]:
+            name, old_v = row["name"], row["us_per_call"]
+            if old_v <= 0:
+                continue
+            if not _is_speedup_row(name) and old_v < min_us:
+                continue
+            if name not in new_rows:
+                print(f"{suite:<22} {name:<34} {old_v:>12.1f} {'<gone>':>12}  FAIL")
+                failures += 1
+                continue
+            new_v = new_rows[name]["us_per_call"]
+            if _is_speedup_row(name):
+                ok = new_v >= old_v * (1.0 - tol_speedup)
+                verdict = "ok" if ok else f"FAIL (< x{1.0 - tol_speedup:.2f} of baseline)"
+            else:
+                ok = new_v <= old_v * (1.0 + tol_time)
+                verdict = "ok" if ok else f"FAIL (> x{1.0 + tol_time:.2f} of baseline)"
+            failures += 0 if ok else 1
+            print(f"{suite:<22} {name:<34} {old_v:>12.1f} {new_v:>12.1f}  {verdict}")
+    return failures
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dryrun", default="results/dryrun")
     ap.add_argument("--roofline", default="results/roofline")
     ap.add_argument("--perf", default="results/perf")
     ap.add_argument("--section", default="all")
+    ap.add_argument("--check-bench", default=None, metavar="DIR",
+                    help="gate: diff DIR/BENCH_*.json against --baselines")
+    ap.add_argument("--baselines", default="benchmarks/baselines")
+    ap.add_argument("--tol-time", type=float, default=3.0,
+                    help="timing rows fail above (1+tol)*baseline")
+    ap.add_argument("--tol-speedup", type=float, default=0.5,
+                    help="speedup rows fail below (1-tol)*baseline")
+    ap.add_argument("--min-us", type=float, default=1000.0,
+                    help="skip timing rows whose baseline is below this")
     args = ap.parse_args()
+    if args.check_bench:
+        n = check_bench(args.check_bench, args.baselines, args.tol_time,
+                        args.tol_speedup, args.min_us)
+        if n:
+            raise SystemExit(f"perf gate: {n} regression(s) beyond tolerance")
+        print("perf gate: ok")
+        return
     if args.section in ("all", "dryrun"):
         print("## §Dry-run\n")
         print(dryrun_table(args.dryrun))

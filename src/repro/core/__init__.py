@@ -27,6 +27,7 @@ from .types import (  # noqa: F401
 )
 from .engine import (  # noqa: F401
     Scenario,
+    ScenarioBuckets,
     compute_time,
     queue_times,
     service_time,

@@ -18,11 +18,20 @@ Ensemble (calibration) map:
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .engine import simulate
+from .engine import (
+    Scenario,
+    ScenarioBuckets,
+    _run_buckets,
+    _simulate,
+    simulate,
+    stack_scenarios,
+)
 from .types import JobsState, SimResult, SiteState
 
 
@@ -155,3 +164,170 @@ def simulate_ensemble_distributed(
 
     with use_mesh(mesh):
         return jax.vmap(one)(cand, keys)
+
+
+# --------------------------------------------------------------------------
+# sharded scenario ensembles: lock-step-free simulate_many (DESIGN.md §8)
+# --------------------------------------------------------------------------
+
+
+def _shard_map_compat(fn, mesh, in_specs, out_specs):
+    """``shard_map`` across jax versions (experimental on <= 0.4.x)."""
+    try:
+        from jax import shard_map as _sm  # jax >= 0.5-ish
+
+        return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_vma=False)
+    except (ImportError, TypeError):
+        from jax.experimental.shard_map import shard_map as _sm
+
+        return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_ensemble_fn(policy, subsystems, mesh, axis, donate, lane_mode, kw_items):
+    """Build (and cache) the jitted shard_map program for one ensemble
+    configuration.  Caching on the static configuration keeps repeat calls on
+    the jit fast path instead of retracing a fresh closure every time."""
+    kw = dict(kw_items)
+
+    def block(jobs, sites, ext, keys):
+        # one device's lane block, free of *global* lock-step either way:
+        #
+        # - "scan": lanes run one after another, each in its own solo
+        #   while_loop — zero lock-step even inside the block, and the
+        #   phase-skip guard fires per lane.  The right mode when lanes
+        #   don't vectorize (CPU hosts: a batched round costs ~K solo
+        #   rounds, so retiring lanes independently strictly wins).
+        # - "vmap": lanes batch SIMD-style; the block's while_loop halts
+        #   when the *local* lanes drain and the phase-skip batch-any
+        #   reduces over the block alone.  The right mode on accelerators,
+        #   where a batched round is far cheaper than K solo rounds.
+        def one(j, s, e, k):
+            return _simulate(j, s, policy, k, e, subsystems=subsystems, **kw)
+
+        if lane_mode == "scan":
+            def step(carry, x):
+                return carry, one(*x)
+
+            _, res = jax.lax.scan(step, None, (jobs, sites, ext, keys))
+            return res
+        return jax.vmap(one)(jobs, sites, ext, keys)
+
+    fn = _shard_map_compat(
+        block, mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis)),
+        out_specs=P(axis),
+    )
+    # the stacked lane buffers are device_put copies owned by the caller
+    # below, so they are donated into the program: XLA aliases them straight
+    # into the while-loop carry instead of defensively copying K-lane state
+    return jax.jit(fn, donate_argnums=(0, 1, 2, 3) if donate else ())
+
+
+def _sharded_stacked(
+    scenarios: Scenario,
+    keys: jax.Array,
+    policy,
+    mesh: Mesh,
+    axis: str,
+    subsystems: tuple,
+    donate: bool | None,
+    lane_mode: str,
+    kw: dict,
+) -> SimResult:
+    from .engine import _check_ensemble
+
+    if lane_mode == "auto":
+        # scan lanes where batching doesn't pay (CPU), vectorize where it
+        # does (accelerators) — both are bit-for-bit identical per lane
+        lane_mode = "scan" if jax.default_backend() == "cpu" else "vmap"
+    if lane_mode not in ("scan", "vmap"):
+        raise ValueError(f"lane_mode must be auto|scan|vmap, got {lane_mode!r}")
+    ext = _check_ensemble(scenarios, subsystems)
+    scenarios = Scenario(scenarios.jobs, scenarios.sites, ext)
+    K = scenarios.jobs.arrival.shape[0]
+    n_dev = mesh.shape[axis]
+    pad = (-K) % n_dev
+    if pad:
+        # round the lane count up to the mesh axis: repeat the last scenario
+        # into throwaway lanes (their results are sliced off below)
+        pad_ix = jnp.concatenate(
+            [jnp.arange(K), jnp.full((pad,), K - 1, jnp.int32)]
+        )
+        scenarios = jax.tree.map(lambda x: x[pad_ix], scenarios)
+        keys = keys[pad_ix]
+    if donate is None:
+        # on a 1-device mesh the device_put below can alias the caller's
+        # arrays instead of resharding, so donation is only safe (and only
+        # useful) when the lanes actually spread over the mesh
+        donate = mesh.devices.size > 1
+    sh = NamedSharding(mesh, P(axis))
+    if donate:
+        # inputs already laid out on the mesh pass through device_put
+        # untouched — donating would hand the *caller's* buffers to XLA and
+        # invalidate them for the next call, so fall back to non-donating
+        leaves = jax.tree.leaves((scenarios, keys))
+        if any(getattr(x, "sharding", None) == sh for x in leaves):
+            donate = False
+    args = jax.tree.map(
+        lambda x: jax.device_put(jnp.asarray(x), sh),
+        (scenarios.jobs, scenarios.sites, scenarios.ext, keys),
+    )
+    fn = _sharded_ensemble_fn(
+        policy, tuple(subsystems), mesh, axis, donate, lane_mode,
+        tuple(sorted(kw.items())),
+    )
+    with use_mesh(mesh):
+        res = fn(*args)
+    if pad:
+        res = jax.tree.map(lambda x: x[:K], res)
+    return res
+
+
+def simulate_many_sharded(
+    scenarios,
+    policy,
+    rng: jax.Array,
+    mesh: Mesh,
+    *,
+    axis: str = "data",
+    subsystems: tuple = (),
+    donate: bool | None = None,
+    lane_mode: str = "auto",
+    **kw,
+) -> SimResult:
+    """Lock-step-free ensemble execution: the stacked scenario axis K is
+    partitioned over ``mesh[axis]`` with ``shard_map``, and every device runs
+    its *own* ``lax.while_loop`` over its lane block.
+
+    This attacks the ensemble lock-step tax at the shard level (DESIGN.md
+    §8): under plain ``simulate_many`` all K lanes spin until the slowest
+    scenario terminates, paying full round work per lane per round; here a
+    shard whose scenarios drain early simply stops.  There are no cross-
+    device collectives — each lane's state is fully local to its device — so
+    scaling is near-linear in devices (``benchmarks/bench_engine_rounds
+    --devices``).  Lane results are bit-for-bit identical to plain
+    ``simulate_many`` and to solo ``simulate`` runs: sharding only changes
+    *which* device retires a lane's rounds, never the rounds themselves.
+
+    ``scenarios`` is a list of ``Scenario``s, a stacked ``Scenario``, or a
+    ``ScenarioBuckets`` (each bucket is sharded separately and results merge
+    in original order).  Lane counts that do not divide the mesh axis are
+    padded with throwaway repeats of the last lane.  ``donate`` controls
+    donating the on-mesh lane buffers into the program (default: on for
+    multi-device meshes).  ``lane_mode`` picks how a device walks its lane
+    block: ``"scan"`` (sequential solo loops — zero lock-step, the CPU
+    default) or ``"vmap"`` (SIMD batching — the accelerator default);
+    ``"auto"`` resolves by backend.
+    """
+    runner = lambda scen, keys: _sharded_stacked(  # noqa: E731
+        scen, keys, policy, mesh, axis, subsystems, donate, lane_mode, kw
+    )
+    if isinstance(scenarios, ScenarioBuckets):
+        return _run_buckets(scenarios, rng, runner, subsystems)
+    if not isinstance(scenarios, Scenario):
+        scenarios = stack_scenarios(scenarios, subsystems=subsystems)
+    K = scenarios.jobs.arrival.shape[0]
+    return runner(scenarios, jax.random.split(rng, K))

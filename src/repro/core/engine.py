@@ -36,6 +36,7 @@ from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .subsystems import RoundCtx, resolve_subsystems
 from .types import (
@@ -93,6 +94,28 @@ def service_time(
     )
 
 
+def _segment_sum_small(values: jax.Array, seg: jax.Array, num_segments: int) -> jax.Array:
+    """``segment_sum`` specialized for the engine's few-segment reductions.
+
+    Integer (and bool) values go through a one-hot contraction instead of the
+    scatter-add that ``segment_sum`` lowers to: on CPU a *batched* scatter is
+    the single most expensive op in an ensemble round (~6x a one-hot matmul
+    at K=16, J=320 — DESIGN.md §8), while integer sums are exact in any
+    reduction order, so the contraction is bit-for-bit identical in every
+    context.  Float values keep ``segment_sum``'s sequential accumulation
+    order — reordering float adds would shift low bits and break the golden
+    traces.
+    """
+    if jnp.issubdtype(values.dtype, jnp.integer) or values.dtype == jnp.bool_:
+        # bool saturates under einsum (logical OR), so count in int32
+        values = values.astype(jnp.int32) if values.dtype == jnp.bool_ else values
+        onehot = (seg[..., None] == jnp.arange(num_segments, dtype=seg.dtype)).astype(
+            values.dtype
+        )
+        return jnp.einsum("...j,...js->...s", values, onehot)
+    return jax.ops.segment_sum(values, seg, num_segments=num_segments)
+
+
 def _site_sum(values: jax.Array, site: jax.Array, num_sites: int) -> jax.Array:
     """Scatter per-job values onto their site: ``segment_sum`` with one extra
     padding segment (site == ``num_sites``) for non-participating rows.
@@ -100,20 +123,23 @@ def _site_sum(values: jax.Array, site: jax.Array, num_sites: int) -> jax.Array:
     The ubiquitous engine scatter — completions, preemption, starts, and log
     pressure columns all reduce job rows to per-site totals this way.
     """
-    return jax.ops.segment_sum(values, site, num_segments=num_sites + 1)[:num_sites]
+    return _segment_sum_small(values, site, num_sites + 1)[:num_sites]
 
 
-# Below this job capacity the start order is computed by pairwise ranking
-# instead of ``jnp.lexsort``: batched ``lax.sort`` does not amortize under
-# vmap (a 16-way ``simulate_many`` ensemble pays ~18x one sort per round,
-# see benchmarks/bench_engine_rounds.py), while the O(J^2) comparison matrix
-# vectorizes perfectly.  Both paths produce the *same* permutation — the
+# Below this job capacity a *solo* run computes the start order by pairwise
+# ranking instead of ``jnp.lexsort`` (the O(J^2) comparison matrix wins for
+# small J on CPU).  Ensembles never hit either per-lane path: ``_start_order``
+# carries a ``custom_vmap`` rule that flattens the whole batch into ONE
+# lane-major lexsort — under vmap a 16-way ensemble used to pay ~18x one sort
+# per round through batched ``lax.sort`` (the DESIGN.md §7 note), now it pays
+# a single O(KJ log KJ) sort.  All paths produce the *same* permutation — the
 # job-index tiebreak makes the order strict, so the rank is unique — and the
 # downstream cumulative sums fold in the identical sequence, keeping results
-# bit-for-bit equal.  Large-J single runs keep the O(J log J) sort.
+# bit-for-bit equal.
 _PAIRWISE_ORDER_MAX_J = 512
 
 
+@jax.custom_batching.custom_vmap
 def _start_order(
     sort_site: jax.Array, priority: jax.Array, rank_val: jax.Array, arrival: jax.Array
 ) -> jax.Array:
@@ -140,10 +166,56 @@ def _start_order(
     return jnp.zeros((J,), jnp.int32).at[rank].set(idx)
 
 
+@_start_order.def_vmap
+def _start_order_batched(axis_size, in_batched, sort_site, priority, rank_val, arrival):
+    """Batched start order as ONE lane-major flattened lexsort (DESIGN.md §8).
+
+    The lane id is the most-significant sort key, so rows of the flat
+    permutation group by lane and each lane's block is exactly the
+    permutation its solo run computes (the key tuple is a strict total order
+    thanks to the index tiebreak, so *any* correct sort yields the identical
+    permutation — bit-for-bit lane equivalence is preserved).
+    """
+    K = axis_size
+    site_b, prio_b, rank_b, arr_b = (
+        x if b else jnp.broadcast_to(x, (K,) + x.shape)
+        for x, b in zip((sort_site, priority, rank_val, arrival), in_batched)
+    )
+    J = site_b.shape[-1]
+    lane = jnp.broadcast_to(jnp.arange(K, dtype=jnp.int32)[:, None], (K, J)).reshape(-1)
+    idx = jnp.broadcast_to(jnp.arange(J, dtype=jnp.int32)[None, :], (K, J)).reshape(-1)
+    perm = jnp.lexsort(
+        (idx, arr_b.reshape(-1), -rank_b.reshape(-1), -prio_b.reshape(-1),
+         site_b.reshape(-1), lane)
+    )
+    order = perm.reshape(K, J).astype(jnp.int32) - (jnp.arange(K, dtype=jnp.int32) * J)[:, None]
+    return order, True
+
+
+@jax.custom_batching.custom_vmap
+def _ensemble_any(pred: jax.Array) -> jax.Array:
+    """Identity on a scalar bool — except under ``vmap``, where it reduces to
+    a single *unbatched* ``any`` over the whole batch.
+
+    This is what keeps the phase-skip guard a real scalar ``lax.cond`` inside
+    a vmapped ensemble: the round body branches on "does ANY lane have
+    dispatchable work", and lanes without work execute the taken branch as an
+    exact no-op (DESIGN.md §8).  A lane is therefore always bit-for-bit equal
+    to its solo run, while a fully drained batch (or mesh shard) skips the
+    assignment/start phases outright.
+    """
+    return pred
+
+
+@_ensemble_any.def_vmap
+def _ensemble_any_batched(axis_size, in_batched, pred):
+    return jnp.any(pred, axis=0) if in_batched[0] else pred, False
+
+
 def _segment_exclusive_base(values: jax.Array, seg_ids: jax.Array, num_segments: int):
     """For values sorted by seg_ids: per-element cumulative sum *within* its segment."""
     total_cum = jnp.cumsum(values)
-    seg_totals = jax.ops.segment_sum(values, seg_ids, num_segments=num_segments)
+    seg_totals = _segment_sum_small(values, seg_ids, num_segments)
     seg_base = jnp.concatenate([jnp.zeros((1,), values.dtype), jnp.cumsum(seg_totals)[:-1]])
     return total_cum - seg_base[seg_ids]
 
@@ -172,6 +244,7 @@ def default_assign(scores: jax.Array, queued: jax.Array, feasible: jax.Array, si
         "max_retries",
         "monitor_every",
         "quantum",
+        "phase_skip",
     ),
 )
 def _simulate(
@@ -188,6 +261,7 @@ def _simulate(
     max_retries: int = 3,
     monitor_every: int = 1,
     quantum: float = 0.0,
+    phase_skip: bool = True,
 ) -> SimResult:
     """The jitted phase pipeline; ``subsystems`` is a static Subsystem tuple,
     ``ext0`` the matching name -> state pytree mapping (see subsystems.py)."""
@@ -225,6 +299,10 @@ def _simulate(
         ctx = RoundCtx(
             jobs=jobs, sites=sites, ext=dict(st.ext),
             clock_prev=st.clock, max_retries=max_retries,
+            # per-subsystem RNG streams fold off the round's carry key (see
+            # RoundCtx.subkey); the split above is untouched, so subsystem
+            # draws never shift the engine's own bitstream
+            rng=st.rng,
         )
 
         # ---- 1. advance the clock to the next event ------------------------
@@ -298,7 +376,7 @@ def _simulate(
         jobs = jobs._replace(state=jnp.where(arrived, QUEUED, jobs.state))
         ctx.jobs, ctx.arrived = jobs, arrived
 
-        # ---- 4. policy assignment (the plugin hot spot) ----------------------
+        # ---- 4+5. assignment & starts -----------------------------------------
         queued = jobs.state == QUEUED
         # static feasibility: job can ever fit the site
         ctx.feasible = (
@@ -312,45 +390,72 @@ def _simulate(
             if sub.pre_assign is not None:
                 sub.pre_assign(sub, ctx)
         pstate = st.policy_state
-        scores = policy.score(jobs, sites, pstate, clock, k_policy)  # [J, S]
-        site_pick, assigned_now = policy.assign(scores, queued, ctx.feasible, sites)
-        assigned_now = assigned_now & queued
-        jobs = jobs._replace(
-            state=jnp.where(assigned_now, ASSIGNED, jobs.state),
-            site=jnp.where(assigned_now, site_pick, jobs.site),
-            t_assign=jnp.where(assigned_now, clock, jobs.t_assign),
-        )
-        asg_site = jnp.where(assigned_now, site_pick, S)
-        sites = sites._replace(
-            n_assigned=sites.n_assigned + _site_sum(assigned_now.astype(jnp.int32), asg_site, S)
-        )
-        ctx.jobs, ctx.sites = jobs, sites
-
-        # ---- 5. starts: per-site FIFO with capacity --------------------------
-        cand = jobs.state == ASSIGNED
-        sort_site = jnp.where(cand, jobs.site, S).astype(jnp.int32)
-        # policy rank is a secondary start-order key: priority still
-        # dominates, rank breaks ties before arrival time (a rank-less
-        # policy contributes a constant key, which the stable lexsort ignores)
         rank_fn = getattr(policy, "rank", None)
-        rank_val = (
-            jnp.zeros((J,), jnp.float32) if rank_fn is None
-            else rank_fn(jobs, sites, pstate, clock)
-        )
-        order = _start_order(sort_site, jobs.priority, rank_val, jobs.arrival)
-        site_s = sort_site[order]
-        cand_s = cand[order]
-        cores_s = jnp.where(cand_s, jobs.cores[order], 0).astype(jnp.int32)
-        mem_s = jnp.where(cand_s, jobs.memory[order], 0.0)
-        cum_cores = _segment_exclusive_base(cores_s, site_s, S + 1)
-        cum_mem = _segment_exclusive_base(mem_s, site_s, S + 1)
-        fits = (
-            cand_s
-            & (cum_cores <= ctx.start_cores[jnp.minimum(site_s, S - 1)])
-            & (cum_mem <= sites.free_memory[jnp.minimum(site_s, S - 1)] + 1e-6)
-            & (site_s < S)
-        )
-        started = jnp.zeros((J,), bool).at[order].set(fits)
+        feasible, start_cores = ctx.feasible, ctx.start_cores
+
+        def _assign_and_start(ops):
+            """Phases 4 (policy assignment, the plugin hot spot) and 5
+            (per-site FIFO-with-capacity starts), exactly as the unguarded
+            engine ran them.  With no QUEUED or ASSIGNED rows every update in
+            here is a masked no-op, which is what makes the phase-skip guard
+            below bit-for-bit safe."""
+            jobs, sites = ops
+            scores = policy.score(jobs, sites, pstate, clock, k_policy)  # [J, S]
+            site_pick, assigned_now = policy.assign(scores, queued, feasible, sites)
+            assigned_now = assigned_now & queued
+            jobs = jobs._replace(
+                state=jnp.where(assigned_now, ASSIGNED, jobs.state),
+                site=jnp.where(assigned_now, site_pick, jobs.site),
+                t_assign=jnp.where(assigned_now, clock, jobs.t_assign),
+            )
+            asg_site = jnp.where(assigned_now, site_pick, S)
+            sites = sites._replace(
+                n_assigned=sites.n_assigned
+                + _site_sum(assigned_now.astype(jnp.int32), asg_site, S)
+            )
+
+            cand = jobs.state == ASSIGNED
+            sort_site = jnp.where(cand, jobs.site, S).astype(jnp.int32)
+            # policy rank is a secondary start-order key: priority still
+            # dominates, rank breaks ties before arrival time (a rank-less
+            # policy contributes a constant key, which the stable lexsort ignores)
+            rank_val = (
+                jnp.zeros((J,), jnp.float32) if rank_fn is None
+                else rank_fn(jobs, sites, pstate, clock)
+            )
+            order = _start_order(sort_site, jobs.priority, rank_val, jobs.arrival)
+            site_s = sort_site[order]
+            cand_s = cand[order]
+            cores_s = jnp.where(cand_s, jobs.cores[order], 0).astype(jnp.int32)
+            mem_s = jnp.where(cand_s, jobs.memory[order], 0.0)
+            cum_cores = _segment_exclusive_base(cores_s, site_s, S + 1)
+            cum_mem = _segment_exclusive_base(mem_s, site_s, S + 1)
+            fits = (
+                cand_s
+                & (cum_cores <= start_cores[jnp.minimum(site_s, S - 1)])
+                & (cum_mem <= sites.free_memory[jnp.minimum(site_s, S - 1)] + 1e-6)
+                & (site_s < S)
+            )
+            started = jnp.zeros((J,), bool).at[order].set(fits)
+            return jobs, sites, started
+
+        if phase_skip:
+            # phase-skip guard (DESIGN.md §8): completion-only rounds — the
+            # rounds that dominate a draining ensemble lane — skip the score
+            # matrix, the start-order sort, and the segmented prefix sums
+            # entirely.  ``_ensemble_any`` reduces the predicate over the
+            # whole vmap batch, so the cond stays scalar (a real branch, not
+            # a select) inside ensembles and mesh shards alike.
+            has_work = _ensemble_any(jnp.any(queued | (jobs.state == ASSIGNED)))
+            jobs, sites, started = jax.lax.cond(
+                has_work,
+                _assign_and_start,
+                lambda ops: (ops[0], ops[1], jnp.zeros((J,), bool)),
+                (jobs, sites),
+            )
+        else:
+            jobs, sites, started = _assign_and_start((jobs, sites))
+        ctx.jobs, ctx.sites = jobs, sites
 
         start_site = jnp.where(started, jobs.site, S)
         used_cores = _site_sum(jnp.where(started, jobs.cores, 0), start_site, S)
@@ -493,8 +598,15 @@ def simulate(
     max_retries: int = 3,
     monitor_every: int = 1,
     quantum: float = 0.0,
+    phase_skip: bool = True,
 ) -> SimResult:
     """Run the grid simulation to completion (or ``max_rounds``/``horizon``).
+
+    ``phase_skip`` (default on) guards the assignment + start phases behind a
+    scalar ``lax.cond`` on "any QUEUED/ASSIGNED rows": completion-only rounds
+    skip the score matrix, start-order sort, and segmented prefix sums
+    entirely, with bit-for-bit identical results (DESIGN.md §8).  ``False``
+    forces the unguarded pipeline (the equivalence is property-tested).
 
     ``quantum`` > 0 batches all events inside [t*, t* + quantum] into one
     round (SimGrid-style time-precision knob): timestamps quantize to the
@@ -550,6 +662,7 @@ def simulate(
         max_retries=max_retries,
         monitor_every=monitor_every,
         quantum=quantum,
+        phase_skip=phase_skip,
     )
 
 
@@ -572,7 +685,26 @@ class Scenario(NamedTuple):
     ext: dict | None = None
 
 
-def stack_scenarios(scenarios, *, subsystems: tuple = ()) -> Scenario:
+class ScenarioBuckets(NamedTuple):
+    """A ragged ensemble grouped into a few padded shape buckets.
+
+    ``buckets[b]`` is a stacked ``Scenario`` whose jobs are padded only to
+    that bucket's largest capacity — instead of every scenario paying dense
+    rows up to the *global* max J (the padding tax of one-bucket stacking).
+    ``index[b]`` holds each lane's position in the original scenario list, so
+    results reassemble in caller order (and lane ``i`` draws the same RNG key
+    it would in a single-bucket stack).
+    """
+
+    buckets: tuple  # tuple[Scenario], each stacked with leading K_b
+    index: tuple    # tuple[tuple[int, ...]] original scenario positions
+
+    @property
+    def n_scenarios(self) -> int:
+        return sum(len(ix) for ix in self.index)
+
+
+def stack_scenarios(scenarios, *, subsystems: tuple = (), buckets: int = 1):
     """Stack a list of Scenarios into one leading-K pytree.
 
     Ragged workloads (different job counts per scenario) are canonicalized by
@@ -584,6 +716,13 @@ def stack_scenarios(scenarios, *, subsystems: tuple = ()) -> Scenario:
     (``simulate_many`` passes its own).  Sites and non-job-shaped subsystem
     state must already share shapes (pad calendars/catalogs with their
     builders' ``max_windows=``/``capacity=`` knobs).
+
+    ``buckets > 1`` returns a ``ScenarioBuckets`` instead: scenarios are
+    ordered by job capacity and split into up to ``buckets`` similar-size
+    groups, each padded only to its own max — a few compiles instead of one,
+    but far fewer wasted dense rows on very ragged ensembles (DESIGN.md §8).
+    ``simulate_many`` and ``simulate_many_sharded`` dispatch per bucket and
+    return results in the original scenario order.
     """
     from .subsystems import pad_ext_jobs
     from .types import pad_jobs_capacity
@@ -591,6 +730,16 @@ def stack_scenarios(scenarios, *, subsystems: tuple = ()) -> Scenario:
     scenarios = list(scenarios)
     if not scenarios:
         raise ValueError("need at least one scenario")
+    if buckets > 1:
+        order = sorted(range(len(scenarios)), key=lambda i: scenarios[i].jobs.capacity)
+        groups = [g for g in np.array_split(order, min(buckets, len(scenarios))) if len(g)]
+        return ScenarioBuckets(
+            buckets=tuple(
+                stack_scenarios([scenarios[i] for i in g], subsystems=subsystems)
+                for g in groups
+            ),
+            index=tuple(tuple(int(i) for i in g) for g in groups),
+        )
     cap = max(s.jobs.capacity for s in scenarios)
     norm = [
         Scenario(
@@ -603,30 +752,8 @@ def stack_scenarios(scenarios, *, subsystems: tuple = ()) -> Scenario:
     return jax.tree.map(lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *norm)
 
 
-def simulate_many(
-    scenarios,
-    policy,
-    rng: jax.Array,
-    *,
-    subsystems: tuple = (),
-    **kw,
-) -> SimResult:
-    """Batched ensemble execution: K scenarios, one compile, one device program.
-
-    ``scenarios`` is a list of ``Scenario``s (stacked here) or an already
-    stacked ``Scenario`` whose leaves carry a leading K axis — stacked
-    workloads, platforms (speeds), and subsystem states (outage calendars,
-    replica catalogs, workflow DAGs) all vary per scenario.  ``subsystems``
-    is a tuple of the static ``Subsystem`` bundles matching the keys of
-    ``Scenario.ext`` (empty for plain runs).  Each scenario gets its own RNG
-    stream; the returned ``SimResult`` has a leading K axis on every leaf.
-
-    This is the surrogate-dataset / design-space lever (ROADMAP): the paper
-    runs scenarios one process at a time, a vmapped ensemble retires them in
-    lockstep rounds at device throughput (``benchmarks/bench_engine_rounds``).
-    """
-    if not isinstance(scenarios, Scenario):
-        scenarios = stack_scenarios(scenarios, subsystems=subsystems)
+def _check_ensemble(scenarios: Scenario, subsystems: tuple) -> dict:
+    """Validate a stacked ensemble against its subsystem tuple; returns ext."""
     ext = scenarios.ext or {}
     known = {sub.name for sub in subsystems}
     if set(ext) != known:
@@ -638,13 +765,135 @@ def simulate_many(
         if sub.validate is not None:
             # shape checks use negative axes, so the leading K is transparent
             sub.validate(sub, ext[sub.name], scenarios.jobs, scenarios.sites)
-    K = scenarios.jobs.arrival.shape[0]
-    keys = jax.random.split(rng, K)
+    return ext
+
+
+def _simulate_many_stacked(
+    scenarios: Scenario, policy, keys: jax.Array, *, subsystems: tuple = (), **kw
+) -> SimResult:
+    """The vmapped ensemble core: one compile, per-lane RNG keys supplied."""
+    ext = _check_ensemble(scenarios, subsystems)
 
     def one(jobs, sites, ext_k, key):
         return _simulate(jobs, sites, policy, key, ext_k, subsystems=subsystems, **kw)
 
     return jax.vmap(one)(scenarios.jobs, scenarios.sites, ext, keys)
+
+
+def _pad_result_jobs(jobs: JobsState, capacity: int) -> JobsState:
+    """Pad the trailing job axis of a leading-K ``JobsState`` with inert rows
+    (the ``types.JOB_PAD_FILLS`` fixed point) — how bucketed results rejoin a
+    common shape."""
+    from .types import JOB_PAD_FILLS
+
+    J = jobs.capacity
+    if capacity == J:
+        return jobs
+    n = capacity - J
+
+    def pad(name, x):
+        fill = JOB_PAD_FILLS.get(name, 0)
+        return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, n)], constant_values=fill)
+
+    return JobsState(**{k: pad(k, v) for k, v in jobs._asdict().items()})
+
+
+# legacy SimResult accessors that alias a subsystem's ext slot; after a
+# bucketed merge re-pads ext, the aliases must point at the padded state
+_EXT_ALIASES = {"workflow": ("wf",), "availability": ("avail",)}
+
+
+def _pad_result_to(res: SimResult, subsystems: tuple, capacity: int) -> SimResult:
+    """Grow one bucket's SimResult to the ensemble-wide job capacity."""
+    J_b = res.jobs.capacity
+    repl = {"jobs": _pad_result_jobs(res.jobs, capacity)}
+    if J_b != capacity and res.ext:
+        ext = dict(res.ext)
+        for sub in subsystems:
+            if sub.pad_jobs is not None and sub.name in ext:
+                padded = jax.vmap(lambda s: sub.pad_jobs(sub, s, J_b, capacity))(
+                    ext[sub.name]
+                )
+                ext[sub.name] = padded
+                for field in _EXT_ALIASES.get(sub.name, ()):
+                    if getattr(res, field) is not None:
+                        repl[field] = padded
+        repl["ext"] = ext
+    return res._replace(**repl)
+
+
+@functools.lru_cache(maxsize=None)
+def _bucket_merger(subsystems: tuple, cap: int, inv: tuple):
+    """Jitted bucket-result reassembly (pad to the common capacity, concat,
+    un-permute): one program instead of hundreds of eager per-leaf dispatches
+    — the merge is on the hot path of every bucketed ensemble call."""
+    inv_a = jnp.asarray(inv)
+
+    def merge(*results):
+        padded = [_pad_result_to(r, subsystems, cap) for r in results]
+        return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0)[inv_a], *padded)
+
+    return jax.jit(merge)
+
+
+def _run_buckets(sb: ScenarioBuckets, rng: jax.Array, runner, subsystems):
+    """Dispatch a bucketed ensemble through ``runner(stacked, keys)`` per
+    bucket, then reassemble one SimResult in the original scenario order.
+
+    Lane ``i`` draws ``split(rng, K)[i]`` exactly as it would in a
+    single-bucket stack, so bucketing is invisible to the results (the merge
+    re-pads each bucket's jobs/ext to the global max capacity with inert
+    rows — the same rows single-bucket stacking would have carried through
+    the whole run).
+    """
+    keys = jax.random.split(rng, sb.n_scenarios)
+    cap = max(s.jobs.capacity for s in sb.buckets)
+    results = [
+        runner(scen, keys[np.asarray(ix)]) for scen, ix in zip(sb.buckets, sb.index)
+    ]
+    inv = np.argsort(np.concatenate([np.asarray(ix) for ix in sb.index]))
+    merge = _bucket_merger(tuple(subsystems), cap, tuple(int(i) for i in inv))
+    return merge(*results)
+
+
+def simulate_many(
+    scenarios,
+    policy,
+    rng: jax.Array,
+    *,
+    subsystems: tuple = (),
+    **kw,
+) -> SimResult:
+    """Batched ensemble execution: K scenarios, one compile, one device program.
+
+    ``scenarios`` is a list of ``Scenario``s (stacked here), an already
+    stacked ``Scenario`` whose leaves carry a leading K axis, or a
+    ``ScenarioBuckets`` from ``stack_scenarios(..., buckets=n)`` (dispatched
+    per bucket, one compile per distinct shape) — stacked workloads,
+    platforms (speeds), and subsystem states (outage calendars, replica
+    catalogs, workflow DAGs) all vary per scenario.  ``subsystems`` is a
+    tuple of the static ``Subsystem`` bundles matching the keys of
+    ``Scenario.ext`` (empty for plain runs).  Each scenario gets its own RNG
+    stream; the returned ``SimResult`` has a leading K axis on every leaf, in
+    the original scenario order.
+
+    This is the surrogate-dataset / design-space lever (ROADMAP): the paper
+    runs scenarios one process at a time, a vmapped ensemble retires them in
+    lockstep rounds at device throughput (``benchmarks/bench_engine_rounds``).
+    To spread the ensemble over a device mesh — and break the global
+    lock-step — see ``distributed.simulate_many_sharded``.
+    """
+    if isinstance(scenarios, ScenarioBuckets):
+        runner = lambda scen, keys: _simulate_many_stacked(  # noqa: E731
+            scen, policy, keys, subsystems=subsystems, **kw
+        )
+        return _run_buckets(scenarios, rng, runner, subsystems)
+    if not isinstance(scenarios, Scenario):
+        scenarios = stack_scenarios(scenarios, subsystems=subsystems)
+    K = scenarios.jobs.arrival.shape[0]
+    return _simulate_many_stacked(
+        scenarios, policy, jax.random.split(rng, K), subsystems=subsystems, **kw
+    )
 
 
 def simulate_ensemble(

@@ -28,7 +28,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .engine import default_assign
+from .engine import _site_sum, default_assign
 from .types import ASSIGNED, QUEUED, RUNNING, JobsState, SiteState
 
 NEG = jnp.float32(-1e30)
@@ -75,7 +75,7 @@ def site_backlog(jobs: JobsState, sites: SiteState):
     S = sites.capacity
     q_site = jnp.where(jobs.state == ASSIGNED, jobs.site, S)
     r_site = jnp.where((jobs.state == RUNNING) | (jobs.state == ASSIGNED), jobs.site, S)
-    q_cores = jax.ops.segment_sum(jobs.cores, q_site, num_segments=S + 1)[:S]
+    q_cores = _site_sum(jobs.cores, q_site, S)  # int: one-hot fast path
     out_work = jax.ops.segment_sum(jobs.work, r_site, num_segments=S + 1)[:S]
     return q_cores.astype(jnp.float32), out_work
 

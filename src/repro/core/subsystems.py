@@ -43,9 +43,14 @@ materialization before replica-source selection.
 """
 from __future__ import annotations
 
+import zlib
 from typing import Any, Callable, NamedTuple
 
 INF = float("inf")
+
+# fold_in salt separating the subsystem key tree from the engine's own
+# split(key, 4) stream (see RoundCtx.subkey)
+_SUBKEY_SALT = 0x5B5D5
 
 
 class Subsystem(NamedTuple):
@@ -99,15 +104,22 @@ class RoundCtx:
       progressed         OR in a bool[] if your transitions made progress
       scratch            per-round dict for passing values between your hooks
       max_retries, S, J  static knobs
+
+    Stochastic subsystems draw randomness through ``subkey(name)`` — a
+    per-round, per-subsystem PRNG stream folded off the engine's carry key
+    *without consuming it*, so adding draws never perturbs the engine's own
+    bitstream (failure sampling, policy keys) and existing runs stay
+    bit-for-bit reproducible (ROADMAP: subsystem-level RNG streams).
     """
 
-    def __init__(self, *, jobs, sites, ext, clock_prev, max_retries):
+    def __init__(self, *, jobs, sites, ext, clock_prev, max_retries, rng=None):
         self.jobs = jobs
         self.sites = sites
         self.ext = ext
         self.clock_prev = clock_prev
         self.clock = clock_prev
         self.max_retries = max_retries
+        self.rng = rng
         self.S = sites.capacity
         self.J = jobs.capacity
         self.comp = None
@@ -124,6 +136,22 @@ class RoundCtx:
         self.t_serv = None
         self.progressed = False
         self.scratch = {}
+
+    def subkey(self, name: str, salt: int = 0):
+        """This round's PRNG key for subsystem ``name`` (salt for extra
+        streams).  Derived by ``fold_in`` from the round's carry key — the
+        engine splits that key separately, so drawing here adds no ops to and
+        removes no draws from the engine's own stream: a subsystem that
+        starts (or stops) consuming randomness leaves every other consumer's
+        bitstream untouched.  Deterministic across runs: the stream depends
+        only on (run key, round, subsystem name, salt)."""
+        import jax
+
+        if self.rng is None:
+            raise ValueError("RoundCtx.subkey needs the engine round key (rng=)")
+        key = jax.random.fold_in(self.rng, _SUBKEY_SALT)
+        key = jax.random.fold_in(key, zlib.crc32(name.encode()) & 0x7FFFFFFF)
+        return jax.random.fold_in(key, salt) if salt else key
 
 
 SubsystemPair = tuple  # (Subsystem, initial state pytree)

@@ -220,6 +220,18 @@ def make_jobs(
     )
 
 
+# Per-column fill values for inert job padding rows (DONE/invalid, never
+# arriving).  A padding row built from these is a fixed point of the engine:
+# it passes through every round untouched, which is what makes padded and
+# unpadded runs bit-for-bit comparable (and lets bucketed ensemble results be
+# re-padded to a common capacity after the fact).
+JOB_PAD_FILLS = dict(
+    job_id=-1, arrival=float("inf"), state=DONE, site=-1, t_assign=float("inf"),
+    t_start=float("inf"), t_finish=float("inf"), valid=False, dataset=-1,
+    xfer_src=-1, wf_id=-1, out_dataset=-1, cores=1,
+)
+
+
 def pad_jobs_capacity(jobs: JobsState, capacity: int) -> JobsState:
     """Grow a JobsState to ``capacity`` rows of inert padding (DONE/invalid,
     never arriving) — the shape canonicalization used by ragged scenario
@@ -230,14 +242,9 @@ def pad_jobs_capacity(jobs: JobsState, capacity: int) -> JobsState:
     if capacity < J:
         raise ValueError(f"capacity {capacity} < current job capacity {J}")
     n = capacity - J
-    fills = dict(
-        job_id=-1, arrival=jnp.inf, state=DONE, site=-1, t_assign=jnp.inf,
-        t_start=jnp.inf, t_finish=jnp.inf, valid=False, dataset=-1,
-        xfer_src=-1, wf_id=-1, out_dataset=-1, cores=1,
-    )
 
     def pad(name, x):
-        fill = fills.get(name, 0)
+        fill = JOB_PAD_FILLS.get(name, 0)
         return jnp.pad(x, [(0, n)] + [(0, 0)] * (x.ndim - 1), constant_values=fill)
 
     return JobsState(**{k: pad(k, v) for k, v in jobs._asdict().items()})

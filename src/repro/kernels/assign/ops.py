@@ -22,13 +22,20 @@ def assign(scores, sizes, caps, *, k: int = 1, block_n: int = 256, use_kernel: b
     return assign_ref(scores, sizes, caps, k=k, block_n=block_n)
 
 
-def make_capacity_assign(jobs_cores: jax.Array | None = None, *, use_kernel: bool = False, block_n: int = 256):
+def make_capacity_assign(
+    jobs_cores: jax.Array | None = None, *, use_kernel: bool | None = None, block_n: int = 256
+):
     """Build an engine-compatible ``Policy.assign`` fn: jobs -> sites under
     free-core capacity; jobs beyond capacity stay QUEUED at the main server.
 
-    ``use_kernel=False`` uses the jnp oracle inside the engine's while_loop
-    (pallas interpret mode inside while_loop is CPU-slow; on TPU flip it on).
+    ``use_kernel=None`` (the default) resolves by backend: the compiled
+    Mosaic kernel on TPU, the jnp oracle elsewhere (pallas interpret mode
+    inside the engine's while_loop is CPU-slow).  Pass an explicit bool to
+    override either way — e.g. ``True`` on CPU runs the kernel in interpret
+    mode, the CI smoke configuration (``bench_assign_kernel --tiny``).
     """
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
 
     def assign_fn(scores, queued, feasible, sites):
         NEG = jnp.float32(-1e30)

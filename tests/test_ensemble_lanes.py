@@ -1,0 +1,276 @@
+"""Per-lane ensemble equivalence (ISSUE 5): every ``simulate_many`` /
+sharded / bucketed lane is bit-for-bit equal to the corresponding solo
+``simulate`` — including subsystem combinations — and the phase-skip guard
+is invisible to results.
+
+These tests pin the contract that makes ensembles trustworthy for
+calibration and surrogate-dataset sweeps: batching, bucketing, and sharding
+change *how* lanes are executed, never *what* any lane computes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Scenario,
+    ScenarioBuckets,
+    get_data_policy,
+    get_policy,
+    make_availability,
+    make_replicas,
+    make_subsystem,
+    make_workflow,
+    simulate,
+    simulate_many,
+    stack_scenarios,
+    synthetic_panda_jobs,
+    uniform_network,
+    zipf_dataset_sizes,
+)
+from repro.core.availability import availability_subsystem
+from repro.core.datapolicies import data_subsystem
+from repro.core.platform import atlas_like_platform
+from repro.core.types import pad_jobs_capacity
+from repro.core.workflows import workflow_subsystem
+
+
+def tree_equal(a, b, ignore_shape_prefix=False):
+    """Exact pytree equality (NaN == NaN); returns list of differing paths."""
+    fa = jax.tree_util.tree_flatten_with_path(a)[0]
+    fb = jax.tree_util.tree_flatten_with_path(b)[0]
+    assert len(fa) == len(fb)
+    bad = []
+    for (k1, v1), (_, v2) in zip(fa, fb):
+        x, y = np.asarray(v1), np.asarray(v2)
+        if x.shape != y.shape or not ((x == y) | (_bothnan(x, y))).all():
+            bad.append(jax.tree_util.keystr(k1))
+    return bad
+
+
+def _bothnan(x, y):
+    if not np.issubdtype(x.dtype, np.floating):
+        return np.zeros(x.shape, bool)
+    return np.isnan(x) & np.isnan(y)
+
+
+def lane(res, i):
+    return jax.tree.map(lambda x: x[i], res)
+
+
+def ragged_scenarios(sizes, n_sites=4, seed0=10):
+    sites = atlas_like_platform(n_sites, seed=1)
+    return [
+        Scenario(
+            synthetic_panda_jobs(n, seed=seed0 + i, duration=600.0),
+            sites._replace(speed=sites.speed * (0.7 + 0.1 * i)),
+        )
+        for i, n in enumerate(sizes)
+    ]
+
+
+# --------------------------------------------------------------------------
+# plain ensembles
+# --------------------------------------------------------------------------
+
+
+def test_vmapped_lanes_equal_solo_ragged():
+    sizes = [40, 72, 46, 58]
+    scens = ragged_scenarios(sizes)
+    pol = get_policy("panda_dispatch")
+    keys = jax.random.split(jax.random.PRNGKey(2), len(scens))
+    res = simulate_many(scens, pol, jax.random.PRNGKey(2))
+    cap = max(sizes)
+    for i, s in enumerate(scens):
+        solo = simulate(pad_jobs_capacity(s.jobs, cap), s.sites, pol, keys[i])
+        assert tree_equal(lane(res, i), solo) == []
+
+
+def test_bucketed_equals_flat_and_solo():
+    sizes = [40, 72, 46, 90, 58, 33, 61]
+    scens = ragged_scenarios(sizes)
+    pol = get_policy("shortest_wait")
+    flat = simulate_many(scens, pol, jax.random.PRNGKey(3))
+    sb = stack_scenarios(scens, buckets=3)
+    assert isinstance(sb, ScenarioBuckets)
+    assert sorted(i for ix in sb.index for i in ix) == list(range(len(sizes)))
+    # each bucket pads only to its own max, not the global one
+    assert sorted(s.jobs.capacity for s in sb.buckets)[0] < max(sizes)
+    res = simulate_many(sb, pol, jax.random.PRNGKey(3))
+    assert tree_equal(res, flat) == []
+    keys = jax.random.split(jax.random.PRNGKey(3), len(scens))
+    solo = simulate(
+        pad_jobs_capacity(scens[4].jobs, max(sizes)), scens[4].sites, pol, keys[4]
+    )
+    assert tree_equal(lane(res, 4), solo) == []
+
+
+def test_sharded_equals_vmapped_in_process():
+    """On whatever mesh this process has (1 device in plain CI): the
+    shard_map entry point, including the lane-padding path (K=3 lanes)."""
+    from repro.core.distributed import simulate_many_sharded
+
+    scens = ragged_scenarios([40, 64, 52])
+    pol = get_policy("panda_dispatch")
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    r_v = simulate_many(scens, pol, jax.random.PRNGKey(2))
+    r_s = simulate_many_sharded(scens, pol, jax.random.PRNGKey(2), mesh)
+    assert tree_equal(r_s, r_v) == []
+    # bucketed + sharded composes
+    sb = stack_scenarios(scens, buckets=2)
+    r_bs = simulate_many_sharded(sb, pol, jax.random.PRNGKey(2), mesh)
+    assert tree_equal(r_bs, r_v) == []
+
+
+# --------------------------------------------------------------------------
+# subsystem combinations
+# --------------------------------------------------------------------------
+
+N_DS = 8
+
+
+def combo_scenarios(K=3, n=44, n_sites=3):
+    """K same-shape scenarios with availability + workflow + data subsystems
+    (per-scenario calendars/catalogs/DAGs)."""
+    sites = atlas_like_platform(n_sites, seed=7)
+    net = uniform_network(n_sites, bw=5e8, latency=0.05)
+    dp = get_data_policy("cache_on_read")
+    subs = (availability_subsystem(), workflow_subsystem(), data_subsystem(dp))
+    scens, solo_kw = [], []
+    for k in range(K):
+        jobs = synthetic_panda_jobs(n, seed=30 + k, duration=600.0, n_datasets=N_DS)
+        av = make_availability(
+            n_sites,
+            [
+                dict(site=k % n_sites, start=100.0 * (k + 1), end=900.0, preempt=True),
+                dict(site=(k + 1) % n_sites, start=50.0, end=400.0, factor=0.5),
+            ],
+        )
+        rep = make_replicas(
+            zipf_dataset_sizes(N_DS, seed=3 + k, mean_bytes=1e9),
+            disk_capacity=np.full(n_sites, 1e12),
+            origin=np.zeros(N_DS, np.int32),
+        )
+        edges = [(j - 1, j) for j in range(1, n, 2)]
+        out_ds = np.where(np.arange(n) % 2 == 0, np.arange(n) % N_DS, -1)
+        jobs_wf, wf = make_workflow(jobs, edges, out_dataset=out_ds)
+        scens.append(
+            Scenario(
+                jobs_wf,
+                sites._replace(speed=sites.speed * (0.8 + 0.2 * k)),
+                {"availability": av, "workflow": wf, "data": (net, rep)},
+            )
+        )
+        solo_kw.append(
+            dict(availability=av, workflow=wf, data_policy=dp, network=net, replicas=rep)
+        )
+    return scens, subs, solo_kw
+
+
+def test_subsystem_combo_lanes_equal_solo():
+    scens, subs, solo_kw = combo_scenarios()
+    pol = get_policy("critical_path_first")
+    K = len(scens)
+    keys = jax.random.split(jax.random.PRNGKey(4), K)
+    res = simulate_many(scens, pol, jax.random.PRNGKey(4), subsystems=subs)
+    for i, s in enumerate(scens):
+        solo = simulate(s.jobs, s.sites, pol, keys[i], **solo_kw[i])
+        assert tree_equal(lane(res, i), solo) == []
+        assert int(res.wf.n_produced[i]) > 0  # the DAGs actually materialize
+
+
+def test_subsystem_combo_sharded_equals_vmapped():
+    from repro.core.distributed import simulate_many_sharded
+
+    scens, subs, _ = combo_scenarios()
+    pol = get_policy("panda_dispatch")
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    r_v = simulate_many(scens, pol, jax.random.PRNGKey(4), subsystems=subs)
+    r_s = simulate_many_sharded(scens, pol, jax.random.PRNGKey(4), mesh, subsystems=subs)
+    assert tree_equal(r_s, r_v) == []
+
+
+# --------------------------------------------------------------------------
+# phase-skip guard
+# --------------------------------------------------------------------------
+
+
+def test_phase_skip_guard_bit_for_bit_solo():
+    jobs = synthetic_panda_jobs(70, seed=0, duration=900.0)
+    sites = atlas_like_platform(4, seed=1)
+    av = make_availability(4, [dict(site=0, start=100.0, end=2000.0, preempt=True)])
+    for kw in ({}, {"availability": av}, {"quantum": 30.0}):
+        for pol_name in ("panda_dispatch", "shortest_wait"):
+            pol = get_policy(pol_name)
+            r1 = simulate(jobs, sites, pol, jax.random.PRNGKey(0), **kw)
+            r0 = simulate(jobs, sites, pol, jax.random.PRNGKey(0), phase_skip=False, **kw)
+            assert tree_equal(r1, r0) == []
+
+
+def test_phase_skip_guard_bit_for_bit_ensemble():
+    scens = ragged_scenarios([40, 64, 52])
+    pol = get_policy("panda_dispatch")
+    r1 = simulate_many(scens, pol, jax.random.PRNGKey(2))
+    r0 = simulate_many(scens, pol, jax.random.PRNGKey(2), phase_skip=False)
+    assert tree_equal(r1, r0) == []
+
+
+# --------------------------------------------------------------------------
+# subsystem RNG streams (ROADMAP: per-subsystem fold-in keys)
+# --------------------------------------------------------------------------
+
+
+def _noise_on_completions(sub, ctx):
+    # draw per-round randomness from this subsystem's own stream; a second
+    # named stream must be independent of the first
+    u = jax.random.uniform(ctx.subkey("noise"))
+    v = jax.random.uniform(ctx.subkey("noise", salt=1))
+    ctx.ext["noise"] = {
+        "sum": ctx.ext["noise"]["sum"] + u,
+        "sum2": ctx.ext["noise"]["sum2"] + v,
+    }
+
+
+def test_subsystem_rng_streams_do_not_perturb_engine():
+    """A stochastic subsystem drawing via ``ctx.subkey`` leaves the engine's
+    own bitstream untouched: jobs/sites/makespan are bit-for-bit identical to
+    the run without the subsystem, while its draws are deterministic and
+    per-stream independent."""
+    jobs = synthetic_panda_jobs(50, seed=0, duration=600.0)
+    sites = atlas_like_platform(3, seed=1)
+    pol = get_policy("panda_dispatch")
+    noise = make_subsystem("noise", on_completions=_noise_on_completions)
+    state0 = {"sum": jnp.float32(0.0), "sum2": jnp.float32(0.0)}
+
+    base = simulate(jobs, sites, pol, jax.random.PRNGKey(0))
+    with_noise = simulate(
+        jobs, sites, pol, jax.random.PRNGKey(0), subsystems=((noise, state0),)
+    )
+    assert tree_equal(base.jobs, with_noise.jobs) == []
+    assert tree_equal(base.sites, with_noise.sites) == []
+    assert float(base.makespan) == float(with_noise.makespan)
+    assert int(base.rounds) == int(with_noise.rounds)
+
+    s1 = float(with_noise.ext["noise"]["sum"])
+    s2 = float(with_noise.ext["noise"]["sum2"])
+    assert s1 > 0.0 and s2 > 0.0 and s1 != s2  # streams drew, independently
+    again = simulate(
+        jobs, sites, pol, jax.random.PRNGKey(0), subsystems=((noise, state0),)
+    )
+    assert float(again.ext["noise"]["sum"]) == s1  # deterministic stream
+    other_key = simulate(
+        jobs, sites, pol, jax.random.PRNGKey(9), subsystems=((noise, state0),)
+    )
+    assert float(other_key.ext["noise"]["sum"]) != s1  # keyed by the run key
+
+
+def test_ensemble_keys_match_solo_keys():
+    """Lane i of an ensemble uses split(rng, K)[i] — pinned so bucketing and
+    sharding can permute execution order without changing any lane's draws."""
+    scens = ragged_scenarios([40, 40])
+    pol = get_policy("random")  # scores drawn from the per-round policy key
+    keys = jax.random.split(jax.random.PRNGKey(11), 2)
+    res = simulate_many(scens, pol, jax.random.PRNGKey(11))
+    for i, s in enumerate(scens):
+        solo = simulate(s.jobs, s.sites, pol, keys[i])
+        assert float(res.makespan[i]) == float(solo.makespan)

@@ -308,6 +308,35 @@ def test_kwargs_and_subsystems_tuple_identical(n_jobs, seed, with_avail, with_da
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@settings(max_examples=8, deadline=None)
+@given(
+    n_jobs=st.integers(10, 48),
+    seed=st.integers(0, 2**16),
+    fail_rate=st.floats(0.0, 0.3),
+    with_avail=st.booleans(),
+    with_data=st.booleans(),
+    policy=st.sampled_from(POLICIES),
+)
+def test_phase_skip_guard_identical(n_jobs, seed, fail_rate, with_avail, with_data, policy):
+    """The phase-skip guard (ISSUE 5) must be invisible: running with the
+    guard force-disabled (``phase_skip=False``, the always-execute pipeline)
+    and enabled produces identical ``SimResult`` pytrees — the skipped
+    assignment/start phases were provably no-ops on the skipped rounds."""
+    res1, jobs, sites, kw = build_scenario(
+        n_jobs, seed, policy, fail_rate=fail_rate,
+        with_avail=with_avail, with_data=with_data,
+    )
+    res2 = simulate(
+        jobs, sites, get_policy(policy), jax.random.PRNGKey(seed),
+        phase_skip=False, **kw,
+    )
+    leaves1, tree1 = jax.tree.flatten(res1)
+    leaves2, tree2 = jax.tree.flatten(res2)
+    assert tree1 == tree2
+    for a, b in zip(leaves1, leaves2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 # --------------------------------------------------------------------------
 # workflow DAG conservation laws (ISSUE 3): dependency gating, cascade-cancel
 # partition, termination
