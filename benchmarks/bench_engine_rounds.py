@@ -210,6 +210,25 @@ def _ensemble_worker(tiny: bool) -> None:
         )
     print(csv_row("ensemble_steady_many_16", t_many * 1e6, derived))
 
+    # --- per-lane occupancy: the lock-step/padding tax, measured ----------
+    # informational row (us=0 rows are skipped by the perf gate): quantifies
+    # what the bucketed+sharded configuration saves on this exact ensemble
+    from repro.core.telemetry import lane_occupancy
+
+    res = simulate_many_sharded(
+        bucketed, pol, jax.random.PRNGKey(2), mesh, donate=False
+    )
+    occ = lane_occupancy(res, buckets=bucketed)
+    s, pad = occ["summary"], occ["buckets"]["summary"]
+    print(csv_row(
+        "ensemble_lane_occupancy", 0.0,
+        f"active_frac_mean={s['active_frac_mean']:.3f};"
+        f"lockstep_waste={s['lockstep_waste_frac']:.3f};"
+        f"bucket_pad_waste={pad['waste_frac']:.3f};"
+        f"flat_pad_waste={pad['flat_waste_frac']:.3f};"
+        f"saved_rows={pad['saved_rows']}",
+    ))
+
 
 def main():
     tiny = "--tiny" in sys.argv
@@ -291,6 +310,43 @@ def main():
     )
     print(f"# engine rounds: J={n_jobs} S={n_sites}, {rounds} rounds/run")
     print(csv_row("simulate_one", t_one * 1e6, f"rounds_per_sec={rounds / t_one:.0f}"))
+
+    # --- telemetry overhead: recorder on vs off on the same warm run ------
+    # ``*_overhead_pct`` rows gate on their fresh value (<= 5% budget) in
+    # ``summarize_results --check-bench`` — the flight recorder must be
+    # effectively free around the jit boundary (ISSUE 6)
+    from repro.core.telemetry import TraceRecorder
+
+    def run_plain():
+        jax.block_until_ready(simulate(jobs, sites, pol, jax.random.PRNGKey(1)).makespan)
+
+    def run_rec():
+        jax.block_until_ready(
+            simulate(jobs, sites, pol, jax.random.PRNGKey(1),
+                     recorder=TraceRecorder()).makespan
+        )
+
+    # interleave the two variants and compare minima, so cache-warmth and
+    # host jitter hit both sides equally
+    run_plain(), run_rec()
+    # a tiny run is ~20ms, so ms-scale host jitter flakes a 5% gate on
+    # single-call samples: each sample aggregates ``reps`` calls and the two
+    # variants interleave, then compare minima
+    iters, reps = 10, 3
+    t_off, t_on = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            run_plain()
+        t_off.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            run_rec()
+        t_on.append(time.perf_counter() - t0)
+    t_off_m, t_on_m = min(t_off) / reps, min(t_on) / reps
+    overhead = (t_on_m / t_off_m - 1.0) * 100.0
+    print(csv_row("telemetry_overhead_pct", overhead,
+                  f"recorder_on={t_on_m * 1e6:.0f}us;off={t_off_m * 1e6:.0f}us"))
 
 
 if __name__ == "__main__":

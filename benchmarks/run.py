@@ -61,7 +61,16 @@ def parse_rows(text: str) -> list[dict]:
     return rows
 
 
-def write_json(name: str, fn, out_dir: pathlib.Path) -> list[str]:
+def env_manifest() -> dict:
+    """The telemetry ``RunManifest`` for this bench process: backend, device
+    count, package versions — embedded in every ``BENCH_*.json`` so the perf
+    gate can tell env drift from perf drift."""
+    from repro.core.telemetry import run_manifest
+
+    return run_manifest(extra=dict(tiny="--tiny" in sys.argv))
+
+
+def write_json(name: str, fn, out_dir: pathlib.Path, manifest=None) -> list[str]:
     """Run one suite with stdout captured; write ``BENCH_<name>.json``."""
     buf = io.StringIO()
     t0 = time.perf_counter()
@@ -79,6 +88,7 @@ def write_json(name: str, fn, out_dir: pathlib.Path) -> list[str]:
         status="failed" if err else "ok",
         error=err,
         wall_s=round(time.perf_counter() - t0, 3),
+        manifest=manifest,
         rows=parse_rows(text),
     )
     path = out_dir / f"BENCH_{name}.json"
@@ -103,12 +113,18 @@ def main() -> None:
     args = [a for a in args if a not in ("--json", "--tiny")]
     only = args[0] if args else None
     failures = []
+    manifest = None
+    if as_json:
+        manifest = env_manifest()
+        mpath = out_dir / "RUN_MANIFEST.json"
+        mpath.write_text(json.dumps(manifest, indent=2) + "\n")
+        print(f"wrote {mpath}")
     for name, fn in SUITES.items():
         if only and only != name:
             continue
         print(f"\n=== {name} ===")
         if as_json:
-            failures += write_json(name, fn, out_dir)
+            failures += write_json(name, fn, out_dir, manifest)
             continue
         try:
             fn()

@@ -105,8 +105,46 @@ def _is_speedup_row(name: str) -> bool:
     return "speedup" in name
 
 
+def _is_overhead_row(name: str) -> bool:
+    return name.endswith("_overhead_pct")
+
+
+# perf-relevant manifest keys (mirrors telemetry._DRIFT_KEYS — kept local so
+# the gate runs without repro on the path)
+_DRIFT_KEYS = (
+    ("jax", "version"),
+    ("jax", "backend"),
+    ("jax", "device_count"),
+    ("jax", "device_kinds"),
+    ("versions", "python"),
+    ("versions", "numpy"),
+)
+
+
+def _manifest_drift(fresh: dict, baseline: dict) -> list[str]:
+    diffs = []
+    for section, key in _DRIFT_KEYS:
+        a = (fresh.get(section) or {}).get(key)
+        b = (baseline.get(section) or {}).get(key)
+        if a != b:
+            diffs.append(f"{section}.{key}: fresh={a!r} baseline={b!r}")
+    return diffs
+
+
+def warn_manifest_drift(new: dict, base: dict, suite: str) -> None:
+    """Env drift between a fresh run and the committed baseline explains perf
+    drift — surface it next to the verdicts, but never fail on it (baselines
+    are committed from a different machine by design)."""
+    fresh, baseline = new.get("manifest"), base.get("manifest")
+    if not fresh or not baseline:
+        return
+    for d in _manifest_drift(fresh, baseline):
+        print(f"{suite:<22} WARNING manifest drift — {d}")
+
+
 def check_bench(
-    new_dir: str, base_dir: str, tol_time: float, tol_speedup: float, min_us: float
+    new_dir: str, base_dir: str, tol_time: float, tol_speedup: float, min_us: float,
+    tol_overhead_pct: float = 5.0,
 ) -> int:
     """Compare fresh BENCH_*.json rows against committed baselines.
 
@@ -116,6 +154,12 @@ def check_bench(
     ``min_us`` (microbenchmarks dominated by dispatch noise); rows new in
     this commit pass by definition and become gated once the baselines are
     regenerated.
+
+    Two further checks: fresh-vs-baseline manifest drift prints warnings
+    (env drift explains perf drift — never fatal), and ``*_overhead_pct``
+    rows gate on their *fresh* value alone (absolute budget, e.g. the
+    telemetry recorder must stay within ``tol_overhead_pct`` of free) —
+    machine-independent, so no baseline is needed.
     """
     failures = 0
     baselines = sorted(glob.glob(os.path.join(base_dir, "BENCH_*.json")))
@@ -137,10 +181,11 @@ def check_bench(
                   f"FAIL ({new.get('error')})")
             failures += 1
             continue
+        warn_manifest_drift(new, base, suite)
         new_rows = {r["name"]: r for r in new["rows"]}
         for row in base["rows"]:
             name, old_v = row["name"], row["us_per_call"]
-            if old_v <= 0:
+            if old_v <= 0 or _is_overhead_row(name):
                 continue
             if not _is_speedup_row(name) and old_v < min_us:
                 continue
@@ -157,6 +202,16 @@ def check_bench(
                 verdict = "ok" if ok else f"FAIL (> x{1.0 + tol_time:.2f} of baseline)"
             failures += 0 if ok else 1
             print(f"{suite:<22} {name:<34} {old_v:>12.1f} {new_v:>12.1f}  {verdict}")
+        # absolute-budget rows gate on the fresh run alone
+        for name, row in sorted(new_rows.items()):
+            if not _is_overhead_row(name):
+                continue
+            v = row["us_per_call"]
+            ok = v <= tol_overhead_pct
+            verdict = "ok" if ok else f"FAIL (> {tol_overhead_pct:.1f}% budget)"
+            failures += 0 if ok else 1
+            print(f"{suite:<22} {name:<34} {'<=' + format(tol_overhead_pct, '.1f') + '%':>12} "
+                  f"{v:>11.1f}%  {verdict}")
     return failures
 
 
@@ -175,10 +230,12 @@ def main():
                     help="speedup rows fail below (1-tol)*baseline")
     ap.add_argument("--min-us", type=float, default=1000.0,
                     help="skip timing rows whose baseline is below this")
+    ap.add_argument("--tol-overhead-pct", type=float, default=5.0,
+                    help="*_overhead_pct rows fail above this fresh value")
     args = ap.parse_args()
     if args.check_bench:
         n = check_bench(args.check_bench, args.baselines, args.tol_time,
-                        args.tol_speedup, args.min_us)
+                        args.tol_speedup, args.min_us, args.tol_overhead_pct)
         if n:
             raise SystemExit(f"perf gate: {n} regression(s) beyond tolerance")
         print("perf gate: ok")

@@ -28,14 +28,35 @@ from .types import (  # noqa: F401
 from .engine import (  # noqa: F401
     Scenario,
     ScenarioBuckets,
+    SimHandle,
+    advance_sim,
     compute_time,
+    finish_sim,
+    init_sim,
     queue_times,
     service_time,
+    sim_active,
     simulate,
     simulate_ensemble,
     simulate_many,
     stack_scenarios,
     walltimes,
+)
+from .telemetry import (  # noqa: F401
+    CallbackSink,
+    MemorySink,
+    NDJSONSink,
+    NullRecorder,
+    NullSink,
+    Sink,
+    TraceRecorder,
+    iter_ndjson,
+    lane_occupancy,
+    manifest_drift,
+    read_manifest,
+    run_manifest,
+    scenario_hash,
+    write_manifest,
 )
 from .subsystems import (  # noqa: F401
     RoundCtx,
@@ -120,3 +141,5 @@ from .workload import (  # noqa: F401
     synthetic_panda_jobs,
 )
 from .metrics import Metrics, compute_metrics, summary_str  # noqa: F401
+from .events import stream_rows, write_ml_dataset  # noqa: F401
+from .monitor import watch  # noqa: F401

@@ -234,41 +234,18 @@ def default_assign(scores: jax.Array, queued: jax.Array, feasible: jax.Array, si
     return jnp.where(ok, best, -1), ok
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "policy",
-        "subsystems",
-        "max_rounds",
-        "log_rows",
-        "max_retries",
-        "monitor_every",
-        "quantum",
-        "phase_skip",
-    ),
-)
-def _simulate(
+def _init_state(
     jobs0: JobsState,
     sites0: SiteState,
     policy,
     rng: jax.Array,
     ext0: dict,
-    *,
-    subsystems: tuple = (),
-    max_rounds: int = 100_000,
-    horizon: float = float("inf"),
-    log_rows: int = 0,
-    max_retries: int = 3,
-    monitor_every: int = 1,
-    quantum: float = 0.0,
-    phase_skip: bool = True,
-) -> SimResult:
-    """The jitted phase pipeline; ``subsystems`` is a static Subsystem tuple,
-    ``ext0`` the matching name -> state pytree mapping (see subsystems.py)."""
-    S = sites0.capacity
-    J = jobs0.capacity
+    subsystems: tuple,
+    log_rows: int,
+) -> EngineState:
+    """Build the round-loop carry: run policy/subsystem init hooks, allocate
+    the frame ring buffer, seat the extension states."""
     policy_state0 = policy.init(jobs0, sites0)
-
     ext0 = dict(ext0)
     for sub in subsystems:
         if sub.init is not None:
@@ -277,9 +254,39 @@ def _simulate(
     for sub in subsystems:
         if sub.log_spec is not None:
             log_extra0.update(sub.log_spec(sub, ext0[sub.name], jobs0, sites0))
-    log0 = make_log(log_rows, S, extra=log_extra0)
+    log0 = make_log(log_rows, sites0.capacity, extra=log_extra0)
+    return EngineState(
+        clock=jnp.float32(0.0),
+        round=jnp.int32(0),
+        jobs=jobs0,
+        sites=sites0,
+        rng=rng,
+        policy_state=policy_state0,
+        log=log0,
+        halted=jnp.array(False),
+        ext=ext0,
+    )
 
-    def cond(st: EngineState):
+
+def _round_fns(
+    policy,
+    subsystems: tuple,
+    *,
+    max_rounds: int,
+    log_rows: int,
+    max_retries: int,
+    monitor_every: int,
+    quantum: float,
+    phase_skip: bool,
+):
+    """Build the engine while-loop's ``(cond, body)`` pair for one static
+    configuration.  ``cond`` takes the horizon as a second (traced) argument
+    so segmented drivers (``advance_sim``/``monitor.watch``) re-enter the
+    *same* compiled loop with a different stopping time per segment — the
+    round sequence of a run is identical whether it executes in one
+    ``while_loop`` or paused-and-resumed across many."""
+
+    def cond(st: EngineState, horizon):
         active = (
             (st.jobs.state == PENDING)
             | (st.jobs.state == QUEUED)
@@ -294,6 +301,8 @@ def _simulate(
         )
 
     def body(st: EngineState) -> EngineState:
+        S = st.sites.capacity
+        J = st.jobs.capacity
         jobs, sites = st.jobs, st.sites
         rng, k_fail, k_frac, k_policy = jax.random.split(st.rng, 4)
         ctx = RoundCtx(
@@ -549,18 +558,12 @@ def _simulate(
             ext=ctx.ext,
         )
 
-    st0 = EngineState(
-        clock=jnp.float32(0.0),
-        round=jnp.int32(0),
-        jobs=jobs0,
-        sites=sites0,
-        rng=rng,
-        policy_state=policy_state0,
-        log=log0,
-        halted=jnp.array(False),
-        ext=ext0,
-    )
-    st = jax.lax.while_loop(cond, body, st0)
+    return cond, body
+
+
+def _finalize(st: EngineState, policy, subsystems: tuple) -> SimResult:
+    """End-of-run hooks (policy ``on_end``, subsystem ``finalize``) plus
+    SimResult assembly — shared by the one-shot jit and the segmented API."""
     pstate = policy.on_end(st.policy_state, st.jobs, st.sites, st.clock)
     ext = dict(st.ext)
     result_fields = {}
@@ -578,6 +581,52 @@ def _simulate(
         ext=ext,
         **result_fields,
     )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "policy",
+        "subsystems",
+        "max_rounds",
+        "log_rows",
+        "max_retries",
+        "monitor_every",
+        "quantum",
+        "phase_skip",
+    ),
+)
+def _simulate(
+    jobs0: JobsState,
+    sites0: SiteState,
+    policy,
+    rng: jax.Array,
+    ext0: dict,
+    *,
+    subsystems: tuple = (),
+    max_rounds: int = 100_000,
+    horizon: float = float("inf"),
+    log_rows: int = 0,
+    max_retries: int = 3,
+    monitor_every: int = 1,
+    quantum: float = 0.0,
+    phase_skip: bool = True,
+) -> SimResult:
+    """The jitted phase pipeline; ``subsystems`` is a static Subsystem tuple,
+    ``ext0`` the matching name -> state pytree mapping (see subsystems.py)."""
+    st0 = _init_state(jobs0, sites0, policy, rng, ext0, subsystems, log_rows)
+    cond, body = _round_fns(
+        policy,
+        subsystems,
+        max_rounds=max_rounds,
+        log_rows=log_rows,
+        max_retries=max_retries,
+        monitor_every=monitor_every,
+        quantum=quantum,
+        phase_skip=phase_skip,
+    )
+    st = jax.lax.while_loop(lambda s: cond(s, horizon), body, st0)
+    return _finalize(st, policy, subsystems)
 
 
 def simulate(
@@ -599,8 +648,16 @@ def simulate(
     monitor_every: int = 1,
     quantum: float = 0.0,
     phase_skip: bool = True,
+    recorder=None,
 ) -> SimResult:
     """Run the grid simulation to completion (or ``max_rounds``/``horizon``).
+
+    ``recorder`` (a ``telemetry.TraceRecorder``) makes the run observable at
+    the jit boundary: the call is split into a ``trace_compile`` (cache miss)
+    or ``dispatch`` (cache hit) span plus an ``execute`` span
+    (``block_until_ready``), and rounds-executed / round-budget / early-exit
+    counters are recorded.  ``None`` (the default) adds no host syncs and no
+    overhead — results are bit-for-bit identical either way.
 
     ``phase_skip`` (default on) guards the assignment + start phases behind a
     scalar ``lax.cond`` on "any QUEUED/ASSIGNED rows": completion-only rounds
@@ -653,8 +710,7 @@ def simulate(
         jobs=jobs0,
         sites=sites0,
     )
-    return _simulate(
-        jobs0, sites0, policy, rng, ext0,
+    kw = dict(
         subsystems=subs,
         max_rounds=max_rounds,
         horizon=horizon,
@@ -664,6 +720,144 @@ def simulate(
         quantum=quantum,
         phase_skip=phase_skip,
     )
+    if recorder is None:
+        return _simulate(jobs0, sites0, policy, rng, ext0, **kw)
+
+    # flight-recorder path: split the jit call into compile-vs-execute spans
+    # (tracing+compilation is synchronous in the call, execution is async
+    # until block_until_ready) and count rounds against the budget
+    import time as _time
+
+    cache_size = getattr(_simulate, "_cache_size", None)
+    before = cache_size() if cache_size is not None else -1
+    t0 = _time.perf_counter()
+    res = _simulate(jobs0, sites0, policy, rng, ext0, **kw)
+    t_call = _time.perf_counter() - t0
+    compiled = cache_size is not None and cache_size() > before
+    recorder.record("trace_compile" if compiled else "dispatch", t_call)
+    with recorder.span("execute"):
+        jax.block_until_ready(res)
+    rounds = int(res.rounds)
+    recorder.gauge("rounds_executed", rounds)
+    recorder.gauge("round_budget", max_rounds)
+    recorder.gauge("early_exit_rounds", max(max_rounds - rounds, 0))
+    recorder.gauge("n_jobs", int(np.asarray(jobs0.valid).sum()))
+    recorder.gauge("n_sites", sites0.capacity)
+    recorder.note("jit_cache_hit", not compiled)
+    recorder.note("subsystems", [s.name for s in subs])
+    return res
+
+
+# --------------------------------------------------------------------------
+# segmented execution: pause/resume the round loop between frames
+# --------------------------------------------------------------------------
+
+
+class SimHandle(NamedTuple):
+    """A paused simulation: the while-loop carry plus everything needed to
+    resume it.  Produced by ``init_sim``, advanced by ``advance_sim``,
+    finished by ``finish_sim`` — the substrate of ``monitor.watch`` and of
+    any streaming driver that wants frames *between* jit re-entries rather
+    than inside the hot loop."""
+
+    state: EngineState
+    policy: object
+    subsystems: tuple
+    statics: tuple  # (max_rounds, log_rows, max_retries, monitor_every, quantum, phase_skip)
+
+    @property
+    def max_rounds(self) -> int:
+        return self.statics[0]
+
+
+def init_sim(
+    jobs0: JobsState,
+    sites0: SiteState,
+    policy,
+    rng: jax.Array,
+    *,
+    data_policy=None,
+    network=None,
+    replicas=None,
+    availability=None,
+    workflow=None,
+    subsystems=(),
+    max_rounds: int = 100_000,
+    log_rows: int = 0,
+    max_retries: int = 3,
+    monitor_every: int = 1,
+    quantum: float = 0.0,
+    phase_skip: bool = True,
+) -> SimHandle:
+    """Initialize a resumable simulation (same kwargs as ``simulate`` minus
+    ``horizon``, which ``advance_sim`` takes per segment)."""
+    from .subsystems import resolve_subsystems as _resolve
+
+    subs, ext0 = _resolve(
+        data_policy=data_policy,
+        network=network,
+        replicas=replicas,
+        availability=availability,
+        workflow=workflow,
+        subsystems=subsystems,
+        jobs=jobs0,
+        sites=sites0,
+    )
+    st0 = _init_state(jobs0, sites0, policy, rng, ext0, subs, log_rows)
+    statics = (max_rounds, log_rows, max_retries, monitor_every, quantum, phase_skip)
+    return SimHandle(state=st0, policy=policy, subsystems=subs, statics=statics)
+
+
+@functools.lru_cache(maxsize=None)
+def _segment_fn(policy, subsystems: tuple, statics: tuple):
+    """The cached jitted segment runner: the exact engine while loop with the
+    horizon as a *dynamic* argument, so every segment of every run with the
+    same static configuration shares one compile."""
+    max_rounds, log_rows, max_retries, monitor_every, quantum, phase_skip = statics
+    cond, body = _round_fns(
+        policy,
+        subsystems,
+        max_rounds=max_rounds,
+        log_rows=log_rows,
+        max_retries=max_retries,
+        monitor_every=monitor_every,
+        quantum=quantum,
+        phase_skip=phase_skip,
+    )
+
+    def run(st: EngineState, horizon):
+        return jax.lax.while_loop(lambda s: cond(s, horizon), body, st)
+
+    return jax.jit(run)
+
+
+def advance_sim(handle: SimHandle, horizon: float = float("inf")) -> SimHandle:
+    """Run rounds until the clock passes ``horizon`` (or the run drains).
+
+    Because ``cond`` checks the clock *before* each round, resuming with a
+    larger horizon continues the identical round sequence a single
+    ``simulate`` call would have executed — segmentation changes where the
+    loop pauses, never what it computes (property-tested bit-for-bit)."""
+    run = _segment_fn(handle.policy, tuple(handle.subsystems), handle.statics)
+    return handle._replace(state=run(handle.state, jnp.float32(horizon)))
+
+
+def sim_active(handle: SimHandle) -> bool:
+    """Host-side: would the round loop still run, given an open horizon?"""
+    st = handle.state
+    if bool(st.halted) or int(st.round) >= handle.max_rounds:
+        return False
+    state = np.asarray(st.jobs.state)
+    valid = np.asarray(st.jobs.valid)
+    active = (
+        (state == PENDING) | (state == QUEUED) | (state == ASSIGNED) | (state == RUNNING)
+    )
+    return bool((active & valid).any())
+
+
+def finish_sim(handle: SimHandle) -> SimResult:
+    """Run end-of-run hooks on a (drained or abandoned) handle."""
+    return _finalize(handle.state, handle.policy, tuple(handle.subsystems))
 
 
 # --------------------------------------------------------------------------
@@ -702,6 +896,52 @@ class ScenarioBuckets(NamedTuple):
     @property
     def n_scenarios(self) -> int:
         return sum(len(ix) for ix in self.index)
+
+    def padding_stats(self) -> dict:
+        """Measure the padding tax this bucketing actually pays.
+
+        Returns per-bucket rows (capacity, lanes, used vs padded job rows,
+        waste fraction) plus a summary comparing against the one-bucket
+        alternative (every lane dense to the global max capacity) — the
+        saved-row count that justifies the extra compiles."""
+        rows = []
+        total_rows = total_used = 0
+        for b, (scn, ix) in enumerate(zip(self.buckets, self.index)):
+            cap = scn.jobs.capacity
+            lanes = len(ix)
+            used = int(np.asarray(scn.jobs.valid).sum())
+            dense = lanes * cap
+            rows.append(
+                dict(
+                    bucket=b,
+                    capacity=cap,
+                    lanes=lanes,
+                    used_rows=used,
+                    padded_rows=dense - used,
+                    waste_frac=float((dense - used) / dense) if dense else 0.0,
+                )
+            )
+            total_rows += dense
+            total_used += used
+        cap_max = max(r["capacity"] for r in rows)
+        flat_rows = self.n_scenarios * cap_max
+        return dict(
+            buckets=rows,
+            summary=dict(
+                n_buckets=len(rows),
+                n_scenarios=self.n_scenarios,
+                total_rows=total_rows,
+                used_rows=total_used,
+                waste_frac=(
+                    float((total_rows - total_used) / total_rows) if total_rows else 0.0
+                ),
+                flat_rows=flat_rows,
+                flat_waste_frac=(
+                    float((flat_rows - total_used) / flat_rows) if flat_rows else 0.0
+                ),
+                saved_rows=flat_rows - total_rows,
+            ),
+        )
 
 
 def stack_scenarios(scenarios, *, subsystems: tuple = (), buckets: int = 1):

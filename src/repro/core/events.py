@@ -22,15 +22,13 @@ K_FINISH, K_ASSIGN, K_START = 0, 1, 2
 KIND_NAMES = {K_ASSIGN: "assigned", K_START: "running", K_FINISH: "finished"}
 
 
-def transition_rows(result: SimResult, site_names=None) -> list[dict]:
-    """Expand a SimResult into one row per job state transition (Table 1).
+def iter_transitions(result: SimResult, site_names=None):
+    """Yield job state-transition rows one at a time (Table 1 stream).
 
-    Each row: event_id, time, job_id, state, site, site available cores,
-    site pending (queued) jobs, site assigned (running) jobs, site finished.
-
-    Note: for resubmitted jobs only the final attempt's timestamps survive in
-    ``JobsState``, so the stream contains one assign/start/finish triplet per
-    job (failed intermediate attempts are visible in ``sites.n_failed``).
+    The generator form of ``transition_rows``: the sort still needs one
+    ``(time, kind, job, site)`` tuple per transition (3 per job), but rows —
+    an order of magnitude wider — are materialized one at a time, so a
+    sink-fed export never holds the whole table.
     """
     jobs = jax_to_np(result.jobs)
     sites = jax_to_np(result.sites)
@@ -55,7 +53,6 @@ def transition_rows(result: SimResult, site_names=None) -> list[dict]:
     queued = np.zeros(S, np.int64)   # in site queue, not yet running
     running = np.zeros(S, np.int64)
     finished = np.zeros(S, np.int64)
-    rows = []
     for eid, (t, kind, j, sid) in enumerate(evs):
         if sid < 0:
             continue
@@ -72,20 +69,31 @@ def transition_rows(result: SimResult, site_names=None) -> list[dict]:
         state = KIND_NAMES[kind]
         if kind == K_FINISH and jobs["state"][j] == FAILED:
             state = "failed"
-        rows.append(
-            dict(
-                event_id=eid,
-                time=round(t, 3),
-                job_id=int(jobs["job_id"][j]),
-                state=state,
-                site=name(sid),
-                avail_cores=int(free[sid]),
-                pending_jobs=int(queued[sid]),
-                assigned_jobs=int(running[sid]),
-                finished_jobs=int(finished[sid]),
-            )
+        yield dict(
+            event_id=eid,
+            time=round(t, 3),
+            job_id=int(jobs["job_id"][j]),
+            state=state,
+            site=name(sid),
+            avail_cores=int(free[sid]),
+            pending_jobs=int(queued[sid]),
+            assigned_jobs=int(running[sid]),
+            finished_jobs=int(finished[sid]),
         )
-    return rows
+
+
+def transition_rows(result: SimResult, site_names=None) -> list[dict]:
+    """Expand a SimResult into one row per job state transition (Table 1).
+
+    Each row: event_id, time, job_id, state, site, site available cores,
+    site pending (queued) jobs, site assigned (running) jobs, site finished.
+
+    Note: for resubmitted jobs only the final attempt's timestamps survive in
+    ``JobsState``, so the stream contains one assign/start/finish triplet per
+    job (failed intermediate attempts are visible in ``sites.n_failed``).
+    ``iter_transitions`` is the streaming (generator) form.
+    """
+    return list(iter_transitions(result, site_names))
 
 
 def transfer_rows(result: SimResult, site_names=None) -> list[dict]:
@@ -236,23 +244,39 @@ def to_json(rows: list[dict]) -> str:
     return json.dumps(rows)
 
 
-def ml_dataset(result: SimResult) -> dict[str, np.ndarray]:
-    """Feature/label matrices for surrogate training (paper §1: "datasets
-    suitable for modern machine learning approaches").
-
-    Features (per finished/failed job): work, cores, memory, bytes_in/out,
-    priority, site one-hot stats (speed, cores, bw, queue pressure at assign),
-    plus data-movement columns (WAN bytes staged, stage-in duration, dataset
-    presence) so surrogates can learn transfer-dominated walltimes.  Runs with
-    an ``AvailabilityState`` append availability columns — the job's preempted
-    attempts, its final site's downtime fraction and cumulative preemptions —
-    so surrogates can learn outage-shaped walltime tails.  Workflow DAG
-    columns (``n_parents``/``dag_depth``/``wf_id``) are always present
-    (0/0/-1 without a DAG) so the schema is stable across run kinds.
-    Labels: walltime, queue_time, failed.
-    """
+def _ml_context(result: SimResult) -> dict:
+    """Everything ``_ml_block`` needs that is *per-run*, not per-job-slice:
+    the host-side column arrays, the per-site availability columns, and the
+    feature-name schema.  Computed once so chunked export pays it once."""
     jobs = jax_to_np(result.jobs)
     sites = jax_to_np(result.sites)
+    names = [
+        "log_work", "cores", "memory_gb", "log_bytes_in", "log_bytes_out",
+        "priority", "site_speed", "site_cores", "site_log_bw", "site_gamma",
+        "site_fail_rate", "log_xfer_bytes", "xfer_time", "has_dataset",
+        "n_parents", "dag_depth", "wf_id",
+    ]
+    ctx = dict(jobs=jobs, sites=sites, down_frac=None, site_pre=None)
+    avail = getattr(result, "avail", None)
+    if avail is not None:
+        from .availability import downtime_fraction
+
+        ctx["down_frac"] = downtime_fraction(avail, float(result.makespan))
+        ctx["site_pre"] = np.asarray(avail.n_preempted, np.float64)
+        names = names + ["n_preempted", "site_downtime_frac", "site_log_preempted"]
+    ctx["names"] = names
+    return ctx
+
+
+def _ml_block(ctx: dict, sl: slice = slice(None)) -> dict[str, np.ndarray]:
+    """Features/labels for one job-axis slice.
+
+    Every per-job column is elementwise (transforms and site gathers), so a
+    slice computes values identical to the same rows of the full matrix —
+    the invariant that makes ``write_ml_dataset`` byte-identical to
+    ``ml_dataset`` at any segment size (tested)."""
+    jobs = {k: v[sl] for k, v in ctx["jobs"].items()}
+    sites = ctx["sites"]
     done = np.isin(jobs["state"], [DONE, FAILED]) & jobs["valid"]
     sid = np.clip(jobs["site"], 0, len(sites["cores"]) - 1)
 
@@ -280,28 +304,16 @@ def ml_dataset(result: SimResult) -> dict[str, np.ndarray]:
         ],
         axis=-1,
     )[done]
-    names = [
-        "log_work", "cores", "memory_gb", "log_bytes_in", "log_bytes_out",
-        "priority", "site_speed", "site_cores", "site_log_bw", "site_gamma",
-        "site_fail_rate", "log_xfer_bytes", "xfer_time", "has_dataset",
-        "n_parents", "dag_depth", "wf_id",
-    ]
-    avail = getattr(result, "avail", None)
-    if avail is not None:
-        from .availability import downtime_fraction
-
-        down_frac = downtime_fraction(avail, float(result.makespan))
-        site_pre = np.asarray(avail.n_preempted, np.float64)
+    if ctx["down_frac"] is not None:
         extra = np.stack(
             [
                 jobs["preempted"].astype(np.float64),
-                down_frac[sid],
-                np.log1p(site_pre[sid]),
+                ctx["down_frac"][sid],
+                np.log1p(ctx["site_pre"][sid]),
             ],
             axis=-1,
         )[done]
         feats = np.concatenate([feats, extra], axis=-1)
-        names += ["n_preempted", "site_downtime_frac", "site_log_preempted"]
     wall = (jobs["t_finish"] - jobs["t_start"])[done]
     queue = (jobs["t_start"] - jobs["arrival"])[done]
     failed = (jobs["state"] == FAILED)[done]
@@ -310,8 +322,97 @@ def ml_dataset(result: SimResult) -> dict[str, np.ndarray]:
         walltime=wall.astype(np.float32),
         queue_time=queue.astype(np.float32),
         failed=failed,
-        feature_names=np.array(names),
     )
+
+
+def ml_dataset(result: SimResult) -> dict[str, np.ndarray]:
+    """Feature/label matrices for surrogate training (paper §1: "datasets
+    suitable for modern machine learning approaches").
+
+    Features (per finished/failed job): work, cores, memory, bytes_in/out,
+    priority, site one-hot stats (speed, cores, bw, queue pressure at assign),
+    plus data-movement columns (WAN bytes staged, stage-in duration, dataset
+    presence) so surrogates can learn transfer-dominated walltimes.  Runs with
+    an ``AvailabilityState`` append availability columns — the job's preempted
+    attempts, its final site's downtime fraction and cumulative preemptions —
+    so surrogates can learn outage-shaped walltime tails.  Workflow DAG
+    columns (``n_parents``/``dag_depth``/``wf_id``) are always present
+    (0/0/-1 without a DAG) so the schema is stable across run kinds.
+    Labels: walltime, queue_time, failed.
+
+    ``write_ml_dataset`` streams the same dataset to NDJSON in bounded-memory
+    segments, row/byte-identical to this in-memory form.
+    """
+    ctx = _ml_context(result)
+    block = _ml_block(ctx)
+    block["feature_names"] = np.array(ctx["names"])
+    return block
+
+
+def write_ml_dataset(result: SimResult, target, *, segment: int = 0) -> int:
+    """Stream the ``ml_dataset`` rows to NDJSON with bounded peak memory.
+
+    ``target`` is a path or text file object.  ``segment`` is the number of
+    *jobs* whose feature block is materialized at a time (0 = all at once);
+    peak export memory is O(segment × n_features), not O(jobs), so WLCG-scale
+    runs export without assembling the full matrix.  The emitted bytes are
+    identical for every segment size: one ``ml_header`` line (schema +
+    feature names), then one ``ml_row`` line per finished/failed job in job
+    order.  Returns the number of data rows written.
+    """
+    ctx = _ml_context(result)
+    J = len(ctx["jobs"]["arrival"])
+    step = J if segment <= 0 else segment
+    own = not hasattr(target, "write")
+    f = open(target, "w") if own else target
+    n = 0
+    try:
+        f.write(
+            json.dumps(
+                {"type": "ml_header", "feature_names": ctx["names"]},
+                separators=(",", ":"),
+            )
+            + "\n"
+        )
+        for lo in range(0, J, step):
+            block = _ml_block(ctx, slice(lo, min(lo + step, J)))
+            for i in range(len(block["walltime"])):
+                rec = {
+                    "type": "ml_row",
+                    "features": [float(x) for x in block["features"][i]],
+                    "walltime": float(block["walltime"][i]),
+                    "queue_time": float(block["queue_time"][i]),
+                    "failed": bool(block["failed"][i]),
+                }
+                f.write(json.dumps(rec, separators=(",", ":")) + "\n")
+                n += 1
+    finally:
+        if own:
+            f.close()
+    return n
+
+
+def iter_frames(result: SimResult):
+    """Yield per-round monitoring snapshots one at a time (generator form of
+    ``log_frames`` — the rounds×sites table never materializes at once)."""
+    log = jax_to_np(result.log)
+    extra = {k: np.asarray(v) for k, v in result.log.extra.items()}
+    n = int(log["cursor"])
+    rows = min(n, len(log["time"]))
+    for i in range(rows):
+        if log["round_idx"][i] < 0:
+            continue
+        yield dict(
+            round=int(log["round_idx"][i]),
+            time=float(log["time"][i]),
+            counts={k: int(v) for k, v in zip(STATE_NAMES, log["counts"][i])},
+            started=int(log["n_started"][i]),
+            completed=int(log["n_completed"][i]),
+            site_free=log["site_free"][i].tolist(),
+            site_queued=log["site_queued"][i].tolist(),
+            site_running=log["site_running"][i].tolist(),
+            **{k: v[i].tolist() for k, v in extra.items()},
+        )
 
 
 def log_frames(result: SimResult) -> list[dict]:
@@ -321,29 +422,41 @@ def log_frames(result: SimResult) -> list[dict]:
     (``EventLog.extra``, DESIGN.md §7 — e.g. ``site_disk``/``site_net_in``
     from the data subsystem, ``site_avail`` from availability) appear under
     their declared names whenever the subsystem ran, so the export schema
-    assembles itself from whatever was attached."""
-    log = jax_to_np(result.log)
-    extra = {k: np.asarray(v) for k, v in result.log.extra.items()}
-    n = int(log["cursor"])
-    rows = min(n, len(log["time"]))
-    out = []
-    for i in range(rows):
-        if log["round_idx"][i] < 0:
-            continue
-        out.append(
-            dict(
-                round=int(log["round_idx"][i]),
-                time=float(log["time"][i]),
-                counts={k: int(v) for k, v in zip(STATE_NAMES, log["counts"][i])},
-                started=int(log["n_started"][i]),
-                completed=int(log["n_completed"][i]),
-                site_free=log["site_free"][i].tolist(),
-                site_queued=log["site_queued"][i].tolist(),
-                site_running=log["site_running"][i].tolist(),
-                **{k: v[i].tolist() for k, v in extra.items()},
-            )
-        )
-    return out
+    assembles itself from whatever was attached.  ``iter_frames`` is the
+    streaming (generator) form."""
+    return list(iter_frames(result))
+
+
+# streaming row sources by record type: (generator, takes site_names?)
+_STREAMS = {
+    "transition": (iter_transitions, True),
+    "frame": (iter_frames, False),
+    "job": (job_rows, True),
+    "transfer": (transfer_rows, True),
+    "workflow": (workflow_rows, False),
+    "availability": (availability_rows, True),
+}
+
+
+def stream_rows(result: SimResult, sink, *, kinds=("transition",), site_names=None) -> int:
+    """Push event rows to a ``telemetry.Sink``, one record at a time.
+
+    Each record is the corresponding ``*_rows`` dict plus a ``"type"`` tag
+    (``transition``/``frame``/``job``/``transfer``/``workflow``/
+    ``availability``) so heterogeneous kinds multiplex into one NDJSON
+    stream — the chunked path named in ROADMAP's WLCG-scale item: export
+    memory is per-row, not rounds×sites.  Returns the row count emitted.
+    """
+    n = 0
+    for kind in kinds:
+        if kind not in _STREAMS:
+            raise ValueError(f"unknown stream kind {kind!r} (have {sorted(_STREAMS)})")
+        gen, named = _STREAMS[kind]
+        rows = gen(result, site_names) if named else gen(result)
+        for row in rows:
+            sink.emit({"type": kind, **row})
+            n += 1
+    return n
 
 
 def jax_to_np(tree) -> dict[str, np.ndarray]:

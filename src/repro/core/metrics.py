@@ -21,6 +21,23 @@ class Metrics(NamedTuple):
     throughput: jax.Array        # finished jobs / simulated second
     core_utilization: jax.Array  # busy core-seconds / (total cores x makespan)
     cpu_efficiency: jax.Array    # compute seconds / walltime seconds (I/O overhead)
+    # distribution tails (the dashboard / telemetry quotables)
+    p50_queue_time: jax.Array
+    p99_queue_time: jax.Array
+    p50_walltime: jax.Array
+    p95_walltime: jax.Array
+    p99_walltime: jax.Array
+
+
+def _masked_percentile(values: jax.Array, mask: jax.Array, n: jax.Array, q: float):
+    """Percentile of ``values[mask]`` without dynamic shapes: masked-out rows
+    sort to the front as ``-inf``, so the q-th valid element sits at a fixed
+    offset from the tail.  Matches the engine's original p95 formula exactly
+    (same truncation, same clamp) so historical numbers are unchanged."""
+    cap = values.shape[-1]
+    sorted_ = jnp.sort(jnp.where(mask, values, -jnp.inf))
+    idx = jnp.clip((cap - n) + (q * n).astype(jnp.int32), 0, cap - 1)
+    return jnp.maximum(sorted_[idx], 0.0)
 
 
 def compute_metrics(result: SimResult) -> Metrics:
@@ -34,11 +51,9 @@ def compute_metrics(result: SimResult) -> Metrics:
     queue = jnp.where(done, jobs.t_start - jobs.arrival, 0.0)
     mean_wall = wall.sum() / jnp.maximum(n_done, 1)
     mean_queue = queue.sum() / jnp.maximum(n_done, 1)
-    q_sorted = jnp.sort(jnp.where(done, jobs.t_start - jobs.arrival, -jnp.inf))
-    idx = jnp.clip(
-        (jobs.capacity - n_done) + (0.95 * n_done).astype(jnp.int32), 0, jobs.capacity - 1
-    )
-    p95_queue = jnp.maximum(q_sorted[idx], 0.0)
+    q_raw = jobs.t_start - jobs.arrival
+    w_raw = jobs.t_finish - jobs.t_start
+    p95_queue = _masked_percentile(q_raw, done, n_done, 0.95)
 
     busy = jnp.where(done | failed, (jobs.t_finish - jobs.t_start) * jobs.cores, 0.0).sum()
     total_cores = jnp.where(sites.active, sites.cores, 0).sum().astype(jnp.float32)
@@ -62,6 +77,11 @@ def compute_metrics(result: SimResult) -> Metrics:
         throughput=n_done / makespan,
         core_utilization=util,
         cpu_efficiency=jnp.minimum(eff, 1.0),
+        p50_queue_time=_masked_percentile(q_raw, done, n_done, 0.50),
+        p99_queue_time=_masked_percentile(q_raw, done, n_done, 0.99),
+        p50_walltime=_masked_percentile(w_raw, done, n_done, 0.50),
+        p95_walltime=_masked_percentile(w_raw, done, n_done, 0.95),
+        p99_walltime=_masked_percentile(w_raw, done, n_done, 0.99),
     )
 
 
@@ -69,7 +89,11 @@ def summary_str(m: Metrics) -> str:
     return (
         f"makespan={float(m.makespan):.1f}s done={int(m.n_done)} failed={int(m.n_failed)} "
         f"fail_rate={float(m.failure_rate):.3f} mean_wall={float(m.mean_walltime):.1f}s "
-        f"mean_queue={float(m.mean_queue_time):.1f}s p95_queue={float(m.p95_queue_time):.1f}s "
+        f"mean_queue={float(m.mean_queue_time):.1f}s "
+        f"queue_p50/95/99={float(m.p50_queue_time):.1f}/{float(m.p95_queue_time):.1f}/"
+        f"{float(m.p99_queue_time):.1f}s "
+        f"wall_p50/95/99={float(m.p50_walltime):.1f}/{float(m.p95_walltime):.1f}/"
+        f"{float(m.p99_walltime):.1f}s "
         f"throughput={float(m.throughput) * 3600.0:.1f} jobs/h "
         f"util={float(m.core_utilization):.3f} cpu_eff={float(m.cpu_efficiency):.3f}"
     )

@@ -4,8 +4,12 @@ CGSim ships a web dashboard showing per-site node pressure with job-level
 hover details.  Headless here, so the same observables render as (a) ANSI
 terminal frames during a run and (b) JSON frame streams any dashboard can
 consume.  ``watch()`` wraps the engine: it splits the horizon into segments
-and re-enters the jitted simulator between frames, so monitoring costs
-nothing inside the hot loop.
+and re-enters the jitted simulator between frames (``engine.init_sim`` /
+``advance_sim``), so monitoring costs nothing inside the hot loop and the
+result stays bit-for-bit identical to a plain ``simulate``.  Frames stream
+to any ``telemetry.Sink``; ``python -m repro.monitor --follow run.ndjson``
+tails such a stream live from a separate process (the paper's real-time
+dashboard, decoupled).
 """
 from __future__ import annotations
 
@@ -15,7 +19,7 @@ import sys
 import numpy as np
 
 from .events import log_frames
-from .types import SimResult, STATE_NAMES
+from .types import ASSIGNED, RUNNING, SimResult, STATE_NAMES
 
 BAR = " ▁▂▃▄▅▆▇█"
 
@@ -66,6 +70,169 @@ def render_frame(
             line += f"  disk|{bar}| {disk[s] / 1e12:>6.2f}TB  net_in={net_in[s] / 1e9:>7.2f}GB"
         lines.append(line)
     return "\n".join(lines)
+
+
+def state_frame(handle) -> dict:
+    """Host-side dashboard frame snapshotted from a paused ``SimHandle`` —
+    same shape ``render_frame`` consumes, computed between jit segments
+    (never inside the round loop)."""
+    st = handle.state
+    state = np.asarray(st.jobs.state)
+    valid = np.asarray(st.jobs.valid)
+    site = np.asarray(st.jobs.site)
+    S = st.sites.capacity
+    counts = {name: int(((state == s) & valid).sum()) for s, name in enumerate(STATE_NAMES)}
+
+    def per_site(kind):
+        m = (state == kind) & valid & (site >= 0)
+        return np.bincount(site[m], minlength=S)[:S].tolist()
+
+    return dict(
+        round=int(st.round),
+        time=float(st.clock),
+        counts=counts,
+        site_free=np.asarray(st.sites.free_cores).tolist(),
+        site_queued=per_site(ASSIGNED),
+        site_running=per_site(RUNNING),
+    )
+
+
+def watch(
+    jobs0,
+    sites0,
+    policy,
+    rng,
+    *,
+    frames: int = 24,
+    horizon: float | None = None,
+    segment: float | None = None,
+    sink=None,
+    site_names=None,
+    render: bool = True,
+    out=sys.stdout,
+    recorder=None,
+    max_segments: int = 10_000,
+    **kw,
+) -> SimResult:
+    """Run a simulation while watching it: the long-promised segmented driver.
+
+    Splits the run into time segments (``segment`` seconds each, or
+    ``horizon / frames``; without a horizon the segment width is estimated
+    from the arrival span) and re-enters the jitted round loop between them.
+    Because the loop's horizon is a *dynamic* argument checked before each
+    round, every segment continues the exact round sequence one ``simulate``
+    call would execute — the returned ``SimResult`` is bit-for-bit identical
+    (tested), and all segments share a single compile.
+
+    After each segment a host-side frame snapshot goes to ``sink`` (any
+    ``telemetry.Sink``; an ``NDJSONSink`` makes the run tailable live with
+    ``python -m repro.monitor --follow run.ndjson``) and/or renders to
+    ``out``.  The stream carries a ``run_meta`` record first (site cores and
+    names — what a renderer needs) and an ``end`` record last.  Pass a
+    ``telemetry.TraceRecorder`` to time the segments; remaining ``**kw``
+    (``log_rows``, subsystems, ...) forward to the engine.
+    """
+    from .engine import advance_sim, finish_sim, init_sim, sim_active
+    from .telemetry import maybe
+
+    rec = maybe(recorder)
+    with rec.span("watch_init"):
+        handle = init_sim(jobs0, sites0, policy, rng, **kw)
+    hz = None if horizon is None or not np.isfinite(horizon) else float(horizon)
+    if segment is not None:
+        dt = float(segment)
+    elif hz is not None:
+        dt = hz / max(frames, 1)
+    else:
+        arr = np.asarray(jobs0.arrival, np.float64)
+        fin = arr[np.isfinite(arr) & np.asarray(jobs0.valid)]
+        est = 2.0 * float(fin.max()) if fin.size and fin.max() > 0 else float(frames)
+        dt = est / max(frames, 1)
+    dt = max(dt, 1e-9)
+
+    if sink is not None:
+        sink.emit(
+            dict(
+                type="run_meta",
+                n_sites=sites0.capacity,
+                sites_cores=np.asarray(sites0.cores).tolist(),
+                site_names=list(site_names) if site_names else None,
+                horizon=hz,
+            )
+        )
+    cores = np.asarray(sites0.cores)
+    n_seg = 0
+    t_edge = 0.0
+    while sim_active(handle) and n_seg < max_segments:
+        t_edge += dt
+        at_end = hz is not None and t_edge >= hz
+        with rec.span("watch_segment"):
+            handle = advance_sim(handle, hz if at_end else t_edge)
+        frame = state_frame(handle)
+        if sink is not None:
+            sink.emit({"type": "frame", **frame})
+        if render:
+            out.write(render_frame(frame, cores, site_names) + "\n\n")
+        n_seg += 1
+        if at_end:
+            break
+    if hz is None and sim_active(handle):
+        # segment budget exhausted on an open-horizon run: drain to the end
+        with rec.span("watch_segment"):
+            handle = advance_sim(handle)
+    with rec.span("watch_finalize"):
+        res = finish_sim(handle)
+    rec.gauge("watch_segments", n_seg)
+    rec.gauge("rounds_executed", int(res.rounds))
+    if sink is not None:
+        sink.emit(
+            dict(
+                type="end",
+                rounds=int(res.rounds),
+                makespan=float(res.makespan),
+                segments=n_seg,
+            )
+        )
+    return res
+
+
+def follow_stream(
+    source,
+    *,
+    follow: bool = False,
+    every: int = 1,
+    clear: bool = True,
+    out=sys.stdout,
+    poll_s: float = 0.2,
+    timeout_s: float | None = None,
+) -> int:
+    """Render a frame NDJSON stream (as written by ``watch``) to a terminal.
+
+    ``follow=True`` tails a file another process is still writing — the
+    decoupled live dashboard.  Returns the number of frames rendered."""
+    from .telemetry import iter_ndjson
+
+    cores = None
+    names = None
+    shown = i = 0
+    for rec in iter_ndjson(source, follow=follow, poll_s=poll_s, timeout_s=timeout_s):
+        t = rec.get("type")
+        if t == "run_meta":
+            cores = np.asarray(rec["sites_cores"])
+            names = rec.get("site_names")
+        elif t == "frame":
+            if i % every == 0 and cores is not None:
+                if clear:
+                    out.write("\x1b[2J\x1b[H")
+                out.write(render_frame(rec, cores, names) + "\n\n")
+                shown += 1
+            i += 1
+        elif t == "end":
+            out.write(
+                f"end: rounds={rec.get('rounds')} makespan={rec.get('makespan')}\n"
+            )
+            break
+    return shown
 
 
 def render_run(result: SimResult, site_names=None, every: int = 1, out=sys.stdout) -> None:

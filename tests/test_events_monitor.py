@@ -1,10 +1,24 @@
 """Event dataset (Table 1) + monitor rendering."""
+import io
+import json
+
 import jax
 import numpy as np
 
 from repro.core import atlas_like_platform, get_policy, simulate, synthetic_panda_jobs
-from repro.core.events import log_frames, ml_dataset, to_csv, to_json, transition_rows
+from repro.core.events import (
+    iter_frames,
+    iter_transitions,
+    log_frames,
+    ml_dataset,
+    stream_rows,
+    to_csv,
+    to_json,
+    transition_rows,
+    write_ml_dataset,
+)
 from repro.core.monitor import frames_json, render_frame, sparkline, utilization_timeline
+from repro.core.telemetry import MemorySink
 
 
 def small_run(log_rows=0):
@@ -53,6 +67,88 @@ def test_ml_dataset_shapes_and_finiteness():
     assert np.isfinite(ds["features"]).all()
     assert (ds["walltime"] > 0).all()
     assert (ds["queue_time"] >= 0).all()
+
+
+def test_iterators_match_list_forms():
+    res = small_run(log_rows=128)
+    assert list(iter_transitions(res)) == transition_rows(res)
+    assert list(iter_frames(res)) == log_frames(res)
+
+
+def test_stream_rows_matches_lists_and_tags_types():
+    res = small_run(log_rows=64)
+    sink = MemorySink()
+    n = stream_rows(res, sink, kinds=("transition", "frame", "job"))
+    assert n == len(sink.records)
+    by_type = {}
+    for r in sink.records:
+        by_type.setdefault(r.pop("type"), []).append(r)
+    assert by_type["transition"] == transition_rows(res)
+    assert by_type["frame"] == log_frames(res)
+    assert len(by_type["job"]) == 120
+    import pytest
+
+    with pytest.raises(ValueError):
+        stream_rows(res, sink, kinds=("nope",))
+
+
+def test_streamed_ml_dataset_byte_identical():
+    """ISSUE 6 acceptance: chunked export emits the exact bytes of the
+    in-memory dataset at any segment size (peak memory per segment)."""
+    res = small_run()
+    ds = ml_dataset(res)
+    bufs = {}
+    for seg in (0, 7, 1):
+        buf = io.StringIO()
+        n = write_ml_dataset(res, buf, segment=seg)
+        assert n == ds["walltime"].shape[0]
+        bufs[seg] = buf.getvalue()
+    assert bufs[0] == bufs[7] == bufs[1]
+    lines = bufs[0].splitlines()
+    head = json.loads(lines[0])
+    assert head["type"] == "ml_header"
+    assert head["feature_names"] == list(ds["feature_names"])
+    # row values round-trip exactly against the in-memory matrices
+    row0 = json.loads(lines[1])
+    np.testing.assert_array_equal(
+        np.asarray(row0["features"], np.float32), ds["features"][0]
+    )
+    assert np.float32(row0["walltime"]) == ds["walltime"][0]
+
+
+def test_write_ml_dataset_to_path(tmp_path):
+    res = small_run()
+    p = tmp_path / "ml.ndjson"
+    n = write_ml_dataset(res, p, segment=11)
+    assert len(p.read_text().splitlines()) == n + 1  # header + rows
+
+
+def test_render_frame_schema_snapshot():
+    """The frame dict contract any dashboard consumes (schema snapshot)."""
+    res = small_run(log_rows=64)
+    frames = log_frames(res)
+    core_keys = {
+        "round", "time", "counts", "started", "completed",
+        "site_free", "site_queued", "site_running",
+    }
+    assert core_keys <= set(frames[0])
+    from repro.core import STATE_NAMES
+
+    assert set(frames[0]["counts"]) == set(STATE_NAMES)
+    S = res.sites.capacity
+    for col in ("site_free", "site_queued", "site_running"):
+        assert len(frames[0][col]) == S
+    txt = render_frame(frames[-1], np.asarray(res.sites.cores), max_sites=3)
+    assert txt.splitlines()[0].startswith("t=")
+
+
+def test_frames_json_schema_snapshot():
+    res = small_run(log_rows=512)  # larger than the round count: no ring wrap
+    payload = json.loads(frames_json(res))
+    assert isinstance(payload, list) and payload
+    assert payload == log_frames(res)
+    rounds = [f["round"] for f in payload]
+    assert rounds == sorted(rounds)
 
 
 def test_log_frames_and_monitor():
