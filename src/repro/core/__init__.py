@@ -51,6 +51,7 @@ from .telemetry import (  # noqa: F401
     Sink,
     TraceRecorder,
     iter_ndjson,
+    jsonable,
     lane_occupancy,
     manifest_drift,
     read_manifest,
@@ -83,6 +84,7 @@ from .network import (  # noqa: F401
     star_network,
     tiered_network,
     uniform_network,
+    with_bandwidth,
 )
 from .replicas import (  # noqa: F401
     ReplicaState,
@@ -117,6 +119,7 @@ from .datapolicies import (  # noqa: F401
 )
 from .platform import (  # noqa: F401
     ExecutionParams,
+    apply_site_params,
     atlas_like_platform,
     deactivate_sites,
     dump_platform,
@@ -141,5 +144,22 @@ from .workload import (  # noqa: F401
     synthetic_panda_jobs,
 )
 from .metrics import Metrics, compute_metrics, summary_str  # noqa: F401
-from .events import stream_rows, write_ml_dataset  # noqa: F401
+from .events import read_ml_trace, recorded_trace, stream_rows, write_ml_dataset  # noqa: F401
+from .calibration import (  # noqa: F401
+    CalibProblem,
+    CalibResult,
+    PlatformBounds,
+    PlatformCalibResult,
+    PlatformParams,
+    PlatformProblem,
+    calibrate,
+    calibrate_platform,
+    default_bounds,
+    make_population_objective,
+    make_synthetic_platform_problem,
+    platform_objective,
+    platform_params,
+    platform_problem_from_trace,
+    recovery_error,
+)
 from .monitor import watch  # noqa: F401

@@ -395,3 +395,913 @@ def calibrate(problem: CalibProblem, method: str = "random", seed: int = 0, **kw
     if method == "grid":
         return grid_search(problem, **kw)
     return OPTIMIZERS[method](problem, jax.random.PRNGKey(seed), **kw)
+
+
+# ==========================================================================
+# ensemble-scale platform calibration (ISSUE 7 / ROADMAP "differentiable
+# calibration at ensemble scale"): the full continuous knob set — per-site
+# speeds, the WAN bandwidth matrix, per-site startup overheads — as one flat
+# params pytree, scored against a recorded trace with the whole candidate
+# population packed into ensemble lanes of a single compiled program.
+# ==========================================================================
+
+
+PARAM_FIELDS = ("speed", "bw", "overhead")
+_EPS = 1e-12
+
+
+class PlatformParams(NamedTuple):
+    """Continuous platform knobs as one flat pytree.
+
+    ``None`` fields are excluded from the search — ``ravel_pytree`` drops
+    them and restores them on unravel, so every fitter works on any knob
+    subset with no special-casing.  The ``bw`` diagonal (intra-site LAN) is
+    inert: ``apply_platform_params`` preserves the platform's own diagonal.
+    """
+
+    speed: jax.Array | None = None     # f32[S]   per-site CPU speed
+    bw: jax.Array | None = None        # f32[S,S] WAN bandwidth, bytes/s
+    overhead: jax.Array | None = None  # f32[S]   per-site startup overhead, s
+
+
+class PlatformBounds(NamedTuple):
+    """Box bounds (same treedef as the params) for the log-space search."""
+
+    lo: PlatformParams
+    hi: PlatformParams
+
+
+def default_bounds(params: PlatformParams, *, factor: float = 30.0) -> PlatformBounds:
+    """Multiplicative box around the starting point: [p/factor, p*factor]."""
+    return PlatformBounds(
+        lo=jax.tree.map(lambda x: x / factor, params),
+        hi=jax.tree.map(lambda x: x * factor, params),
+    )
+
+
+def encode_params(params: PlatformParams, bounds: PlatformBounds) -> PlatformParams:
+    """Params -> unconstrained-ish log space (clipped into the box first)."""
+    return jax.tree.map(
+        lambda p, lo, hi: jnp.log(
+            jnp.clip(p, jnp.maximum(lo, _EPS), jnp.maximum(hi, _EPS))
+        ),
+        params, bounds.lo, bounds.hi,
+    )
+
+
+def decode_params(z: PlatformParams, bounds: PlatformBounds) -> PlatformParams:
+    """Log space -> params.  The clip *guarantees* every decoded candidate —
+    hence every ``calibrate_platform`` result — lies inside the declared
+    bounds, no matter what the optimizer proposes (property-tested)."""
+    return jax.tree.map(
+        lambda z_, lo, hi: jnp.clip(jnp.exp(z_), lo, hi), z, bounds.lo, bounds.hi
+    )
+
+
+class PlatformProblem(NamedTuple):
+    """Trace-matching problem over the full platform knob set.
+
+    Generalizes ``CalibProblem`` (speed-only) with the WAN matrix and
+    startup overheads, plus the per-job transfer columns a recorded trace
+    pins down: ``hist_src[j]`` is the replica source of job ``j``'s stage-in
+    (−1 = flat-link stage-in, no WAN hop) and ``hist_bytes[j]`` the bytes it
+    moved (0 for local replica reads).  ``hist_wall[j] <= 0`` marks jobs the
+    trace did not cover; they drop out of the mape/quantile losses.
+
+    ``data_policy``/``replicas``/``availability`` describe the scenario for
+    the exact-engine objective; the closed form ignores them.
+    """
+
+    jobs: JobsState
+    sites0: SiteState             # platform at the *misconfigured* start
+    network0: object = None       # NetworkState | None
+    hist_site: jax.Array = None   # i32[J]
+    hist_wall: jax.Array = None   # f32[J]
+    hist_src: jax.Array = None    # i32[J] | None
+    hist_bytes: jax.Array = None  # f32[J] | None
+    data_policy: object = None
+    replicas: object = None
+    availability: object = None
+
+    @property
+    def n_sites(self) -> int:
+        return self.sites0.capacity
+
+
+def platform_params(
+    problem: PlatformProblem, include=PARAM_FIELDS
+) -> PlatformParams:
+    """The problem's starting point as a params pytree (``None`` = excluded)."""
+    return PlatformParams(
+        speed=problem.sites0.speed if "speed" in include else None,
+        bw=(
+            problem.network0.bw
+            if "bw" in include and problem.network0 is not None
+            else None
+        ),
+        overhead=problem.sites0.latency if "overhead" in include else None,
+    )
+
+
+def apply_platform_params(problem: PlatformProblem, params: PlatformParams):
+    """Materialize one candidate as ``(SiteState, NetworkState | None)``."""
+    from .network import with_bandwidth
+    from .platform import apply_site_params
+
+    sites = apply_site_params(
+        problem.sites0, speed=params.speed, latency=params.overhead
+    )
+    net = problem.network0
+    if params.bw is not None:
+        if net is None:
+            raise ValueError("bw params need a problem.network0 topology")
+        net = with_bandwidth(net, params.bw)
+    return sites, net
+
+
+def platform_walltimes(problem: PlatformProblem, params: PlatformParams) -> jax.Array:
+    """Differentiable closed-form walltime under one candidate.
+
+    Mirrors the engine's data pricing (``datapolicies._data_on_start``) at
+    unit link share: jobs with a WAN stage-in (``hist_src >= 0``) swap the
+    flat latency + stage-in terms for the recorded transfer — latency plus
+    bytes over the candidate's ``bw[src, dst]`` link, and nothing at all for
+    local replica reads (``hist_bytes == 0`` or ``src == dst``).
+    """
+    sites, net = apply_platform_params(problem, params)
+    wall = closed_form_walltimes(problem.jobs, sites, problem.hist_site)
+    if net is None or problem.hist_src is None:
+        return wall
+    S = problem.sites0.capacity
+    s = jnp.clip(problem.hist_site, 0, S - 1)
+    src = jnp.clip(problem.hist_src, 0, S - 1)
+    has_ds = problem.hist_src >= 0
+    nbytes = (
+        problem.hist_bytes if problem.hist_bytes is not None else problem.jobs.bytes_in
+    )
+    in_flat = sites.latency[s] + problem.jobs.bytes_in / sites.bw_in[s]
+    xfer = has_ds & (nbytes > 0) & (src != s)
+    t_net = jnp.where(
+        xfer, net.latency[src, s] + nbytes / jnp.maximum(net.bw[src, s], _EPS), 0.0
+    )
+    return jnp.where(has_ds, wall - in_flat + t_net, wall)
+
+
+# --------------------------------------------------------------------------
+# trace losses
+# --------------------------------------------------------------------------
+
+_QUANTILES = jnp.linspace(0.1, 0.9, 9)
+TRACE_LOSSES = ("mape", "quantile", "geomean")
+
+
+def trace_loss(sim_wall, hist_wall, mask, *, loss: str = "mape") -> jax.Array:
+    """Scalar distance between simulated and recorded walltimes.
+
+    ``mape``: mean |sim − hist| / hist over covered jobs (Fig. 3's Δexe_time
+    flavour).  ``quantile``: mean relative gap between the walltime deciles —
+    distribution matching that tolerates per-job noise.
+    """
+    if loss == "mape":
+        rel = jnp.abs(sim_wall - hist_wall) / jnp.maximum(hist_wall, 1e-9)
+        return jnp.where(mask, rel, 0.0).sum() / jnp.maximum(mask.sum(), 1)
+    if loss == "quantile":
+        q_sim = jnp.nanquantile(jnp.where(mask, sim_wall, jnp.nan), _QUANTILES)
+        q_his = jnp.nanquantile(jnp.where(mask, hist_wall, jnp.nan), _QUANTILES)
+        return jnp.mean(jnp.abs(q_sim - q_his) / jnp.maximum(q_his, 1e-9))
+    raise ValueError(f"unknown loss {loss!r}; have {TRACE_LOSSES}")
+
+
+def _score_walltimes(problem: PlatformProblem, sim_wall, loss: str) -> jax.Array:
+    if loss == "geomean":
+        mae, has = per_site_rel_mae(
+            problem.jobs, problem.hist_site, problem.hist_wall, sim_wall,
+            problem.sites0.capacity,
+        )
+        return geomean_error(mae, has)
+    mask = problem.jobs.valid & (problem.hist_wall > 0)
+    return trace_loss(sim_wall, problem.hist_wall, mask, loss=loss)
+
+
+def platform_objective(
+    problem: PlatformProblem, params: PlatformParams, *, loss: str = "mape"
+) -> jax.Array:
+    """Closed-form scalar loss for one candidate — differentiable in every
+    ``PlatformParams`` field, the ``jax.grad`` path of ``calibrate_platform``."""
+    return _score_walltimes(problem, platform_walltimes(problem, params), loss)
+
+
+def _engine_score(problem: PlatformProblem, jobs, loss: str) -> jax.Array:
+    """Loss of one finished engine lane + a penalty for work it never ran
+    (a candidate so slow the round budget ran out must not look 'accurate'
+    because its unfinished jobs fell out of the metric)."""
+    done = jobs.state == DONE
+    sim_wall = jnp.where(done, jobs.t_finish - jobs.t_start, 0.0)
+    base = _score_walltimes(problem, sim_wall, loss)
+    undone = (problem.jobs.valid & ~done).sum().astype(jnp.float32)
+    penalty = 10.0 * undone / jnp.maximum(problem.jobs.valid.sum(), 1)
+    return base + penalty
+
+
+def _problem_sim_kwargs(problem: PlatformProblem, net) -> dict:
+    kw = {}
+    if problem.data_policy is not None:
+        kw.update(
+            data_policy=problem.data_policy, network=net, replicas=problem.replicas
+        )
+    if problem.availability is not None:
+        kw["availability"] = problem.availability
+    return kw
+
+
+def engine_platform_objective(
+    problem: PlatformProblem,
+    params: PlatformParams,
+    rng: jax.Array | None = None,
+    *,
+    loss: str = "mape",
+    max_rounds: int = 20_000,
+    policy=None,
+) -> jax.Array:
+    """Exact-engine scalar loss for one candidate (queueing, WAN sharing,
+    subsystems).  Reference implementation the lane-batched population
+    objective is equivalence-tested against; pass a pre-built ``policy`` to
+    reuse one jit cache entry across a loop of solo calls.
+    """
+    sites, net = apply_platform_params(problem, params)
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    policy = pinned_policy(problem.hist_site) if policy is None else policy
+    res = simulate(
+        problem.jobs, sites, policy, rng, max_rounds=max_rounds,
+        **_problem_sim_kwargs(problem, net),
+    )
+    return _engine_score(problem, res.jobs, loss)
+
+
+def ravel_params(params: PlatformParams):
+    """Flatten a params pytree to ``(f32[D], unravel)`` — ``None`` knobs are
+    dropped and restored by ``unravel``, so D adapts to the knob subset."""
+    from jax.flatten_util import ravel_pytree
+
+    return ravel_pytree(params)
+
+
+# --------------------------------------------------------------------------
+# lane-batched population objective: the whole candidate population as
+# ensemble lanes of ONE compiled program (DESIGN.md §8 machinery)
+# --------------------------------------------------------------------------
+
+
+def make_population_objective(
+    problem: PlatformProblem,
+    *,
+    objective: str = "engine",
+    loss: str = "mape",
+    include=PARAM_FIELDS,
+    bounds: PlatformBounds | None = None,
+    mesh=None,
+    axis: str = "data",
+    max_rounds: int = 20_000,
+):
+    """Build ``batch_eval(z_pop, rng) -> f32[K]`` for a candidate population.
+
+    ``z_pop`` is a ``[K, D]`` block of raveled log-space candidates; each row
+    becomes one ensemble lane (per-lane sites/network, shared workload) and
+    the whole population runs as a single ``simulate_many`` /
+    ``simulate_many_sharded`` program — one compile per population size K,
+    never per candidate.  Two things make that hold and are deliberately
+    hoisted out of the returned closure: the pinned replay ``policy`` and the
+    resolved ``Subsystem`` tuple are built ONCE here, because policy closures
+    are jit static keys (``engine_objective`` rebuilds its policy per call
+    and retraces — the anti-pattern this factory exists to fix).
+
+    ``objective='closed_form'`` evaluates the differentiable walltime model
+    instead (vmapped, same signature).  The returned function exposes
+    ``trace_count()`` — how many times the candidate-dependent program was
+    (re)traced — plus ``z0``/``unravel``/``bounds`` for the fitters.
+    """
+    p0 = platform_params(problem, include)
+    bounds = default_bounds(p0) if bounds is None else bounds
+    z0, unravel = ravel_params(encode_params(p0, bounds))
+    traces: list = []
+
+    if objective == "closed_form":
+
+        def _impl(z_pop, rng):
+            traces.append(None)
+
+            def one(z):
+                return platform_objective(
+                    problem, decode_params(unravel(z), bounds), loss=loss
+                )
+
+            return jax.vmap(one)(z_pop)
+
+        jitted = jax.jit(_impl)
+
+        def batch_eval(z_pop, rng=None):
+            rng = jax.random.PRNGKey(0) if rng is None else rng
+            return jitted(z_pop, rng)
+
+    elif objective == "engine":
+        from .distributed import simulate_population
+        from .engine import Scenario, simulate_many
+        from .subsystems import resolve_subsystems
+
+        policy = pinned_policy(problem.hist_site)
+        subs, ext0 = resolve_subsystems(
+            data_policy=problem.data_policy,
+            network=problem.network0,
+            replicas=problem.replicas,
+            availability=problem.availability,
+            jobs=problem.jobs,
+            sites=problem.sites0,
+        )
+
+        def _build(z_pop) -> Scenario:
+            traces.append(None)
+            K = z_pop.shape[0]
+            params_pop = jax.vmap(lambda z: decode_params(unravel(z), bounds))(z_pop)
+            sites_pop, net_pop = jax.vmap(
+                lambda p: apply_platform_params(problem, p)
+            )(params_pop)
+            jobs_pop = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (K,) + x.shape), problem.jobs
+            )
+            ext_pop = jax.tree.map(
+                lambda x: jnp.broadcast_to(jnp.asarray(x), (K,) + jnp.shape(x)), ext0
+            )
+            if "data" in ext_pop:
+                # lanes stage over their candidate's WAN matrix, not the start's
+                _, replicas_pop = ext_pop["data"]
+                ext_pop["data"] = (net_pop, replicas_pop)
+            return Scenario(jobs=jobs_pop, sites=sites_pop, ext=ext_pop or None)
+
+        def _score_lanes(jobs_k):
+            return jax.vmap(lambda jl: _engine_score(problem, jl, loss))(jobs_k)
+
+        if mesh is None:
+            # one fused program: decode + lane build + K engine lanes + loss
+            def _impl(z_pop, rng):
+                scn = _build(z_pop)
+                res = simulate_many(
+                    scn, policy, rng, subsystems=subs, max_rounds=max_rounds
+                )
+                return _score_lanes(res.jobs)
+
+            jitted = jax.jit(_impl)
+
+            def batch_eval(z_pop, rng=None):
+                rng = jax.random.PRNGKey(0) if rng is None else rng
+                return jitted(z_pop, rng)
+
+        else:
+            build = jax.jit(_build)
+            score = jax.jit(_score_lanes)
+
+            def batch_eval(z_pop, rng=None):
+                rng = jax.random.PRNGKey(0) if rng is None else rng
+                scn = build(z_pop)
+                res = simulate_population(
+                    scn, policy, rng, mesh=mesh, axis=axis,
+                    subsystems=subs, max_rounds=max_rounds,
+                )
+                return score(res.jobs)
+
+    else:
+        raise ValueError(
+            f"unknown objective {objective!r}; have ('closed_form', 'engine')"
+        )
+
+    batch_eval.trace_count = lambda: len(traces)
+    batch_eval.z0 = z0
+    batch_eval.unravel = unravel
+    batch_eval.bounds = bounds
+    return batch_eval
+
+
+# --------------------------------------------------------------------------
+# fitters over the raveled log-space vector
+# --------------------------------------------------------------------------
+
+
+def spsa(
+    batch_eval,
+    z0: jax.Array,
+    rng: jax.Array,
+    *,
+    n_iters: int = 100,
+    n_dirs: int = 4,
+    a0: float = 0.15,
+    c0: float = 0.1,
+    alpha: float = 0.602,
+    gamma: float = 0.101,
+    A: float | None = None,
+    z_lo=None,
+    z_hi=None,
+):
+    """Simultaneous-perturbation stochastic approximation, lane-batched.
+
+    Each iteration packs the incumbent plus ``n_dirs`` antithetic Rademacher
+    perturbation pairs into ONE population call of fixed size
+    ``2*n_dirs + 1`` — a single compiled program services the entire fit.
+    Classic Spall decay schedules (alpha/gamma); returns
+    ``(best_z, best_f, history)`` with history the best-so-far loss per
+    iteration (monotone).
+    """
+    z = jnp.asarray(z0, jnp.float32)
+    D = z.shape[0]
+    A = 0.1 * n_iters if A is None else A
+    clip = (lambda v: v) if z_lo is None else (lambda v: jnp.clip(v, z_lo, z_hi))
+    best_z, best_f = z, float("inf")
+    hist = []
+    for k in range(n_iters):
+        rng, k_d, k_e = jax.random.split(rng, 3)
+        ck = c0 / (k + 1) ** gamma
+        ak = a0 / (k + 1 + A) ** alpha
+        delta = jax.random.rademacher(k_d, (n_dirs, D), dtype=jnp.float32)
+        cand = jnp.concatenate(
+            [z[None], clip(z[None] + ck * delta), clip(z[None] - ck * delta)], 0
+        )
+        f = batch_eval(cand, k_e)
+        fp, fm = f[1 : 1 + n_dirs], f[1 + n_dirs :]
+        ghat = ((fp - fm)[:, None] * delta).mean(0) / (2.0 * ck)
+        z = clip(z - ak * ghat)
+        i = int(jnp.argmin(f))
+        fi = float(f[i])
+        if fi < best_f:
+            best_z, best_f = cand[i], fi
+        hist.append(best_f)
+    return best_z, jnp.float32(best_f), jnp.asarray(hist, jnp.float32)
+
+
+def fit_gradient(
+    obj,
+    z0: jax.Array,
+    *,
+    n_iters: int = 200,
+    lr: float = 0.05,
+    z_lo=None,
+    z_hi=None,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+):
+    """Adam on ``jax.grad obj`` — the whole fit is one scanned program.
+
+    Only valid for the closed-form objective: the exact engine's discrete
+    dispatch (argmax assignment, sorted start order) has no useful gradient.
+    Returns ``(best_z, best_f, history)``.
+    """
+    clip = (lambda v: v) if z_lo is None else (lambda v: jnp.clip(v, z_lo, z_hi))
+    vg = jax.value_and_grad(obj)
+
+    def step(carry, t):
+        z, m, v, best_z, best_f = carry
+        f, g = vg(z)
+        better = f < best_f
+        best_z = jnp.where(better, z, best_z)
+        best_f = jnp.minimum(f, best_f)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1 ** (t + 1.0))
+        vh = v / (1 - b2 ** (t + 1.0))
+        z = clip(z - lr * mh / (jnp.sqrt(vh) + eps))
+        return (z, m, v, best_z, best_f), best_f
+
+    z0 = jnp.asarray(z0, jnp.float32)
+    init = (z0, jnp.zeros_like(z0), jnp.zeros_like(z0), z0, jnp.float32(jnp.inf))
+    (z, _, _, best_z, best_f), hist = jax.lax.scan(
+        step, init, jnp.arange(n_iters, dtype=jnp.float32)
+    )
+    f_last = obj(z)
+    best_z = jnp.where(f_last < best_f, z, best_z)
+    best_f = jnp.minimum(f_last, best_f)
+    return best_z, best_f, hist
+
+
+def fit_cma(
+    batch_eval,
+    z0: jax.Array,
+    rng: jax.Array,
+    *,
+    n_iters: int = 60,
+    pop: int = 0,
+    sigma0: float = 0.4,
+    z_lo=None,
+    z_hi=None,
+):
+    """Generic CMA-ES (Hansen 2016) over the raveled z vector with
+    lane-batched ranking — the evolution path for the exact engine, same
+    update equations as the speed-only ``cma_es`` above but agnostic to what
+    the coordinates mean.  Population size is fixed, so every generation is
+    one population call of the same compiled program.
+    """
+    import math
+
+    z0 = jnp.asarray(z0, jnp.float32)
+    D = int(z0.shape[0])
+    lam = pop or max(8, int(4 + 3 * math.log(max(D, 2))))
+    mu = lam // 2
+    w = jnp.log(mu + 0.5) - jnp.log(jnp.arange(1, mu + 1))
+    w = w / w.sum()
+    mueff = 1.0 / (w**2).sum()
+    cc = (4 + mueff / D) / (D + 4 + 2 * mueff / D)
+    cs = (mueff + 2) / (D + mueff + 5)
+    c1 = 2 / ((D + 1.3) ** 2 + mueff)
+    cmu = jnp.minimum(1 - c1, 2 * (mueff - 2 + 1 / mueff) / ((D + 2) ** 2 + mueff))
+    damps = 1 + 2 * jnp.maximum(0.0, jnp.sqrt((mueff - 1) / (D + 1)) - 1) + cs
+    chiN = jnp.sqrt(D) * (1 - 1 / (4 * D) + 1 / (21 * D * D))
+    clip = (lambda v: v) if z_lo is None else (lambda v: jnp.clip(v, z_lo, z_hi))
+
+    m, sigma = z0, jnp.float32(sigma0)
+    C, pc, ps = jnp.eye(D), jnp.zeros(D), jnp.zeros(D)
+    best_z, best_f = z0, float("inf")
+    hist = []
+    for _ in range(n_iters):
+        rng, k_s, k_e = jax.random.split(rng, 3)
+        evals, evecs = jnp.linalg.eigh(C + 1e-10 * jnp.eye(D))
+        Dd = jnp.sqrt(jnp.maximum(evals, 1e-12))
+        zn = jax.random.normal(k_s, (lam, D))
+        x = clip(m[None, :] + sigma * ((zn * Dd[None, :]) @ evecs.T))
+        y = (x - m[None, :]) / sigma  # post-clip displacement keeps paths honest
+        f = batch_eval(x, k_e)
+        idx = jnp.argsort(f)[:mu]
+        y_sel = y[idx]
+        y_w = (w[:, None] * y_sel).sum(0)
+        m = m + sigma * y_w
+        C_inv_sqrt = evecs @ jnp.diag(1.0 / Dd) @ evecs.T
+        ps = (1 - cs) * ps + jnp.sqrt(cs * (2 - cs) * mueff) * (C_inv_sqrt @ y_w)
+        hsig = (jnp.linalg.norm(ps) / jnp.sqrt(1 - (1 - cs) ** 2) / chiN) < (
+            1.4 + 2 / (D + 1)
+        )
+        pc = (1 - cc) * pc + hsig * jnp.sqrt(cc * (2 - cc) * mueff) * y_w
+        C = (
+            (1 - c1 - cmu) * C
+            + c1 * (jnp.outer(pc, pc) + (1 - hsig) * cc * (2 - cc) * C)
+            + cmu * (w[:, None, None] * (y_sel[:, :, None] * y_sel[:, None, :])).sum(0)
+        )
+        sigma = sigma * jnp.exp((cs / damps) * (jnp.linalg.norm(ps) / chiN - 1))
+        i = int(jnp.argmin(f))
+        fi = float(f[i])
+        if fi < best_f:
+            best_z, best_f = x[i], fi
+        hist.append(best_f)
+    return best_z, jnp.float32(best_f), jnp.asarray(hist, jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# calibrate_platform(): the tentpole API
+# --------------------------------------------------------------------------
+
+
+class PlatformCalibResult(NamedTuple):
+    params0: PlatformParams  # starting point (clipped into bounds)
+    params: PlatformParams   # best candidate found (always inside bounds)
+    err0: jax.Array          # loss at the start
+    err: jax.Array           # loss at the result (<= err0)
+    history: jax.Array       # f32[n_iters] best-so-far loss per iteration
+
+
+PLATFORM_METHODS = ("spsa", "grad", "cma_es")
+
+
+def calibrate_platform(
+    problem: PlatformProblem,
+    *,
+    method: str = "spsa",
+    objective: str = "closed_form",
+    loss: str = "mape",
+    include=PARAM_FIELDS,
+    bounds: PlatformBounds | None = None,
+    n_iters: int = 100,
+    seed: int = 0,
+    mesh=None,
+    max_rounds: int = 20_000,
+    manifest_out=None,
+    spsa_dirs: int = 4,
+    pop: int = 0,
+    a0: float = 0.15,
+    c0: float = 0.1,
+    lr: float = 0.05,
+) -> PlatformCalibResult:
+    """Fit continuous platform knobs to a recorded trace at ensemble speed.
+
+    The search space is the ``PlatformParams`` pytree selected by
+    ``include`` — per-site speeds, the WAN bandwidth matrix, per-site startup
+    overheads — searched in log space inside ``bounds`` (default: x30 box
+    around the start; results are *guaranteed* inside the box by the
+    decoder).  ``objective`` picks the evaluator: ``'closed_form'`` is the
+    differentiable walltime model (supports ``method='grad'``),
+    ``'engine'`` replays the trace through the exact engine with every
+    candidate of an iteration packed into ensemble lanes of one compiled
+    program (``mesh=`` spreads the lanes via ``simulate_many_sharded``).
+    ``method`` is ``'spsa'`` (default — works on both objectives),
+    ``'cma_es'``, or ``'grad'`` (closed form only: the engine's discrete
+    dispatch blocks gradients).
+
+    Same seed -> bitwise-identical result pytree (property-tested).  When
+    ``manifest_out`` is given, a PR 6 RunManifest sidecar
+    (``<manifest_out>.manifest.json``) records the scenario hash, initial and
+    final params, and the loss curve — the Tracekit-style provenance trail
+    for every calibration artifact.
+    """
+    if method not in PLATFORM_METHODS:
+        raise ValueError(f"unknown method {method!r}; have {PLATFORM_METHODS}")
+    if method == "grad" and objective != "closed_form":
+        raise ValueError(
+            "method='grad' needs objective='closed_form' — the exact engine's "
+            "discrete dispatch blocks gradients; use 'spsa' or 'cma_es'"
+        )
+    p0 = platform_params(problem, include)
+    bounds = default_bounds(p0) if bounds is None else bounds
+    z0, unravel = ravel_params(encode_params(p0, bounds))
+    z_lo, _ = ravel_params(encode_params(bounds.lo, bounds))
+    z_hi, _ = ravel_params(encode_params(bounds.hi, bounds))
+    batch_eval = make_population_objective(
+        problem, objective=objective, loss=loss, include=include,
+        bounds=bounds, mesh=mesh, max_rounds=max_rounds,
+    )
+    rng = jax.random.PRNGKey(seed)
+    rng, k_init = jax.random.split(rng)
+    err0 = batch_eval(z0[None], k_init)[0]
+    if method == "spsa":
+        best_z, best_f, hist = spsa(
+            batch_eval, z0, rng, n_iters=n_iters, n_dirs=spsa_dirs,
+            a0=a0, c0=c0, z_lo=z_lo, z_hi=z_hi,
+        )
+    elif method == "cma_es":
+        best_z, best_f, hist = fit_cma(
+            batch_eval, z0, rng, n_iters=n_iters, pop=pop, z_lo=z_lo, z_hi=z_hi
+        )
+    else:  # grad
+        def obj(z):
+            return platform_objective(
+                problem, decode_params(unravel(z), bounds), loss=loss
+            )
+
+        best_z, best_f, hist = fit_gradient(
+            obj, z0, n_iters=n_iters, lr=lr, z_lo=z_lo, z_hi=z_hi
+        )
+    # never return something worse than the starting point
+    best_z = jnp.where(best_f <= err0, best_z, z0)
+    err = jnp.minimum(best_f, err0)
+    result = PlatformCalibResult(
+        params0=decode_params(unravel(z0), bounds),
+        params=decode_params(unravel(best_z), bounds),
+        err0=err0,
+        err=err,
+        history=jnp.minimum(jnp.asarray(hist, jnp.float32), err0),
+    )
+    if manifest_out is not None:
+        from .telemetry import jsonable, run_manifest, scenario_hash, write_manifest
+
+        manifest = run_manifest(
+            jobs=problem.jobs,
+            sites=problem.sites0,
+            extra=dict(
+                calibration=dict(
+                    method=method,
+                    objective=objective,
+                    loss=loss,
+                    include=list(include),
+                    n_iters=n_iters,
+                    seed=seed,
+                    scenario_hash=scenario_hash(
+                        problem.jobs, problem.sites0, problem.network0
+                    ),
+                    err0=float(err0),
+                    err=float(err),
+                    loss_curve=[float(x) for x in result.history],
+                    params0=jsonable(result.params0),
+                    params=jsonable(result.params),
+                    bounds=dict(lo=jsonable(bounds.lo), hi=jsonable(bounds.hi)),
+                )
+            ),
+        )
+        write_manifest(manifest_out, manifest)
+    return result
+
+
+# --------------------------------------------------------------------------
+# recovery harness: synthetic hidden-truth problems + trace ingestion
+# --------------------------------------------------------------------------
+
+
+def make_synthetic_platform_problem(
+    n_jobs: int = 96,
+    n_sites: int = 4,
+    *,
+    seed: int = 0,
+    include=PARAM_FIELDS,
+    misconfig_sigma: float = 0.6,
+    noise_sigma: float = 0.0,
+    wan_frac: float = 0.5,
+    trace: str = "closed_form",
+    max_rounds: int = 20_000,
+):
+    """Hidden-truth platform problem + the true params (recovery harness).
+
+    A heterogeneous platform and a jittered WAN topology are the hidden
+    truth; the "recorded trace" is produced at the truth (``trace=`` picks
+    the closed form or the exact engine), then every knob in ``include`` is
+    misconfigured by ``misconfig_sigma`` in log space.  Cores are plentiful
+    so the trace has no queueing and every walltime is pure service time —
+    the regime where speeds, links, and overheads are all identifiable.
+    WAN jobs each read their own single-replica dataset from a source site
+    distinct from their compute site, so exactly the traced links carry
+    signal.  Returns ``(problem, true_params)``.
+    """
+    import numpy as np
+
+    from .datapolicies import get_data_policy
+    from .network import uniform_network, with_bandwidth
+    from .platform import atlas_like_platform
+    from .replicas import make_replicas
+    from .workload import synthetic_panda_jobs
+
+    rng_np = np.random.default_rng(seed)
+    sites_true = atlas_like_platform(
+        n_sites, seed=seed, fail_rate=0.0, cores_range=(4000, 8000)
+    )
+    jobs = synthetic_panda_jobs(n_jobs, seed=seed + 1, duration=6 * 3600.0)
+    net0 = uniform_network(n_sites, bw=1.25e9, latency=0.02)
+    jitter = rng_np.lognormal(0.0, 0.5, size=(n_sites, n_sites)).astype(np.float32)
+    net_true = with_bandwidth(net0, np.asarray(net0.bw) * jitter)
+
+    w = jnp.log(jnp.maximum(sites_true.cores.astype(jnp.float32), 1.0))
+    hist_site = jax.random.categorical(
+        jax.random.PRNGKey(seed + 2), w[None, :].repeat(jobs.capacity, 0)
+    ).astype(jnp.int32)
+
+    J = jobs.capacity
+    n_wan = int(round(wan_frac * J))
+    data_policy = replicas = None
+    hist_src = jnp.full((J,), -1, jnp.int32)
+    hist_bytes = jnp.zeros((J,), jnp.float32)
+    if n_wan > 0:
+        wan_rows = np.sort(rng_np.choice(J, size=n_wan, replace=False))
+        dataset = np.full(J, -1, np.int32)
+        dataset[wan_rows] = np.arange(n_wan)
+        hs = np.asarray(hist_site)
+        origin = (
+            hs[wan_rows] + 1 + rng_np.integers(0, n_sites - 1, size=n_wan)
+        ).astype(np.int32) % n_sites
+        sizes = rng_np.lognormal(np.log(2e9), 0.6, size=n_wan).astype(np.float32)
+        replicas = make_replicas(
+            sizes, np.full(n_sites, 1e18, np.float32), origin=origin
+        )
+        data_policy = get_data_policy("always_remote")
+        jobs = jobs._replace(dataset=jnp.asarray(dataset))
+        hist_src = hist_src.at[jnp.asarray(wan_rows)].set(jnp.asarray(origin))
+        hist_bytes = hist_bytes.at[jnp.asarray(wan_rows)].set(jnp.asarray(sizes))
+
+    true_params = PlatformParams(
+        speed=sites_true.speed if "speed" in include else None,
+        bw=net_true.bw if "bw" in include else None,
+        overhead=sites_true.latency if "overhead" in include else None,
+    )
+    problem_true = PlatformProblem(
+        jobs=jobs, sites0=sites_true, network0=net_true,
+        hist_site=hist_site, hist_wall=jnp.zeros((J,), jnp.float32),
+        hist_src=hist_src, hist_bytes=hist_bytes,
+        data_policy=data_policy, replicas=replicas,
+    )
+    if trace == "engine":
+        hist_wall = jnp.asarray(
+            engine_platform_walltimes(problem_true, max_rounds=max_rounds)
+        )
+    elif trace == "closed_form":
+        hist_wall = platform_walltimes(problem_true, PlatformParams())
+    else:
+        raise ValueError(f"unknown trace {trace!r}; have ('closed_form', 'engine')")
+    if noise_sigma > 0:
+        hist_wall = hist_wall * jnp.exp(
+            noise_sigma
+            * jax.random.normal(jax.random.PRNGKey(seed + 4), hist_wall.shape)
+        )
+
+    def bad(x, salt):
+        key = jax.random.PRNGKey(seed + 100 + salt)
+        return x * jnp.exp(misconfig_sigma * jax.random.normal(key, x.shape))
+
+    sites0 = sites_true._replace(
+        speed=bad(sites_true.speed, 0) if "speed" in include else sites_true.speed,
+        latency=(
+            bad(sites_true.latency, 1) if "overhead" in include else sites_true.latency
+        ),
+    )
+    network0 = (
+        with_bandwidth(net_true, bad(net_true.bw, 2)) if "bw" in include else net_true
+    )
+    problem = problem_true._replace(
+        sites0=sites0, network0=network0, hist_wall=hist_wall
+    )
+    return problem, true_params
+
+
+def engine_platform_walltimes(
+    problem: PlatformProblem, *, max_rounds: int = 20_000, rng=None
+) -> jax.Array:
+    """Ground-truth walltimes from one exact-engine replay of ``problem`` at
+    its own platform (used to record synthetic traces; 0 = job never ran)."""
+    sites, net = apply_platform_params(problem, PlatformParams())
+    res = simulate(
+        problem.jobs, sites, pinned_policy(problem.hist_site),
+        jax.random.PRNGKey(0) if rng is None else rng,
+        max_rounds=max_rounds, **_problem_sim_kwargs(problem, net),
+    )
+    return jnp.where(res.jobs.state == DONE, res.jobs.t_finish - res.jobs.t_start, 0.0)
+
+
+def platform_problem_from_trace(
+    jobs: JobsState,
+    sites0: SiteState,
+    trace: dict,
+    *,
+    network0=None,
+    data_policy=None,
+    replicas=None,
+    availability=None,
+) -> PlatformProblem:
+    """Build a ``PlatformProblem`` from recorded trace rows.
+
+    ``trace`` is ``events.recorded_trace(result)``, an ``events.ml_dataset``
+    dict, or ``events.read_ml_trace(path)`` — anything with ``job_id`` /
+    ``site`` / ``walltime`` columns (``xfer_src``/``xfer_bytes`` optional).
+    Rows align to workload entries by ``job_id``; jobs the trace does not
+    cover get ``hist_wall = 0`` and drop out of the mape/quantile losses.
+    """
+    import numpy as np
+
+    J = jobs.capacity
+    pos = {int(j): i for i, j in enumerate(np.asarray(jobs.job_id))}
+    site = np.zeros(J, np.int32)
+    wall = np.zeros(J, np.float32)
+    src = np.full(J, -1, np.int32)
+    nbytes = np.zeros(J, np.float32)
+    t_src = trace.get("xfer_src")
+    t_bytes = trace.get("xfer_bytes")
+    for r, jid in enumerate(np.asarray(trace["job_id"])):
+        i = pos.get(int(jid))
+        if i is None:
+            raise ValueError(f"trace job_id {int(jid)} not in the workload")
+        site[i] = trace["site"][r]
+        wall[i] = trace["walltime"][r]
+        if t_src is not None:
+            src[i] = t_src[r]
+            nbytes[i] = t_bytes[r] if t_bytes is not None else 0.0
+    return PlatformProblem(
+        jobs=jobs, sites0=sites0, network0=network0,
+        hist_site=jnp.asarray(site), hist_wall=jnp.asarray(wall),
+        hist_src=jnp.asarray(src) if t_src is not None else None,
+        hist_bytes=jnp.asarray(nbytes) if t_src is not None else None,
+        data_policy=data_policy, replicas=replicas, availability=availability,
+    )
+
+
+def recovery_error(
+    problem: PlatformProblem,
+    params: PlatformParams,
+    true_params: PlatformParams,
+) -> float:
+    """Geomean across knob families of the mean relative error vs the hidden
+    truth — measured only over *identifiable* entries: sites the trace ran
+    jobs at, WAN links it actually transferred bytes over.  This is the
+    recovery acceptance metric (geomean rel-MAE)."""
+    import numpy as np
+
+    valid = np.asarray(problem.jobs.valid)
+    hs = np.asarray(problem.hist_site)[valid]
+    S = problem.sites0.capacity
+    used_site = np.zeros(S, bool)
+    used_site[np.unique(np.clip(hs, 0, S - 1))] = True
+
+    def rel(a, b):
+        b = np.maximum(np.abs(np.asarray(b, np.float64)), 1e-30)
+        return np.abs(np.asarray(a, np.float64) / b - 1.0)
+
+    maes = []
+    if params.speed is not None and true_params.speed is not None:
+        maes.append(rel(params.speed, true_params.speed)[used_site].mean())
+    if params.overhead is not None and true_params.overhead is not None:
+        maes.append(rel(params.overhead, true_params.overhead)[used_site].mean())
+    if (
+        params.bw is not None
+        and true_params.bw is not None
+        and problem.hist_src is not None
+    ):
+        src = np.asarray(problem.hist_src)[valid]
+        byt = (
+            np.asarray(problem.hist_bytes)[valid]
+            if problem.hist_bytes is not None
+            else np.ones_like(src, np.float32)
+        )
+        m = (src >= 0) & (src != hs) & (byt > 0)
+        used = np.zeros((S, S), bool)
+        used[src[m], hs[m]] = True
+        if used.any():
+            maes.append(rel(params.bw, true_params.bw)[used].mean())
+    if not maes:
+        return float("nan")
+    return float(np.exp(np.mean(np.log(np.maximum(np.asarray(maes), 1e-12)))))

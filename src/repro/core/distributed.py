@@ -30,6 +30,7 @@ from .engine import (
     _run_buckets,
     _simulate,
     simulate,
+    simulate_many,
     stack_scenarios,
 )
 from .types import JobsState, SimResult, SiteState
@@ -371,3 +372,31 @@ def simulate_many_sharded(
     recorder.gauge("lane_rounds_mean", float(rounds.mean()))
     recorder.note("lane_mode", lane_mode)
     return res
+
+
+def simulate_population(
+    scenarios,
+    policy,
+    rng: jax.Array,
+    *,
+    mesh: Mesh | None = None,
+    axis: str = "data",
+    subsystems: tuple = (),
+    **kw,
+) -> SimResult:
+    """One entry point for candidate-population ensembles (calibration lanes).
+
+    A calibration step evaluates a whole candidate population as ensemble
+    lanes; whether those lanes run on one device (``simulate_many``) or
+    spread over a mesh (``simulate_many_sharded``) is a deployment detail the
+    optimizer should not care about.  ``mesh=None`` takes the single-device
+    vmapped path; a mesh takes the lock-step-free sharded path (lane counts
+    that do not divide the mesh are padded with repeats, results unpadded).
+    Lane ``i`` draws ``split(rng, K)[i]`` on both paths, so results are
+    bit-for-bit identical across deployments and to solo ``simulate`` runs.
+    """
+    if mesh is None:
+        return simulate_many(scenarios, policy, rng, subsystems=subsystems, **kw)
+    return simulate_many_sharded(
+        scenarios, policy, rng, mesh, axis=axis, subsystems=subsystems, **kw
+    )

@@ -322,6 +322,10 @@ def _ml_block(ctx: dict, sl: slice = slice(None)) -> dict[str, np.ndarray]:
         walltime=wall.astype(np.float32),
         queue_time=queue.astype(np.float32),
         failed=failed,
+        # identity labels (not features): which job ran where — what lets a
+        # calibration trace join rows back to workload entries
+        job_id=jobs["job_id"][done].astype(np.int32),
+        site=sid[done].astype(np.int32),
     )
 
 
@@ -379,6 +383,8 @@ def write_ml_dataset(result: SimResult, target, *, segment: int = 0) -> int:
             for i in range(len(block["walltime"])):
                 rec = {
                     "type": "ml_row",
+                    "job_id": int(block["job_id"][i]),
+                    "site": int(block["site"][i]),
                     "features": [float(x) for x in block["features"][i]],
                     "walltime": float(block["walltime"][i]),
                     "queue_time": float(block["queue_time"][i]),
@@ -390,6 +396,59 @@ def write_ml_dataset(result: SimResult, target, *, segment: int = 0) -> int:
         if own:
             f.close()
     return n
+
+
+def recorded_trace(result: SimResult) -> dict[str, np.ndarray]:
+    """Extract the calibration ground-truth columns from one finished run.
+
+    Per finished/failed job (in job order): ``job_id``, the ``site`` it ran
+    at, its ``walltime``/``queue_time``, and the WAN stage-in it performed —
+    replica source ``xfer_src`` (−1 = flat-link stage-in) and ``xfer_bytes``
+    moved.  This is the row schema ``calibration.platform_problem_from_trace``
+    consumes; ``ml_dataset`` rows carry the same ``job_id``/``site``/
+    ``walltime`` labels, so an exported NDJSON dataset (``read_ml_trace``)
+    works as a trace too.
+    """
+    jobs = jax_to_np(result.jobs)
+    done = np.isin(jobs["state"], [DONE, FAILED]) & jobs["valid"]
+    S = len(np.asarray(result.sites.cores))
+    return dict(
+        job_id=jobs["job_id"][done].astype(np.int32),
+        site=np.clip(jobs["site"], 0, S - 1)[done].astype(np.int32),
+        walltime=(jobs["t_finish"] - jobs["t_start"])[done].astype(np.float32),
+        queue_time=(jobs["t_start"] - jobs["arrival"])[done].astype(np.float32),
+        xfer_src=jobs["xfer_src"][done].astype(np.int32),
+        xfer_bytes=jobs["xfer_bytes"][done].astype(np.float32),
+    )
+
+
+def read_ml_trace(source) -> dict[str, np.ndarray]:
+    """Load a ``write_ml_dataset`` NDJSON export back into trace arrays.
+
+    Returns ``job_id``/``site``/``walltime``/``queue_time``/``failed``
+    columns plus the feature matrix and names — the round trip that lets a
+    recorded production trace on disk drive ``platform_problem_from_trace``.
+    """
+    own = not hasattr(source, "read")
+    f = open(source) if own else source
+    try:
+        head = json.loads(f.readline())
+        if head.get("type") != "ml_header":
+            raise ValueError("not an ml NDJSON export (missing ml_header)")
+        rows = [json.loads(line) for line in f if line.strip()]
+    finally:
+        if own:
+            f.close()
+    rows = [r for r in rows if r.get("type") == "ml_row"]
+    return dict(
+        feature_names=np.array(head["feature_names"]),
+        features=np.array([r["features"] for r in rows], np.float32),
+        job_id=np.array([r["job_id"] for r in rows], np.int32),
+        site=np.array([r["site"] for r in rows], np.int32),
+        walltime=np.array([r["walltime"] for r in rows], np.float32),
+        queue_time=np.array([r["queue_time"] for r in rows], np.float32),
+        failed=np.array([r["failed"] for r in rows], bool),
+    )
 
 
 def iter_frames(result: SimResult):

@@ -100,6 +100,20 @@ def network_from_sites(sites) -> NetworkState:
     return star_network(sites.bw_out, sites.bw_in, sites.latency)
 
 
+def with_bandwidth(net: NetworkState, bw) -> NetworkState:
+    """Replace the WAN (off-diagonal) bandwidths of ``net`` with ``bw``.
+
+    The intra-site diagonal is preserved from ``net`` — calibration treats
+    the ``f32[S, S]`` bandwidth matrix as a free parameter, but the LAN path
+    must stay effectively infinite regardless of the candidate values.
+    """
+    bw = jnp.asarray(bw, jnp.float32)
+    if bw.shape != net.bw.shape:
+        raise ValueError(f"bandwidth shape {bw.shape} != {net.bw.shape}")
+    eye = jnp.eye(net.bw.shape[-1], dtype=bool)
+    return net._replace(bw=jnp.where(eye, net.bw, bw))
+
+
 def atlas_like_network(n_sites: int, *, seed: int = 0, capacity: int | None = None) -> NetworkState:
     """WLCG-flavoured random topology matching ``atlas_like_platform``:
     ~10% Tier-1 sites on fat links, the rest on 1-10 Gbps access links."""

@@ -122,6 +122,21 @@ def atlas_like_platform(
     )
 
 
+def apply_site_params(sites: SiteState, *, speed=None, latency=None) -> SiteState:
+    """Overlay continuous per-site knobs on a platform (calibration hot path).
+
+    ``None`` leaves a knob untouched, so the same call site works for any
+    subset of the ``PlatformParams`` fields; values broadcast against the
+    site axis (a vmapped candidate population passes batched arrays).
+    """
+    repl = {}
+    if speed is not None:
+        repl["speed"] = jnp.asarray(speed, jnp.float32)
+    if latency is not None:
+        repl["latency"] = jnp.asarray(latency, jnp.float32)
+    return sites._replace(**repl) if repl else sites
+
+
 def load_availability(spec: dict | str, names=None, *, n_sites: int | None = None):
     """Build an ``AvailabilityState`` from a CGSim-style JSON payload.
 

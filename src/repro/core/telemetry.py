@@ -317,6 +317,27 @@ def scenario_hash(*trees) -> str:
     return h.hexdigest()[:16]
 
 
+def jsonable(tree):
+    """Pytree -> plain JSON-serializable Python (dicts / lists / scalars).
+
+    NamedTuples become dicts keyed by field, arrays become (nested) lists,
+    ``None`` passes through — how calibration results and parameter pytrees
+    land inside a RunManifest sidecar without a custom encoder.
+    """
+    if tree is None:
+        return None
+    if hasattr(tree, "_asdict"):
+        return {k: jsonable(v) for k, v in tree._asdict().items()}
+    if isinstance(tree, dict):
+        return {str(k): jsonable(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return [jsonable(v) for v in tree]
+    if isinstance(tree, (str, bool, int, float)):
+        return tree
+    a = np.asarray(tree)
+    return a.item() if a.ndim == 0 else a.tolist()
+
+
 def run_manifest(
     *,
     jobs=None,

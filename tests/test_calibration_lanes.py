@@ -1,0 +1,167 @@
+"""ISSUE 7 equivalence harness: the lane-batched population objective must
+equal a Python loop of solo ``engine_platform_objective`` calls per candidate
+— including with availability + data subsystems attached — while the whole
+population runs as ONE compiled program (no per-candidate recompiles)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.availability import make_availability
+from repro.core.calibration import (
+    PlatformParams,
+    decode_params,
+    engine_platform_objective,
+    make_population_objective,
+    make_synthetic_platform_problem,
+    pinned_policy,
+    platform_params,
+    ravel_params,
+    encode_params,
+)
+from repro.core.engine import _simulate
+
+
+def _candidates(be, n, seed=0, scale=0.3):
+    """n log-space candidates around the starting point."""
+    noise = jax.random.normal(jax.random.PRNGKey(seed), (n, be.z0.shape[0]))
+    return be.z0[None, :] + scale * noise
+
+
+def _solo_losses(problem, be, zs, rng, *, loss="mape", max_rounds=6000):
+    """Reference: candidate-at-a-time engine runs with the lane RNG keys
+    (``simulate_many`` gives lane i ``split(rng, K)[i]``)."""
+    policy = pinned_policy(problem.hist_site)  # shared: keep the loop warm
+    keys = jax.random.split(rng, zs.shape[0])
+    return np.array(
+        [
+            float(
+                engine_platform_objective(
+                    problem,
+                    decode_params(be.unravel(z), be.bounds),
+                    keys[i],
+                    loss=loss,
+                    max_rounds=max_rounds,
+                    policy=policy,
+                )
+            )
+            for i, z in enumerate(zs)
+        ]
+    )
+
+
+def test_lane_batched_equals_solo_loop_plain():
+    """Population lanes == solo loop, plain engine (no subsystems)."""
+    problem, _ = make_synthetic_platform_problem(
+        n_jobs=40, n_sites=3, seed=0, trace="engine", wan_frac=0.0,
+        include=("speed", "overhead"),
+    )
+    assert problem.data_policy is None
+    be = make_population_objective(
+        problem, objective="engine", include=("speed", "overhead"), max_rounds=6000
+    )
+    zs = _candidates(be, 4)
+    rng = jax.random.PRNGKey(7)
+    lane = np.asarray(be(zs, rng))
+    solo = _solo_losses(problem, be, zs, rng)
+    np.testing.assert_allclose(lane, solo, rtol=1e-5, atol=1e-6)
+
+
+def test_lane_batched_equals_solo_loop_with_avail_and_data():
+    """Population lanes == solo loop with availability + data subsystems on
+    (the full ext pipeline: outage calendars broadcast per lane, per-lane
+    candidate WAN matrices in the data slot)."""
+    problem, _ = make_synthetic_platform_problem(
+        n_jobs=40, n_sites=3, seed=1, trace="engine", wan_frac=0.5
+    )
+    assert problem.data_policy is not None
+    windows = [
+        dict(site=0, start=50.0, end=400.0, factor=0.0, preempt=True),
+        dict(site=1, start=200.0, end=900.0, factor=0.5, preempt=False),
+    ]
+    problem = problem._replace(availability=make_availability(3, windows))
+    be = make_population_objective(problem, objective="engine", max_rounds=6000)
+    zs = _candidates(be, 3, seed=5)
+    rng = jax.random.PRNGKey(11)
+    lane = np.asarray(be(zs, rng))
+    solo = _solo_losses(problem, be, zs, rng)
+    np.testing.assert_allclose(lane, solo, rtol=1e-5, atol=1e-6)
+
+
+def test_population_compiles_once_per_shape():
+    """ISSUE 7 acceptance: the whole population is one compiled program —
+    fresh candidate values never retrace (trace-count + jit cache check)."""
+    problem, _ = make_synthetic_platform_problem(
+        n_jobs=32, n_sites=3, seed=2, trace="engine", wan_frac=0.5
+    )
+    be = make_population_objective(problem, objective="engine", max_rounds=6000)
+    zs = _candidates(be, 5, seed=1)
+    be(zs, jax.random.PRNGKey(0))
+    assert be.trace_count() == 1
+    cache = getattr(_simulate, "_cache_size", None)
+    n0 = cache() if cache is not None else None
+    # new candidate values + new rng: same program, zero new traces
+    be(zs + 0.2, jax.random.PRNGKey(1))
+    be(zs * 0.9 - 0.1, jax.random.PRNGKey(2))
+    assert be.trace_count() == 1
+    if cache is not None:
+        assert cache() == n0
+    # a different population size is a new shape -> exactly one more trace
+    be(zs[:2], jax.random.PRNGKey(3))
+    assert be.trace_count() == 2
+
+
+def test_sharded_lanes_match_solo_loop():
+    """The mesh path (``simulate_many_sharded``) scores lanes identically."""
+    problem, _ = make_synthetic_platform_problem(
+        n_jobs=32, n_sites=3, seed=3, trace="engine", wan_frac=0.5
+    )
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    be = make_population_objective(
+        problem, objective="engine", mesh=mesh, max_rounds=6000
+    )
+    zs = _candidates(be, 4, seed=9)
+    rng = jax.random.PRNGKey(13)
+    lane = np.asarray(be(zs, rng))
+    solo = _solo_losses(problem, be, zs, rng)
+    np.testing.assert_allclose(lane, solo, rtol=1e-5, atol=1e-6)
+    be(zs + 0.1, jax.random.PRNGKey(1))
+    assert be.trace_count() == 1
+
+
+def test_closed_form_population_matches_scalar_objective():
+    """The vmapped closed-form population equals per-candidate scalar calls
+    (and is where ``jax.grad`` fits plug in)."""
+    from repro.core.calibration import platform_objective
+
+    problem, _ = make_synthetic_platform_problem(
+        n_jobs=48, n_sites=4, seed=4, trace="closed_form", wan_frac=0.5
+    )
+    be = make_population_objective(problem, objective="closed_form")
+    zs = _candidates(be, 6, seed=2)
+    lane = np.asarray(be(zs))
+    solo = np.array(
+        [
+            float(
+                platform_objective(
+                    problem, decode_params(be.unravel(z), be.bounds), loss="mape"
+                )
+            )
+            for z in zs
+        ]
+    )
+    np.testing.assert_allclose(lane, solo, rtol=1e-6, atol=1e-7)
+
+
+def test_quantile_loss_lane_equivalence():
+    problem, _ = make_synthetic_platform_problem(
+        n_jobs=40, n_sites=3, seed=6, trace="engine", wan_frac=0.5
+    )
+    be = make_population_objective(
+        problem, objective="engine", loss="quantile", max_rounds=6000
+    )
+    zs = _candidates(be, 3, seed=3)
+    rng = jax.random.PRNGKey(17)
+    lane = np.asarray(be(zs, rng))
+    solo = _solo_losses(problem, be, zs, rng, loss="quantile")
+    np.testing.assert_allclose(lane, solo, rtol=1e-5, atol=1e-6)

@@ -428,3 +428,85 @@ def test_conservation_laws_with_workflow(n_jobs, seed, fail_rate, policy):
     retries = int(np.asarray(res.jobs.retries)[valid].sum())
     assert int(np.asarray(res.sites.n_finished).sum()) == n_done
     assert int(np.asarray(res.sites.n_failed).sum()) == retries + int((state == FAILED).sum())
+
+
+# --------------------------------------------------------------------------
+# ISSUE 7: platform-calibration properties — objective geometry, seed
+# determinism, and the bounds guarantee of calibrate_platform
+# --------------------------------------------------------------------------
+from repro.core.calibration import (  # noqa: E402
+    PARAM_FIELDS,
+    apply_platform_params,
+    calibrate_platform,
+    default_bounds,
+    make_synthetic_platform_problem,
+    platform_objective,
+    platform_params,
+)
+
+
+def _perturb(params, sigma, seed):
+    """Multiplicative lognormal kick on every included knob family."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), len(PARAM_FIELDS))
+    kicked = {}
+    for k, f in zip(ks, PARAM_FIELDS):
+        x = getattr(params, f)
+        kicked[f] = None if x is None else x * jnp.exp(
+            sigma * jax.random.normal(k, x.shape)
+        )
+    return params._replace(**kicked)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), include_bw=st.booleans())
+def test_objective_zero_at_truth_worse_when_perturbed(seed, include_bw):
+    """The closed-form objective is ~0 at the hidden truth and strictly
+    worse under a large multiplicative perturbation of the true knobs."""
+    include = ("speed", "bw", "overhead") if include_bw else ("speed", "overhead")
+    problem, truth = make_synthetic_platform_problem(
+        n_jobs=32, n_sites=3, seed=seed % 1000, include=include,
+        trace="closed_form", wan_frac=0.5 if include_bw else 0.0,
+    )
+    at_truth = float(platform_objective(problem, truth))
+    assert at_truth < 1e-5
+    kicked = _perturb(truth, 1.0, seed)
+    assert float(platform_objective(problem, kicked)) > at_truth + 0.05
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**16), method=st.sampled_from(["spsa", "grad"]))
+def test_calibrate_platform_seed_deterministic(seed, method):
+    """Same seed -> bitwise-identical result pytree."""
+    problem, _ = make_synthetic_platform_problem(
+        n_jobs=24, n_sites=3, seed=seed % 1000, include=("speed",),
+        trace="closed_form",
+    )
+    kw = dict(method=method, objective="closed_form", include=("speed",),
+              n_iters=8, seed=seed % 97)
+    r1 = calibrate_platform(problem, **kw)
+    r2 = calibrate_platform(problem, **kw)
+    for a, b in zip(jax.tree.leaves(r1), jax.tree.leaves(r2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**16), factor=st.floats(1.05, 1.5))
+def test_calibrate_platform_respects_bounds(seed, factor):
+    """Results never leave the declared box — even when the box is so tight
+    that the optimizer slams into the walls."""
+    problem, _ = make_synthetic_platform_problem(
+        n_jobs=24, n_sites=3, seed=seed % 1000, include=("speed", "overhead"),
+        trace="closed_form", misconfig_sigma=0.8,
+    )
+    p0 = platform_params(problem, ("speed", "overhead"))
+    bounds = default_bounds(p0, factor=factor)
+    res = calibrate_platform(
+        problem, method="spsa", objective="closed_form",
+        include=("speed", "overhead"), bounds=bounds, n_iters=12,
+        seed=seed % 89, a0=0.5,
+    )
+    for f in ("speed", "overhead"):
+        x = np.asarray(getattr(res.params, f))
+        lo = np.asarray(getattr(bounds.lo, f))
+        hi = np.asarray(getattr(bounds.hi, f))
+        assert (x >= lo - 1e-6 * lo).all() and (x <= hi + 1e-6 * hi).all()
