@@ -1,0 +1,111 @@
+"""Transfer-queue subsystem throughput (DESIGN.md §11): engine round rate
+with queued, rate-limited WAN flows, swept over the per-link concurrency cap
+and the queue pressure (flows contending per lake egress link), plus the
+per-round overhead of the queue machinery vs the instantaneous equal-share
+model.  ``--tiny`` runs a seconds-sized smoke configuration for CI.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (
+    atlas_like_platform,
+    get_data_policy,
+    get_policy,
+    make_replicas,
+    make_transfers,
+    simulate,
+    synthetic_panda_jobs,
+    uniform_network,
+    zipf_dataset_sizes,
+)
+
+from .common import csv_row
+
+N_DS = 32
+
+
+def one_case(n_jobs: int, n_sites: int, cap: int | None, *, iters=2):
+    """One timed run: every read is a WAN flow off the site-0 data lake, so
+    the egress links carry ~n_jobs/n_sites flows each.  ``cap=None`` runs the
+    instantaneous model (no transfer queue) as the overhead reference."""
+    jobs = synthetic_panda_jobs(
+        n_jobs, seed=0, duration=3600.0, n_datasets=N_DS, zipf_alpha=1.1
+    )
+    sites = atlas_like_platform(n_sites, seed=1)
+    net = uniform_network(n_sites, bw=2e8, latency=0.05)
+    rep = make_replicas(
+        zipf_dataset_sizes(N_DS, seed=3),
+        disk_capacity=np.array([1e13] + [2e10] * (n_sites - 1)),
+        origin=np.zeros(N_DS, np.int32),
+    )
+    kw = dict(
+        data_policy=get_data_policy("always_remote"),
+        network=net,
+        replicas=rep,
+        max_rounds=8 * n_jobs + 64,
+    )
+    if cap is not None:
+        kw["transfers"] = make_transfers(n_sites, jobs.capacity, max_active=cap)
+    res = simulate(jobs, sites, get_policy("round_robin"), jax.random.PRNGKey(0), **kw)
+    jax.block_until_ready(res.makespan)
+    ts = []
+    for i in range(iters):
+        t0 = time.perf_counter()
+        res = simulate(
+            jobs, sites, get_policy("round_robin"), jax.random.PRNGKey(i), **kw
+        )
+        jax.block_until_ready(res.makespan)
+        ts.append(time.perf_counter() - t0)
+    wall = float(np.median(ts))
+    return wall, int(res.rounds), res
+
+
+def main():
+    tiny = "--tiny" in sys.argv
+    if tiny:
+        cap_grid = (1, 4)
+        depth_grid = (100, 200)
+        n_jobs, n_sites = 200, 4
+    else:
+        cap_grid = (1, 2, 8, 64)
+        depth_grid = (500, 1500, 3000)
+        n_jobs, n_sites = 1500, 8
+
+    print("# round throughput vs per-link concurrency cap (J fixed)")
+    for c in cap_grid:
+        wall, rounds, res = one_case(n_jobs, n_sites, c)
+        tse = res.ext["transfers"]
+        print(csv_row(
+            f"transfers_cap{c}_J{n_jobs}", wall / max(rounds, 1) * 1e6,
+            f"rounds={rounds};wall_s={wall:.3f};n_enq={int(tse.n_enq)}",
+        ))
+
+    print("# round throughput vs queue depth (flows per egress link, cap fixed)")
+    for j in depth_grid:
+        wall, rounds, res = one_case(j, n_sites, 2)
+        tse = res.ext["transfers"]
+        print(csv_row(
+            f"transfers_depth_J{j}", wall / max(rounds, 1) * 1e6,
+            f"rounds={rounds};wall_s={wall:.3f};"
+            f"flows_per_link={j // max(n_sites - 1, 1)};n_enq={int(tse.n_enq)}",
+        ))
+
+    print("# queue machinery overhead vs the instantaneous equal-share model")
+    wall_on, rounds_on, _ = one_case(n_jobs, n_sites, 4)
+    wall_off, rounds_off, _ = one_case(n_jobs, n_sites, None)
+    us_on = wall_on / max(rounds_on, 1) * 1e6
+    us_off = wall_off / max(rounds_off, 1) * 1e6
+    print(csv_row(
+        "transfers_round_overhead", us_on,
+        f"instant_us={us_off:.1f};ratio={us_on / max(us_off, 1e-9):.2f};"
+        f"rounds_on={rounds_on};rounds_off={rounds_off}",
+    ))
+
+
+if __name__ == "__main__":
+    main()

@@ -27,6 +27,7 @@ from . import (
     bench_events,
     bench_job_scaling,
     bench_site_scaling,
+    bench_transfers,
     bench_workflow,
 )
 
@@ -40,6 +41,7 @@ SUITES = {
     "engine_rounds": bench_engine_rounds.main,
     "ensemble_vmap": bench_ensemble.main,
     "data_movement": bench_data_movement.main,
+    "transfers": bench_transfers.main,
     "availability": bench_availability.main,
     "workflow": bench_workflow.main,
 }

@@ -78,6 +78,8 @@ from .availability import (  # noqa: F401
 from .network import (  # noqa: F401
     NetworkState,
     atlas_like_network,
+    link_caps,
+    link_index,
     matrix_network,
     network_from_sites,
     shared_transfer_times,
@@ -116,6 +118,11 @@ from .datapolicies import (  # noqa: F401
     get_data_policy,
     make_data_policy,
     register_data,
+)
+from .transfers import (  # noqa: F401
+    TransferState,
+    make_transfers,
+    transfers_subsystem,
 )
 from .platform import (  # noqa: F401
     ExecutionParams,

@@ -135,31 +135,71 @@ def _data_on_start(sub, ctx):
     src = policy.select_source(jobs, sites, network, rep, dstate, site_c, clock)
     src_c = jnp.clip(src, 0, S - 1)
     xfer = read & ~local
-    t_net, _ = shared_transfer_times(network, src_c, site_c, ds_bytes, xfer)
     # swap the flat latency+stage-in terms for the WAN transfer
     in_flat = stage_in_time(jobs, ctx.sites_serv, site_c, share_in)
-    ctx.t_serv = jnp.where(has_ds, t_serv - in_flat + t_net, t_serv)
+    # static specialization: with the transfer-queue subsystem registered, WAN
+    # reads are deferred to its link queues (DESIGN.md §11) instead of being
+    # priced instantly — the staging gate and landing happen in transfers.py
+    defer = "transfers" in ctx.ext
+    if defer:
+        ctx.t_serv = jnp.where(has_ds, t_serv - in_flat, t_serv)
+    else:
+        t_net, _ = shared_transfer_times(network, src_c, site_c, ds_bytes, xfer)
+        ctx.t_serv = jnp.where(has_ds, t_serv - in_flat + t_net, t_serv)
     # catalog bookkeeping: touch LRU clocks, cache-on-read insertion
     rep = touch(rep, jobs.dataset, src_c, xfer, clock)
     rep = touch(rep, jobs.dataset, site_c, read & local, clock)
     want_cache = policy.should_cache(jobs, sites, network, rep, dstate, site_c, clock) & xfer
-    rep = insert_replicas(rep, jobs.dataset, site_c, want_cache, clock)
     moved = jnp.where(xfer, ds_bytes, 0.0)
-    rep = rep._replace(
-        n_hits=rep.n_hits + (read & local).sum().astype(jnp.int32),
-        n_transfers=rep.n_transfers + xfer.sum().astype(jnp.int32),
-        bytes_moved=rep.bytes_moved + moved.sum(),
-    )
-    net_in_now = _site_sum(moved, jnp.where(xfer, jobs.site, S), S)
+    rep = rep._replace(n_hits=rep.n_hits + (read & local).sum().astype(jnp.int32))
+    net_in_now = dext.net_acc
+    if defer:
+        # hand this round's WAN reads to the transfer queues; replica
+        # insertion and WAN counters land at transfer completion
+        ctx.scratch["transfers"] = {
+            "xfer": xfer,
+            "link": src_c * S + site_c,
+            "bytes": moved,
+            "resid": jnp.maximum(t_serv - in_flat, 0.0) + network.latency[src_c, site_c],
+            "cache": want_cache,
+        }
+        t_net_col = jnp.zeros((jobs.capacity,), jnp.float32)
+    else:
+        rep = insert_replicas(rep, jobs.dataset, site_c, want_cache, clock)
+        rep = rep._replace(
+            n_transfers=rep.n_transfers + xfer.sum().astype(jnp.int32),
+            bytes_moved=rep.bytes_moved + moved.sum(),
+        )
+        net_in_now = net_in_now + _site_sum(moved, jnp.where(xfer, jobs.site, S), S)
+        t_net_col = t_net
     ctx.jobs = jobs._replace(
         xfer_src=jnp.where(read, src_c, jobs.xfer_src),
         xfer_bytes=jnp.where(read, moved, jobs.xfer_bytes),
-        xfer_time=jnp.where(read, t_net, jobs.xfer_time),
+        xfer_time=jnp.where(read, t_net_col, jobs.xfer_time),
     )
     dstate = policy.on_step(dstate, ctx.jobs, rep, started, xfer, clock)
     ctx.ext["data"] = DataExt(
-        network=network, replicas=rep, state=dstate, net_acc=dext.net_acc + net_in_now
+        network=network, replicas=rep, state=dstate, net_acc=net_in_now
     )
+
+
+def land_deferred(dext: DataExt, jobs, done, cache, clock, S):
+    """Deferred landing for queue-managed transfers (DESIGN.md §11): the
+    catalog/WAN bookkeeping that ``_data_on_start`` skips in defer mode,
+    applied by the transfer subsystem on the ``done`` rows at completion —
+    replica materialization at the destination, transfer/byte counters, and
+    per-site WAN-ingress accumulation for the event log."""
+    from .engine import _site_sum
+    from .replicas import insert_replicas
+
+    rep = insert_replicas(dext.replicas, jobs.dataset, jnp.clip(jobs.site, 0, S - 1), done & cache, clock)
+    moved = jnp.where(done, jobs.xfer_bytes, 0.0)
+    rep = rep._replace(
+        n_transfers=rep.n_transfers + done.sum().astype(jnp.int32),
+        bytes_moved=rep.bytes_moved + moved.sum(),
+    )
+    net_in = _site_sum(moved, jnp.where(done, jobs.site, S), S)
+    return dext._replace(replicas=rep, net_acc=dext.net_acc + net_in)
 
 
 def _data_log_spec(sub, dext: DataExt, jobs, sites):

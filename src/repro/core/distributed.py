@@ -85,6 +85,7 @@ def _prepare_subsystems(kw: dict, jobs, sites, mesh: Mesh, old_capacity: int) ->
         replicas=kw.pop("replicas", None),
         availability=kw.pop("availability", None),
         workflow=kw.pop("workflow", None),
+        transfers=kw.pop("transfers", None),
         subsystems=kw.pop("subsystems", ()),
         jobs=jobs,
         sites=sites,

@@ -640,6 +640,7 @@ def simulate(
     replicas=None,
     availability=None,
     workflow=None,
+    transfers=None,
     subsystems=(),
     max_rounds: int = 100_000,
     horizon: float = float("inf"),
@@ -706,6 +707,7 @@ def simulate(
         replicas=replicas,
         availability=availability,
         workflow=workflow,
+        transfers=transfers,
         subsystems=subsystems,
         jobs=jobs0,
         sites=sites0,
@@ -781,6 +783,7 @@ def init_sim(
     replicas=None,
     availability=None,
     workflow=None,
+    transfers=None,
     subsystems=(),
     max_rounds: int = 100_000,
     log_rows: int = 0,
@@ -799,6 +802,7 @@ def init_sim(
         replicas=replicas,
         availability=availability,
         workflow=workflow,
+        transfers=transfers,
         subsystems=subsystems,
         jobs=jobs0,
         sites=sites0,

@@ -124,6 +124,10 @@ def transfer_rows(result: SimResult, site_names=None) -> list[dict]:
                 bytes=round(nbytes, 1),
                 duration=round(float(jobs["xfer_time"][j]), 3),
                 cache_hit=nbytes == 0.0,
+                # transfer-queue columns (DESIGN.md §11): 0.0/-1 when the
+                # subsystem is off, so schemas concatenate across runs
+                queue_wait=round(float(jobs["xfer_wait"][j]), 3),
+                queue_depth=int(jobs["xfer_qdepth"][j]),
             )
         )
     return rows
@@ -256,7 +260,7 @@ def _ml_context(result: SimResult) -> dict:
         "site_fail_rate", "log_xfer_bytes", "xfer_time", "has_dataset",
         "n_parents", "dag_depth", "wf_id",
     ]
-    ctx = dict(jobs=jobs, sites=sites, down_frac=None, site_pre=None)
+    ctx = dict(jobs=jobs, sites=sites, down_frac=None, site_pre=None, net_bw=None)
     avail = getattr(result, "avail", None)
     if avail is not None:
         from .availability import downtime_fraction
@@ -264,6 +268,12 @@ def _ml_context(result: SimResult) -> dict:
         ctx["down_frac"] = downtime_fraction(avail, float(result.makespan))
         ctx["site_pre"] = np.asarray(avail.n_preempted, np.float64)
         names = names + ["n_preempted", "site_downtime_frac", "site_log_preempted"]
+    ext = getattr(result, "ext", None) or {}
+    if "transfers" in ext and "data" in ext:
+        # transfer-queue features (DESIGN.md §11); appended only when the
+        # subsystem ran, preserving byte-identity of existing exports
+        ctx["net_bw"] = np.asarray(ext["data"].network.bw, np.float64)
+        names = names + ["xfer_queue_wait", "xfer_queue_depth", "src_link_log_bw"]
     ctx["names"] = names
     return ctx
 
@@ -310,6 +320,18 @@ def _ml_block(ctx: dict, sl: slice = slice(None)) -> dict[str, np.ndarray]:
                 jobs["preempted"].astype(np.float64),
                 ctx["down_frac"][sid],
                 np.log1p(ctx["site_pre"][sid]),
+            ],
+            axis=-1,
+        )[done]
+        feats = np.concatenate([feats, extra], axis=-1)
+    if ctx["net_bw"] is not None:
+        src = jobs["xfer_src"]
+        src_c = np.clip(src, 0, ctx["net_bw"].shape[0] - 1)
+        extra = np.stack(
+            [
+                jobs["xfer_wait"],
+                jobs["xfer_qdepth"].astype(np.float64),
+                np.where(src >= 0, np.log1p(ctx["net_bw"][src_c, sid]), 0.0),
             ],
             axis=-1,
         )[done]

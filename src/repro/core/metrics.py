@@ -27,6 +27,13 @@ class Metrics(NamedTuple):
     p50_walltime: jax.Array
     p95_walltime: jax.Array
     p99_walltime: jax.Array
+    # transfer-queue tails (DESIGN.md §11) — 0 when no WAN transfers happened
+    p50_xfer_wait: jax.Array   # queue-wait of completed jobs' last stage-in
+    p95_xfer_wait: jax.Array
+    p99_xfer_wait: jax.Array
+    p50_xfer_time: jax.Array   # transfer duration of the last stage-in
+    p95_xfer_time: jax.Array
+    p99_xfer_time: jax.Array
 
 
 def _masked_percentile(values: jax.Array, mask: jax.Array, n: jax.Array, q: float):
@@ -66,6 +73,10 @@ def compute_metrics(result: SimResult) -> Metrics:
         * jobs.cores.astype(jnp.float32), 1e-9), 0.0)
     eff = compute_t.sum() / jnp.maximum(wall.sum(), 1e-9)
 
+    # transfer tails over completed jobs whose last stage-in moved WAN bytes
+    moved = done & (jobs.xfer_bytes > 0)
+    n_moved = moved.sum()
+
     return Metrics(
         makespan=result.makespan,
         n_done=n_done,
@@ -82,6 +93,12 @@ def compute_metrics(result: SimResult) -> Metrics:
         p50_walltime=_masked_percentile(w_raw, done, n_done, 0.50),
         p95_walltime=_masked_percentile(w_raw, done, n_done, 0.95),
         p99_walltime=_masked_percentile(w_raw, done, n_done, 0.99),
+        p50_xfer_wait=_masked_percentile(jobs.xfer_wait, moved, n_moved, 0.50),
+        p95_xfer_wait=_masked_percentile(jobs.xfer_wait, moved, n_moved, 0.95),
+        p99_xfer_wait=_masked_percentile(jobs.xfer_wait, moved, n_moved, 0.99),
+        p50_xfer_time=_masked_percentile(jobs.xfer_time, moved, n_moved, 0.50),
+        p95_xfer_time=_masked_percentile(jobs.xfer_time, moved, n_moved, 0.95),
+        p99_xfer_time=_masked_percentile(jobs.xfer_time, moved, n_moved, 0.99),
     )
 
 
@@ -95,5 +112,9 @@ def summary_str(m: Metrics) -> str:
         f"wall_p50/95/99={float(m.p50_walltime):.1f}/{float(m.p95_walltime):.1f}/"
         f"{float(m.p99_walltime):.1f}s "
         f"throughput={float(m.throughput) * 3600.0:.1f} jobs/h "
-        f"util={float(m.core_utilization):.3f} cpu_eff={float(m.cpu_efficiency):.3f}"
+        f"util={float(m.core_utilization):.3f} cpu_eff={float(m.cpu_efficiency):.3f} "
+        f"xfer_wait_p50/95/99={float(m.p50_xfer_wait):.1f}/{float(m.p95_xfer_wait):.1f}/"
+        f"{float(m.p99_xfer_wait):.1f}s "
+        f"xfer_time_p50/95/99={float(m.p50_xfer_time):.1f}/{float(m.p95_xfer_time):.1f}/"
+        f"{float(m.p99_xfer_time):.1f}s"
     )

@@ -278,6 +278,31 @@ def network_timeline(result: SimResult) -> np.ndarray:
     return extra_timeline(result, "site_net_in")
 
 
+def _link_timeline(result: SimResult, column: str) -> np.ndarray:
+    """[T, S, S] per-frame values of a transfer-queue link column — the
+    flattened ``[S*S]`` log rows folded back onto the (src, dst) matrix.
+    Frames from runs without the subsystem come back as zeros."""
+    frames = log_frames(result)
+    S = result.sites.capacity
+    fallback = np.zeros((S * S,))
+    rows = [np.asarray(f.get(column, fallback), dtype=np.float64) for f in frames]
+    out = np.stack(rows) if rows else np.zeros((0, S * S))
+    return out.reshape(-1, S, S)
+
+
+def link_occupancy_timeline(result: SimResult) -> np.ndarray:
+    """[T, S, S] active transfers per directed link per logged frame — the
+    DESIGN.md §11 dashboard feed for FTS channel saturation (compare against
+    the per-link caps)."""
+    return _link_timeline(result, "link_active")
+
+
+def transfer_queue_timeline(result: SimResult) -> np.ndarray:
+    """[T, S, S] queued (waiting) transfers per directed link per logged
+    frame — queue-depth build-up and drain on hot links."""
+    return _link_timeline(result, "link_queued")
+
+
 def availability_timeline(result: SimResult) -> np.ndarray:
     """[T, S] availability factor per logged frame (1 up, (0,1) degraded,
     0 down) — the DESIGN.md §5 dashboard feed for outage/brown-out studies."""

@@ -131,6 +131,36 @@ def atlas_like_network(n_sites: int, *, seed: int = 0, capacity: int | None = No
 
 
 # --------------------------------------------------------------------------
+# flattened directed-link helpers (the transfer-queue subsystem's index space)
+# --------------------------------------------------------------------------
+
+
+def link_index(src, dst, n_sites: int):
+    """Flattened directed-link id ``src * S + dst`` — the index space shared
+    by ``link_shares`` and the transfer-queue subsystem's per-link state."""
+    return jnp.asarray(src, jnp.int32) * n_sites + jnp.asarray(dst, jnp.int32)
+
+
+def link_caps(n_sites: int, default: int, overrides=None) -> jax.Array:
+    """Per-link concurrent-transfer caps as a flat ``i32[S*S]`` vector.
+
+    ``default`` applies to every directed link; ``overrides`` is either a
+    full ``[S, S]`` matrix replacing it outright or a ``{(src, dst): cap}``
+    mapping patching individual links (FTS-style per-channel limits).
+    """
+    S = n_sites
+    if overrides is not None and not isinstance(overrides, dict):
+        caps = np.asarray(overrides, np.int32)
+        if caps.shape != (S, S):
+            raise ValueError(f"link cap matrix must be [{S},{S}], got {caps.shape}")
+        return jnp.asarray(caps.reshape(-1))
+    caps = np.full((S, S), int(default), np.int32)
+    for (src, dst), c in (overrides or {}).items():
+        caps[src, dst] = int(c)
+    return jnp.asarray(caps.reshape(-1))
+
+
+# --------------------------------------------------------------------------
 # per-round bandwidth sharing
 # --------------------------------------------------------------------------
 

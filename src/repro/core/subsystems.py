@@ -37,9 +37,10 @@ trace-time ``RoundCtx``:
   capacity padding (host)    | pad_jobs(sub, state0, old_J, new_J) -> state0
 
 Hooks fire in subsystem-tuple order within each phase; the canonical order
-for the built-in trio is (availability, workflow, data), which reproduces the
-hand-written engine exactly: outage preemption before cascade-cancel, output
-materialization before replica-source selection.
+for the built-ins is (availability, workflow, data, transfers), which
+reproduces the hand-written engine exactly: outage preemption before
+cascade-cancel, output materialization before replica-source selection,
+stage-in pricing before transfer-queue diversion (DESIGN.md §11).
 """
 from __future__ import annotations
 
@@ -164,6 +165,7 @@ def resolve_subsystems(
     replicas=None,
     availability=None,
     workflow=None,
+    transfers=None,
     subsystems=(),
     jobs=None,
     sites=None,
@@ -172,10 +174,11 @@ def resolve_subsystems(
     """Normalize the engine's keyword API into ``(static tuple, ext0 dict)``.
 
     The legacy kwargs (``availability=``, ``workflow=``, ``data_policy=`` +
-    ``network=``/``replicas=``) map onto the built-in subsystems in canonical
-    order — availability, workflow, data — followed by any explicit
-    ``subsystems=((Subsystem, state0), ...)`` pairs in caller order.  Host-side
-    ``validate`` hooks run here, before anything is traced.
+    ``network=``/``replicas=``, ``transfers=``) map onto the built-in
+    subsystems in canonical order — availability, workflow, data, transfers —
+    followed by any explicit ``subsystems=((Subsystem, state0), ...)`` pairs
+    in caller order.  Host-side ``validate`` hooks run here, before anything
+    is traced.
     """
     pairs: list[tuple[Subsystem, Any]] = []
     if availability is not None:
@@ -192,6 +195,15 @@ def resolve_subsystems(
         from .datapolicies import data_subsystem
 
         pairs.append((data_subsystem(data_policy), (network, replicas)))
+    if transfers is not None:
+        if data_policy is None:
+            raise ValueError(
+                "transfers= requires the data subsystem (data_policy= with "
+                "network=/replicas=) — it owns the WAN matrices and catalog"
+            )
+        from .transfers import transfers_subsystem
+
+        pairs.append((transfers_subsystem(), transfers))
     for entry in subsystems:
         if isinstance(entry, Subsystem):
             raise TypeError(

@@ -1,0 +1,416 @@
+"""FTS-style transfer queues — queued, rate-limited WAN flows (DESIGN.md §11).
+
+PR 1's data subsystem prices every WAN stage-in instantaneously: the round
+that starts a dataset job folds ``shared_transfer_times`` into its service
+time, with bandwidth split among the transfers that happen to start in the
+same round.  Real grids funnel third-party copies through FTS channels with
+per-link *active-transfer limits*; queue-wait and link contention — not raw
+bandwidth — dominate data-access latency at scale (arxiv 2403.14903,
+1902.10069).
+
+This module models that as a pure additive :class:`~.subsystems.Subsystem`:
+
+- Each directed link ``src -> dst`` (flattened id ``src * S + dst``) owns a
+  fixed-shape FIFO ring of job ids (``i32[L, Q]``), an ``active`` counter,
+  and a ``cap`` (``max_active``).
+- When a dataset job starts on a WAN read, the data subsystem *defers* the
+  transfer here instead of pricing it: the job enters a **staging gate** —
+  it is RUNNING with ``t_finish = inf`` so it is excluded from the engine's
+  finish-time min-reduction, exactly like gated workflow children.  Its wake
+  event is the transfer completion, contributed through ``event_times``.
+- Link bandwidth splits equal-share among the *active* transfers on that
+  link only; everything past ``cap`` waits in FIFO order.  Because the
+  active set is constant between rounds, each flow's completion time is a
+  closed form and byte progress integrates exactly.
+- On completion the remaining compute (+ stage-out + WAN latency) is priced
+  into ``t_finish``, cache-on-read replicas materialize at the destination,
+  and the freed slot admits the next queued transfer.
+
+Fixed shapes and masked algebra throughout: the subsystem jit/vmaps under
+``simulate_many`` / ``simulate_many_sharded``, and ``transfers=None`` is a
+bit-for-bit no-op (static specialization removes every trace).
+
+Preempted staging jobs (availability outages) are handled with stamped
+tickets: cancelling a queued transfer leaves a tombstone in the ring that is
+garbage-collected for free when it reaches the head, and a ticket mismatch
+keeps a re-enqueued retry of the same job from being confused with its stale
+entry.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .network import link_caps
+from .types import RUNNING
+
+INF = jnp.float32(jnp.inf)
+
+# per-transfer status (one slot per job row: a job has at most one in-flight
+# transfer — its current stage-in attempt)
+T_IDLE, T_QUEUED, T_ACTIVE = 0, 1, 2
+
+
+class TransferState(NamedTuple):
+    """The transfer subsystem's ``EngineState.ext["transfers"]`` slot.
+
+    Link axis ``L = S * S`` over flattened directed links; ring axis ``Q``
+    (queue slots per link); transfer axis = the job capacity ``J``.
+    """
+
+    # per-link FIFO rings
+    queue: jax.Array    # i32[L, Q] job ids (-1 = empty slot)
+    tickets: jax.Array  # i32[L, Q] enqueue ticket stamped into each slot
+    head: jax.Array     # i32[L] ring read position
+    qlen: jax.Array     # i32[L] occupied slots from head (incl. tombstones)
+    active: jax.Array   # i32[L] transfers currently moving bytes
+    cap: jax.Array      # i32[L] max_active per link (FTS channel limit)
+    # per-transfer rows (indexed by job id)
+    stat: jax.Array     # i32[J] T_IDLE / T_QUEUED / T_ACTIVE
+    link: jax.Array     # i32[J] flattened link id (-1 = none)
+    rem: jax.Array      # f32[J] remaining bytes
+    t_done: jax.Array   # f32[J] completion time under the current share (inf
+    #                     unless active) — the subsystem's event_times source
+    resid: jax.Array    # f32[J] post-staging service remainder (compute +
+    #                     stage-out + WAN latency), priced into t_finish at release
+    enq_t: jax.Array    # f32[J] enqueue clock
+    act_t: jax.Array    # f32[J] activation clock
+    ticket: jax.Array   # i32[J] current enqueue ticket (-1 = none)
+    cache: jax.Array    # bool[J] materialize a replica at the dst on landing
+    # conservation counters (every enqueue terminates as done or cancelled)
+    n_enq: jax.Array       # i32 total transfers enqueued (also ticket counter)
+    n_done: jax.Array      # i32 transfers completed
+    n_cancel: jax.Array    # i32 transfers cancelled (staging job preempted)
+    n_overflow: jax.Array  # i32 ring-full enqueues admitted past the cap
+    bytes_enq: jax.Array     # f32 bytes enqueued
+    bytes_done: jax.Array    # f32 bytes of completed transfers (full size)
+    bytes_cancel: jax.Array  # f32 bytes of cancelled transfers (full size)
+
+
+def make_transfers(
+    n_sites: int,
+    job_capacity: int,
+    *,
+    max_active: int = 4,
+    caps=None,
+    queue_slots: int | None = None,
+) -> TransferState:
+    """Build an empty transfer-queue state.
+
+    ``n_sites`` also accepts a ``NetworkState``/``SiteState``; ``job_capacity``
+    also accepts a ``JobsState``.  ``max_active`` is the default per-link
+    concurrency cap, refined by ``caps`` (a ``{(src, dst): cap}`` mapping or a
+    full ``[S, S]`` matrix — see :func:`~.network.link_caps`).  ``queue_slots``
+    defaults to the job capacity, which can never overflow since each job
+    holds at most one in-flight transfer.
+    """
+    S = getattr(n_sites, "n_sites", None) or getattr(n_sites, "capacity", None) or int(n_sites)
+    J = getattr(job_capacity, "capacity", None) or int(job_capacity)
+    L = S * S
+    Q = int(queue_slots) if queue_slots is not None else J
+    Q = max(Q, 1)
+    return TransferState(
+        queue=jnp.full((L, Q), -1, jnp.int32),
+        tickets=jnp.full((L, Q), -1, jnp.int32),
+        head=jnp.zeros((L,), jnp.int32),
+        qlen=jnp.zeros((L,), jnp.int32),
+        active=jnp.zeros((L,), jnp.int32),
+        cap=link_caps(S, max_active, caps),
+        stat=jnp.zeros((J,), jnp.int32),
+        link=jnp.full((J,), -1, jnp.int32),
+        rem=jnp.zeros((J,), jnp.float32),
+        t_done=jnp.full((J,), jnp.inf, jnp.float32),
+        resid=jnp.zeros((J,), jnp.float32),
+        enq_t=jnp.zeros((J,), jnp.float32),
+        act_t=jnp.zeros((J,), jnp.float32),
+        ticket=jnp.full((J,), -1, jnp.int32),
+        cache=jnp.zeros((J,), bool),
+        n_enq=jnp.int32(0),
+        n_done=jnp.int32(0),
+        n_cancel=jnp.int32(0),
+        n_overflow=jnp.int32(0),
+        bytes_enq=jnp.float32(0.0),
+        bytes_done=jnp.float32(0.0),
+        bytes_cancel=jnp.float32(0.0),
+    )
+
+
+# --------------------------------------------------------------------------
+# queue mechanics (all fixed-shape [L, Q] / [J] masked algebra)
+# --------------------------------------------------------------------------
+
+
+def _link_count(mask, link, L):
+    """Per-link count of True rows (mask[J], link[J]) -> i32[L]."""
+    from .engine import _segment_sum_small
+
+    seg = jnp.where(mask, link, L)
+    return _segment_sum_small(mask.astype(jnp.int32), seg, L + 1)[:L]
+
+
+def _enqueue(ts: TransferState, want, link, nbytes, resid, cache, clock):
+    """Append the ``want`` rows to their links' FIFO rings.
+
+    Same-round enqueuers on one link are ordered by job id — they start at
+    the same instant, and the id tiebreak matches the engine's start-order
+    sort.  Returns ``(ts, depth)`` where ``depth[J]`` is the number of ring
+    entries ahead of each enqueued row (its queue position at entry).
+
+    Ring-full safety valve: if a link's ring has no room (only possible when
+    ``queue_slots`` was shrunk below the job capacity), the transfer
+    activates immediately, bypassing the cap, and ``n_overflow`` counts it.
+    """
+    from .engine import _segment_exclusive_base
+
+    L, Q = ts.queue.shape[-2], ts.queue.shape[-1]
+    J = want.shape[-1]
+    idx = jnp.arange(J, dtype=jnp.int32)
+    lc = jnp.clip(link, 0, L - 1)
+    seg = jnp.where(want, lc, L)
+    order = jnp.argsort(seg, stable=True)
+    incl = _segment_exclusive_base(want[order].astype(jnp.int32), seg[order], L + 1)
+    rank = jnp.zeros((J,), jnp.int32).at[order].set(incl - want[order].astype(jnp.int32))
+    depth = ts.qlen[lc] + rank                   # entries ahead at enqueue time
+    room = want & (depth < Q)
+    slot = (ts.head[lc] + depth) % Q
+    # unique ticket per enqueue event: running counter + within-round rank
+    grank = jnp.cumsum(want.astype(jnp.int32)) - want.astype(jnp.int32)
+    tkt = ts.n_enq + grank
+    tgt = jnp.where(room, lc * Q + slot, L * Q)  # OOB rows dropped by the scatter
+    queue = ts.queue.reshape(L * Q).at[tgt].set(idx, mode="drop").reshape(L, Q)
+    tickets = ts.tickets.reshape(L * Q).at[tgt].set(tkt, mode="drop").reshape(L, Q)
+    ovf = want & ~room
+    return ts._replace(
+        queue=queue,
+        tickets=tickets,
+        qlen=ts.qlen + _link_count(room, lc, L),
+        active=ts.active + _link_count(ovf, lc, L),
+        stat=jnp.where(room, T_QUEUED, jnp.where(ovf, T_ACTIVE, ts.stat)),
+        link=jnp.where(want, lc, ts.link),
+        rem=jnp.where(want, nbytes, ts.rem),
+        resid=jnp.where(want, resid, ts.resid),
+        enq_t=jnp.where(want, clock, ts.enq_t),
+        act_t=jnp.where(want, clock, ts.act_t),  # re-stamped on admission
+        ticket=jnp.where(want, tkt, ts.ticket),
+        cache=jnp.where(want, cache, ts.cache),
+        n_enq=ts.n_enq + want.sum().astype(jnp.int32),
+        n_overflow=ts.n_overflow + ovf.sum().astype(jnp.int32),
+        bytes_enq=ts.bytes_enq + jnp.where(want, nbytes, 0.0).sum(),
+    ), depth
+
+
+def _admit(ts: TransferState, clock):
+    """Pop each link's FIFO into the free ``cap - active`` slots.
+
+    A ring entry is *live* iff the job it names is still T_QUEUED under the
+    same ticket; stale entries (cancelled by preemption, then possibly
+    re-enqueued under a new ticket) are tombstones and pop for free — even
+    at zero budget — so they can never wedge a queue.
+    """
+    L, Q = ts.queue.shape[-2], ts.queue.shape[-1]
+    J = ts.stat.shape[-1]
+    off = jnp.arange(Q, dtype=jnp.int32)[None, :]
+    pos = (ts.head[:, None] + off) % Q
+    ent = jnp.take_along_axis(ts.queue, pos, axis=-1)
+    tkt = jnp.take_along_axis(ts.tickets, pos, axis=-1)
+    in_q = off < ts.qlen[:, None]
+    ec = jnp.clip(ent, 0, J - 1)
+    live = in_q & (ent >= 0) & (ts.stat[ec] == T_QUEUED) & (ts.ticket[ec] == tkt)
+    vcum = jnp.cumsum(live.astype(jnp.int32), axis=-1)
+    budget = jnp.maximum(ts.cap - ts.active, 0)[:, None]
+    popped = in_q & (vcum <= budget)  # contiguous head prefix: tombstones ride along
+    admit = popped & live
+    ids = jnp.where(admit, ec, J).reshape(-1)
+    go = jnp.zeros((J + 1,), bool).at[ids].set(True)[:J]
+    n_pop = popped.sum(-1).astype(jnp.int32)
+    return ts._replace(
+        head=(ts.head + n_pop) % Q,
+        qlen=ts.qlen - n_pop,
+        active=ts.active + admit.sum(-1).astype(jnp.int32),
+        stat=jnp.where(go, T_ACTIVE, ts.stat),
+        act_t=jnp.where(go, clock, ts.act_t),
+    )
+
+
+def _reprice(ts: TransferState, bw_flat, clock):
+    """Materialize each active flow's completion time under the current
+    equal-share split.  The active sets only change at rounds, so this is
+    exact — and it is the invariant ``event_times`` reads."""
+    L = bw_flat.shape[-1]
+    lc = jnp.clip(ts.link, 0, L - 1)
+    act = ts.stat == T_ACTIVE
+    rate = bw_flat[lc] / jnp.maximum(ts.active[lc], 1).astype(jnp.float32)
+    t_done = clock + ts.rem / jnp.maximum(rate, 1e-9)
+    return ts._replace(t_done=jnp.where(act, t_done, INF))
+
+
+# --------------------------------------------------------------------------
+# Subsystem hooks
+# --------------------------------------------------------------------------
+
+
+def _tr_init(sub, state0, jobs, sites):
+    if jobs is not None and state0.stat.shape[-1] != jobs.capacity:
+        raise ValueError(
+            f"TransferState sized for {state0.stat.shape[-1]} jobs, "
+            f"got capacity {jobs.capacity}; build with make_transfers(S, jobs)"
+        )
+    if sites is not None and state0.cap.shape[-1] != sites.capacity**2:
+        raise ValueError(
+            f"TransferState has {state0.cap.shape[-1]} links, "
+            f"expected S*S = {sites.capacity**2}"
+        )
+    return state0
+
+
+def _tr_event_times(sub, ctx):
+    """Transfer completions join the round clock: the staging gate's wake."""
+    return ctx.ext["transfers"].t_done.min()
+
+
+def _tr_on_completions(sub, ctx):
+    """Engine step 2b: integrate byte progress over the elapsed interval,
+    release jobs whose transfer landed (pricing the post-staging remainder
+    into ``t_finish``), cancel transfers whose staging job was preempted,
+    then admit queued flows into the freed slots."""
+    from .datapolicies import land_deferred
+
+    ts: TransferState = ctx.ext["transfers"]
+    dext = ctx.ext.get("data")
+    if dext is None:
+        return
+    jobs, S, J = ctx.jobs, ctx.S, ctx.J
+    L = S * S
+    bw_flat = dext.network.bw.reshape(L)
+    lc = jnp.clip(ts.link, 0, L - 1)
+    act = ts.stat == T_ACTIVE
+
+    # byte progress: the active set (and so each flow's share) was constant
+    # over [clock_prev, clock]
+    dt = jnp.maximum(ctx.clock - ctx.clock_prev, 0.0)
+    rate = bw_flat[lc] / jnp.maximum(ts.active[lc], 1).astype(jnp.float32)
+    rem = jnp.where(act, jnp.maximum(ts.rem - rate * dt, 0.0), ts.rem)
+
+    # a preempted staging job (availability outage moved it out of RUNNING
+    # in this same hook phase — availability runs first) abandons its
+    # transfer; its ring entry becomes a tombstone
+    staging = jobs.state == RUNNING
+    fin = act & (ts.t_done <= ctx.clock) & staging
+    cancel = (ts.stat > T_IDLE) & ~staging
+
+    # release: price the post-staging remainder into t_finish so the job
+    # rejoins the round clock.  The engine's partial-failure fraction was
+    # consumed by the staging gate's inf, so failing attempts re-draw it
+    # from the subsystem's own RNG stream.
+    frac = jax.random.uniform(ctx.subkey("transfers"), (J,), minval=0.05, maxval=1.0)
+    t_rest = jnp.where(jobs.will_fail, ts.resid * frac, ts.resid)
+    ctx.jobs = jobs._replace(
+        t_finish=jnp.where(fin, ctx.clock + t_rest, jobs.t_finish),
+        xfer_time=jnp.where(fin, ctx.clock - ts.act_t, jobs.xfer_time),
+        xfer_wait=jnp.where(fin, ts.act_t - ts.enq_t, jobs.xfer_wait),
+    )
+    # deferred landing: replica materialization + WAN counters at the dst
+    ctx.ext["data"] = land_deferred(dext, ctx.jobs, fin, ts.cache, ctx.clock, S)
+
+    clear = fin | cancel
+    ts = ts._replace(
+        stat=jnp.where(clear, T_IDLE, ts.stat),
+        rem=jnp.where(clear, 0.0, rem),
+        t_done=jnp.where(clear, INF, ts.t_done),
+        active=ts.active - _link_count(fin | (cancel & act), lc, L),
+        n_done=ts.n_done + fin.sum().astype(jnp.int32),
+        n_cancel=ts.n_cancel + cancel.sum().astype(jnp.int32),
+        bytes_done=ts.bytes_done + jnp.where(fin, jobs.xfer_bytes, 0.0).sum(),
+        bytes_cancel=ts.bytes_cancel + jnp.where(cancel, jobs.xfer_bytes, 0.0).sum(),
+    )
+    ts = _admit(ts, ctx.clock)
+    ctx.ext["transfers"] = _reprice(ts, bw_flat, ctx.clock)
+    ctx.progressed = ctx.progressed | fin.any() | cancel.any()
+
+
+def _tr_on_start(sub, ctx):
+    """Engine step 5b, after the data subsystem: divert this round's WAN
+    reads (staged in ``ctx.scratch['transfers']``) into the link queues and
+    hold the jobs in the staging gate (``t_serv = inf``)."""
+    ts: TransferState = ctx.ext["transfers"]
+    dext = ctx.ext.get("data")
+    if dext is None:
+        return
+    L = ctx.S * ctx.S
+    sc = ctx.scratch.get("transfers")
+    if sc is not None:
+        xfer = sc["xfer"]
+        # staging gate: inf service time keeps t_finish = inf, excluding the
+        # job from the clock min-reduction until its transfer lands
+        ctx.t_serv = jnp.where(xfer, INF, ctx.t_serv)
+        ts, depth = _enqueue(ts, xfer, sc["link"], sc["bytes"], sc["resid"], sc["cache"], ctx.clock)
+        ctx.jobs = ctx.jobs._replace(
+            xfer_qdepth=jnp.where(xfer, depth, ctx.jobs.xfer_qdepth),
+            xfer_wait=jnp.where(xfer, 0.0, ctx.jobs.xfer_wait),
+        )
+    # newly enqueued flows activate now if their link has free slots —
+    # required for liveness: an uncontended transfer must create its own
+    # wake event this same round
+    ts = _admit(ts, ctx.clock)
+    ctx.ext["transfers"] = _reprice(ts, dext.network.bw.reshape(L), ctx.clock)
+
+
+def _tr_log_spec(sub, ts: TransferState, jobs, sites):
+    L = ts.cap.shape[-1]
+    zeros = jnp.zeros((L,), jnp.int32)
+    return {"link_active": zeros, "link_queued": zeros}
+
+
+def _tr_log_columns(sub, ctx, write):
+    ts: TransferState = ctx.ext["transfers"]
+    L = ts.cap.shape[-1]
+    queued = _link_count(ts.stat == T_QUEUED, jnp.clip(ts.link, 0, L - 1), L)
+    return {"link_active": ts.active, "link_queued": queued}
+
+
+def _tr_pad_jobs(sub, ts: TransferState, old_cap: int, new_cap: int):
+    n = new_cap - old_cap
+    fills = {
+        "stat": T_IDLE, "link": -1, "rem": 0.0, "t_done": jnp.inf, "resid": 0.0,
+        "enq_t": 0.0, "act_t": 0.0, "ticket": -1, "cache": False,
+    }
+
+    def pad(name, x):
+        if name not in fills:
+            return x
+        widths = [(0, 0)] * (x.ndim - 1) + [(0, n)]
+        return jnp.pad(x, widths, constant_values=fills[name])
+
+    out = ts._replace(**{k: pad(k, getattr(ts, k)) for k in fills})
+    # default-sized rings (Q == job capacity) grow with it, keeping the
+    # no-overflow guarantee and a stackable shape across ragged lanes;
+    # explicit queue_slots are left alone (pre-run rings are empty, so
+    # widening never disturbs ring arithmetic)
+    if ts.queue.shape[-1] == old_cap:
+        widths = [(0, 0)] * (ts.queue.ndim - 1) + [(0, n)]
+        out = out._replace(
+            queue=jnp.pad(ts.queue, widths, constant_values=-1),
+            tickets=jnp.pad(ts.tickets, widths, constant_values=-1),
+        )
+    return out
+
+
+def transfers_subsystem() -> "Subsystem":
+    """The transfer-queue engine plugin.  Initial state is a
+    :class:`TransferState` from :func:`make_transfers`; requires the data
+    subsystem (it owns the network matrices and the replica catalog)."""
+    from .subsystems import Subsystem
+
+    return Subsystem(
+        name="transfers",
+        config=None,
+        init=_tr_init,
+        event_times=_tr_event_times,
+        on_completions=_tr_on_completions,
+        on_start=_tr_on_start,
+        log_spec=_tr_log_spec,
+        log_columns=_tr_log_columns,
+        pad_jobs=_tr_pad_jobs,
+    )

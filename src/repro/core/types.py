@@ -50,6 +50,8 @@ class JobsState(NamedTuple):
     xfer_src: jax.Array   # i32[J] replica site the last stage-in read from (-1 none)
     xfer_bytes: jax.Array  # f32[J] WAN bytes moved by the last stage-in (0 = cache hit)
     xfer_time: jax.Array  # f32[J] stage-in duration of the last attempt
+    xfer_wait: jax.Array  # f32[J] transfer queue-wait of the last attempt (0 = never queued)
+    xfer_qdepth: jax.Array  # i32[J] link-queue depth seen at enqueue (-1 = never enqueued)
     preempted: jax.Array  # i32[J] attempts cut short by site outages (DESIGN.md §5)
     wf_id: jax.Array      # i32[J] workflow the job belongs to, -1 = standalone
     n_parents: jax.Array  # i32[J] number of DAG parents (0 = root / standalone)
@@ -211,6 +213,8 @@ def make_jobs(
         xfer_src=jnp.full((cap,), -1, jnp.int32),
         xfer_bytes=jnp.zeros((cap,), jnp.float32),
         xfer_time=jnp.zeros((cap,), jnp.float32),
+        xfer_wait=jnp.zeros((cap,), jnp.float32),
+        xfer_qdepth=jnp.full((cap,), -1, jnp.int32),
         preempted=jnp.zeros((cap,), jnp.int32),
         wf_id=pad_i(wf_id, -1),
         n_parents=pad_i(n_parents),
@@ -228,7 +232,7 @@ def make_jobs(
 JOB_PAD_FILLS = dict(
     job_id=-1, arrival=float("inf"), state=DONE, site=-1, t_assign=float("inf"),
     t_start=float("inf"), t_finish=float("inf"), valid=False, dataset=-1,
-    xfer_src=-1, wf_id=-1, out_dataset=-1, cores=1,
+    xfer_src=-1, xfer_qdepth=-1, wf_id=-1, out_dataset=-1, cores=1,
 )
 
 

@@ -310,9 +310,10 @@ def test_transfer_rows_export_roundtrip():
     res = run_with("cache_on_read", jobs, sites, net, rep)
     rows = transfer_rows(res)
     assert len(rows) == 32  # one stage-in per dataset-carrying job
-    assert {"time", "job_id", "dataset", "src", "dst", "bytes", "duration", "cache_hit"} == set(
-        rows[0]
-    )
+    assert {"time", "job_id", "dataset", "src", "dst", "bytes", "duration", "cache_hit",
+            "queue_wait", "queue_depth"} == set(rows[0])
+    # transfers-off runs carry the inert defaults in the new columns
+    assert all(r["queue_wait"] == 0.0 and r["queue_depth"] == -1 for r in rows)
     times = [r["time"] for r in rows]
     assert times == sorted(times)
     moved = sum(r["bytes"] for r in rows)

@@ -27,6 +27,7 @@ from repro.core import (
     get_policy,
     make_availability,
     make_replicas,
+    make_transfers,
     make_workflow,
     simulate,
     synthetic_panda_jobs,
@@ -119,6 +120,16 @@ def _snapshot_combo(res) -> dict:
         if wf is not None
         else None
     )
+    # transfer-queue counters only appear when the subsystem ran, so the
+    # pre-transfers combo rows keep their exact committed shape
+    ts = (getattr(res, "ext", None) or {}).get("transfers")
+    if ts is not None:
+        snap["transfers"] = dict(
+            n_enq=int(ts.n_enq),
+            n_done=int(ts.n_done),
+            n_cancel=int(ts.n_cancel),
+            bytes_done=float(ts.bytes_done),
+        )
     return snap
 
 
@@ -191,6 +202,16 @@ def compute_matrix_snapshot() -> dict:
         ) or "plain"
         jobs, kw = combo_kwargs(scn, data, avail, wf)
         out[name] = _snapshot_combo(simulate(jobs, scn["sites"], pol, key, **kw))
+    # transfer-queue combos (ISSUE 8): the queued WAN model rides on the data
+    # subsystem, so only the data-on half of the matrix composes with it
+    for avail, wf in itertools.product((False, True), repeat=2):
+        name = "+".join(
+            n for n, on in (("data", True), ("tr", True), ("avail", avail), ("wf", wf))
+            if on
+        )
+        jobs, kw = combo_kwargs(scn, True, avail, wf)
+        kw["transfers"] = make_transfers(4, jobs.capacity, max_active=2)
+        out[name] = _snapshot_combo(simulate(jobs, scn["sites"], pol, key, **kw))
     return out
 
 
@@ -210,12 +231,20 @@ def test_golden_matrix_is_sensitive():
     expected = json.loads(GOLDEN_MATRIX.read_text())
     assert set(expected) == {
         "plain", "data", "avail", "wf", "data+avail", "data+wf", "avail+wf",
-        "data+avail+wf",
+        "data+avail+wf", "data+tr", "data+tr+avail", "data+tr+wf",
+        "data+tr+avail+wf",
     }
     # availability preempts; data moves bytes; the coupled combo materializes
     assert sum(expected["avail"]["n_preempted"]) > 0
     assert expected["data"]["data"]["n_transfers"] > 0
     assert expected["data+avail+wf"]["workflow"]["n_produced"] > 0
+    # the transfer queue actually carried flows, and accounts for all of them
+    for name in ("data+tr", "data+tr+avail", "data+tr+wf", "data+tr+avail+wf"):
+        ts = expected[name]["transfers"]
+        assert ts["n_enq"] > 0
+        assert ts["n_enq"] == ts["n_done"] + ts["n_cancel"]
+    # transfers-off rows never grow the counter block
+    assert "transfers" not in expected["data"]
     # subsystems genuinely interact: no two combos collapse to the same run
     spans = {k: (v["makespan"], v["rounds"]) for k, v in expected.items()}
     assert len(set(spans.values())) == len(spans)

@@ -25,12 +25,14 @@ from repro.core import (
     make_jobs,
     make_replicas,
     make_sites,
+    make_transfers,
     make_workflow,
     simulate,
     uniform_network,
     zipf_dataset_sizes,
 )
 from repro.core.events import transition_rows
+from repro.core.monitor import link_occupancy_timeline
 
 POLICIES = ["random", "round_robin", "least_loaded", "shortest_wait", "panda_dispatch"]
 
@@ -133,7 +135,8 @@ def test_determinism_same_key(seed, frac):
 N_SITES = 4  # fixed shape: hypothesis varies values, not compile shapes
 
 
-def build_scenario(n_jobs, seed, policy, *, fail_rate, with_avail, with_data):
+def build_scenario(n_jobs, seed, policy, *, fail_rate, with_avail, with_data,
+                   with_transfers=False, max_active=2, **sim_kw):
     """Random-but-terminating scenario: sites always feasible, every outage
     window finite, so each valid job must end DONE or FAILED."""
     rng = np.random.default_rng(seed)
@@ -183,7 +186,9 @@ def build_scenario(n_jobs, seed, policy, *, fail_rate, with_avail, with_data):
             disk_capacity=np.array([1e12] + [2.5e9] * (N_SITES - 1)),
             origin=np.zeros(8, np.int32),
         )
-    res = simulate(jobs, sites, get_policy(policy), jax.random.PRNGKey(seed), **kw)
+    if with_transfers:
+        kw["transfers"] = make_transfers(N_SITES, n_jobs + 3, max_active=max_active)
+    res = simulate(jobs, sites, get_policy(policy), jax.random.PRNGKey(seed), **kw, **sim_kw)
     return res, jobs, sites, kw
 
 
@@ -263,6 +268,61 @@ def test_conservation_laws_with_data_policy(n_jobs, seed, with_avail):
         n_jobs, seed, "round_robin", fail_rate=0.1, with_avail=with_avail, with_data=True
     )
     assert_conservation_laws(res, jobs0, sites0)
+
+
+_XFER_LOG_ROWS = 4096  # plenty: rounds ~ O(jobs * retries), far below this
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    n_jobs=st.integers(10, 48),
+    seed=st.integers(0, 2**16),
+    cap=st.integers(1, 4),
+    fail_rate=st.sampled_from([0.0, 0.2]),
+    with_avail=st.booleans(),
+)
+def test_transfer_conservation_laws(n_jobs, seed, cap, fail_rate, with_avail):
+    """Transfer-queue invariants (ISSUE 8): every enqueue is accounted as a
+    completion or a cancellation (in flows and in bytes), the overflow valve
+    never fires at default ring sizing, queues fully drain by termination,
+    and per-link occupancy never exceeds the cap at any logged round."""
+    res, jobs0, sites0, kw = build_scenario(
+        n_jobs, seed, "least_loaded", fail_rate=fail_rate,
+        with_avail=with_avail, with_data=True, with_transfers=True,
+        max_active=cap, log_rows=_XFER_LOG_ROWS,
+    )
+    assert_conservation_laws(res, jobs0, sites0)
+
+    ts = res.ext["transfers"]
+    n_enq = int(ts.n_enq)
+    n_done = int(ts.n_done)
+    n_cancel = int(ts.n_cancel)
+    # flow accounting: enqueues == completions + cancellations, no overflow
+    assert n_enq == n_done + n_cancel
+    assert int(ts.n_overflow) == 0
+    np.testing.assert_allclose(
+        float(ts.bytes_enq), float(ts.bytes_done) + float(ts.bytes_cancel), rtol=1e-4
+    )
+    # without failures or outages nothing ever interrupts a staging job
+    if fail_rate == 0.0 and not with_avail:
+        assert n_cancel == 0
+    # queues drain: no transfer left queued or active, all slots released
+    assert (np.asarray(ts.stat) == 0).all()
+    assert (np.asarray(ts.active) == 0).all()
+    assert (np.asarray(ts.qlen) == 0).all()
+    # per-link occupancy respects the cap at every logged round; the log
+    # ring did not wrap, so this covers the whole run
+    assert int(np.asarray(res.log.cursor)) <= _XFER_LOG_ROWS
+    occ = link_occupancy_timeline(res)
+    caps = np.asarray(ts.cap, dtype=np.float64).reshape(N_SITES, N_SITES)
+    assert (occ <= caps[None, :, :] + 1e-9).all()
+    # DONE jobs that actually moved bytes carry a finite, non-negative wait
+    valid = np.asarray(res.jobs.valid)
+    moved = valid & (np.asarray(res.jobs.state) == DONE) & (
+        np.asarray(res.jobs.xfer_bytes) > 0
+    )
+    waits = np.asarray(res.jobs.xfer_wait)[moved]
+    assert np.isfinite(waits).all() and (waits >= 0.0).all()
 
 
 # --------------------------------------------------------------------------
