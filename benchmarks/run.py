@@ -28,6 +28,7 @@ from . import (
     bench_job_scaling,
     bench_site_scaling,
     bench_transfers,
+    bench_wlcg_scale,
     bench_workflow,
 )
 
@@ -44,6 +45,7 @@ SUITES = {
     "transfers": bench_transfers.main,
     "availability": bench_availability.main,
     "workflow": bench_workflow.main,
+    "wlcg_scale": bench_wlcg_scale.main,
 }
 
 

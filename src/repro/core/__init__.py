@@ -141,6 +141,7 @@ from .policies import (  # noqa: F401
     make_policy,
     register,
     with_capacity_assign,
+    with_fused_assign,
 )
 from .workload import (  # noqa: F401
     flaky_sites,
@@ -150,6 +151,7 @@ from .workload import (  # noqa: F401
     rolling_brownout,
     synthetic_panda_jobs,
 )
+from .sparse import build_candidates, bytes_per_round, static_feasibility  # noqa: F401
 from .metrics import Metrics, compute_metrics, summary_str  # noqa: F401
 from .events import read_ml_trace, recorded_trace, stream_rows, write_ml_dataset  # noqa: F401
 from .calibration import (  # noqa: F401

@@ -94,25 +94,51 @@ def service_time(
     )
 
 
+@functools.lru_cache(maxsize=None)
+def _int_segment_sum(num_segments: int):
+    """Integer ``segment_sum`` that picks its lowering by batching context.
+
+    Solo runs use the native scatter-add — O(J) work and O(J) memory, which
+    matters at WLCG scale where a one-hot ``[J, S+1]`` intermediate is ~100MB+
+    per call.  Under ``vmap`` (ensembles) the ``def_vmap`` rule switches to a
+    one-hot contraction: on CPU a *batched* scatter is the single most
+    expensive op in an ensemble round (~6x a one-hot matmul at K=16, J=320 —
+    DESIGN.md §8).  Integer sums are exact in any reduction order, so the two
+    lowerings are bit-for-bit identical in every context.
+    """
+
+    @jax.custom_batching.custom_vmap
+    def seg_sum(values: jax.Array, seg: jax.Array) -> jax.Array:
+        return jax.ops.segment_sum(values, seg, num_segments=num_segments)
+
+    @seg_sum.def_vmap
+    def _seg_sum_batched(axis_size, in_batched, values, seg):
+        vb, sb = in_batched
+        if not vb:
+            values = jnp.broadcast_to(values, (axis_size,) + values.shape)
+        if not sb:
+            seg = jnp.broadcast_to(seg, (axis_size,) + seg.shape)
+        onehot = (seg[..., None] == jnp.arange(num_segments, dtype=seg.dtype)).astype(
+            values.dtype
+        )
+        return jnp.einsum("...j,...js->...s", values, onehot), True
+
+    return seg_sum
+
+
 def _segment_sum_small(values: jax.Array, seg: jax.Array, num_segments: int) -> jax.Array:
     """``segment_sum`` specialized for the engine's few-segment reductions.
 
-    Integer (and bool) values go through a one-hot contraction instead of the
-    scatter-add that ``segment_sum`` lowers to: on CPU a *batched* scatter is
-    the single most expensive op in an ensemble round (~6x a one-hot matmul
-    at K=16, J=320 — DESIGN.md §8), while integer sums are exact in any
-    reduction order, so the contraction is bit-for-bit identical in every
-    context.  Float values keep ``segment_sum``'s sequential accumulation
-    order — reordering float adds would shift low bits and break the golden
-    traces.
+    Integer (and bool) values dispatch through ``_int_segment_sum`` — a
+    scatter-add solo and a one-hot contraction under ``vmap`` (both exact for
+    ints, so bit-for-bit identical).  Float values keep ``segment_sum``'s
+    sequential accumulation order — reordering float adds would shift low
+    bits and break the golden traces.
     """
     if jnp.issubdtype(values.dtype, jnp.integer) or values.dtype == jnp.bool_:
         # bool saturates under einsum (logical OR), so count in int32
         values = values.astype(jnp.int32) if values.dtype == jnp.bool_ else values
-        onehot = (seg[..., None] == jnp.arange(num_segments, dtype=seg.dtype)).astype(
-            values.dtype
-        )
-        return jnp.einsum("...j,...js->...s", values, onehot)
+        return _int_segment_sum(num_segments)(values, seg)
     return jax.ops.segment_sum(values, seg, num_segments=num_segments)
 
 
@@ -124,6 +150,40 @@ def _site_sum(values: jax.Array, site: jax.Array, num_sites: int) -> jax.Array:
     pressure columns all reduce job rows to per-site totals this way.
     """
     return _segment_sum_small(values, site, num_sites + 1)[:num_sites]
+
+
+@functools.lru_cache(maxsize=None)
+def _int_segment_sum_stacked(num_segments: int):
+    """``_int_segment_sum`` for feature-stacked int values ``[J, F] -> [seg, F]``.
+
+    One scatter pass over J for F columns sharing segment ids, instead of F
+    separate passes — the completion and start phases each fold their integer
+    per-site reductions through this (integer adds are order-exact, so the
+    stacking is bit-for-bit identical to the separate calls it replaces).
+    """
+
+    @jax.custom_batching.custom_vmap
+    def seg_sum(values: jax.Array, seg: jax.Array) -> jax.Array:
+        return jax.ops.segment_sum(values, seg, num_segments=num_segments)
+
+    @seg_sum.def_vmap
+    def _seg_sum_batched(axis_size, in_batched, values, seg):
+        vb, sb = in_batched
+        if not vb:
+            values = jnp.broadcast_to(values, (axis_size,) + values.shape)
+        if not sb:
+            seg = jnp.broadcast_to(seg, (axis_size,) + seg.shape)
+        onehot = (seg[..., None] == jnp.arange(num_segments, dtype=seg.dtype)).astype(
+            values.dtype
+        )
+        return jnp.einsum("...jf,...js->...sf", values, onehot), True
+
+    return seg_sum
+
+
+def _site_sum_stacked(values: jax.Array, site: jax.Array, num_sites: int) -> jax.Array:
+    """``_site_sum`` over int features stacked in the trailing axis ``[J, F]``."""
+    return _int_segment_sum_stacked(num_sites + 1)(values, site)[:num_sites]
 
 
 # Below this job capacity a *solo* run computes the start order by pairwise
@@ -193,6 +253,53 @@ def _start_order_batched(axis_size, in_batched, sort_site, priority, rank_val, a
 
 
 @jax.custom_batching.custom_vmap
+def _start_order_packed(packed: jax.Array) -> jax.Array:
+    """Start-order permutation from a single strict-total-order i32 key.
+
+    The packed key is ``sort_site * J + srank`` where ``srank`` is the
+    (init-time) rank of each job under ``(-priority, arrival, index)`` — a
+    bijection onto ``[0, J)``, so the packed keys are all distinct and *any*
+    sort yields the identical permutation ``_start_order`` computes with its
+    5-level lexsort.  One single-key argsort per round instead of a 5-key
+    lexsort is the difference between the sort dominating and vanishing from
+    the per-round profile at J=100k (DESIGN.md §12).  Only valid while
+    priority/arrival are run-constant (nothing in the engine or the stock
+    subsystems mutates them) and the policy has no dynamic ``rank`` fn.
+    ``stable=False`` is safe for the same reason any sort is: distinct keys
+    admit exactly one sorted permutation.
+    """
+    return jnp.argsort(packed, stable=False).astype(jnp.int32)
+
+
+@_start_order_packed.def_vmap
+def _start_order_packed_batched(axis_size, in_batched, packed):
+    """Batched packed order: ONE lane-major flattened 2-key lexsort, same
+    construction as ``_start_order_batched`` (lane id most significant)."""
+    K = axis_size
+    p = packed if in_batched[0] else jnp.broadcast_to(packed, (K,) + packed.shape)
+    J = p.shape[-1]
+    lane = jnp.broadcast_to(jnp.arange(K, dtype=jnp.int32)[:, None], (K, J)).reshape(-1)
+    perm = jnp.lexsort((p.reshape(-1), lane))
+    order = perm.reshape(K, J).astype(jnp.int32) - (jnp.arange(K, dtype=jnp.int32) * J)[:, None]
+    return order, True
+
+
+def _static_start_rank(jobs) -> jax.Array:
+    """``i32[J]``: rank of each job under ``(-priority, arrival, index)`` —
+    the run-constant suffix of the start-order key (see ``_start_order_packed``)."""
+    J = jobs.capacity
+    perm = jnp.lexsort((jnp.arange(J), jobs.arrival, -jobs.priority))
+    return jnp.zeros((J,), jnp.int32).at[perm].set(jnp.arange(J, dtype=jnp.int32))
+
+
+def _packed_order_ok(policy, J: int, S: int) -> bool:
+    """Static predicate: can this run use the packed single-key start order?
+    Needs a rank-less policy (dynamic ranks change the key mid-run) and the
+    packed key ``site * J + srank`` to fit int32 (site spans [0, S])."""
+    return getattr(policy, "rank", None) is None and (S + 1) * J <= 2**31 - 1
+
+
+@jax.custom_batching.custom_vmap
 def _ensemble_any(pred: jax.Array) -> jax.Array:
     """Identity on a scalar bool — except under ``vmap``, where it reduces to
     a single *unbatched* ``any`` over the whole batch.
@@ -234,6 +341,24 @@ def default_assign(scores: jax.Array, queued: jax.Array, feasible: jax.Array, si
     return jnp.where(ok, best, -1), ok
 
 
+def default_assign_cand(scores_k, queued, feas_k, cand, sites=None):
+    """Candidate-set analogue of ``default_assign`` (DESIGN.md §12).
+
+    ``scores_k``/``feas_k`` are ``[J, K]`` over the candidate index ``cand``
+    (clamped site ids, ascending per row).  Because candidates are sorted
+    ascending, the slot argmax picks the lowest site id among score ties —
+    the same tie-break ``jnp.argmax`` applies over the dense ``[J, S]`` row,
+    so ``topk=S`` matches the dense path bit-for-bit.
+    """
+    neg = jnp.float32(-jnp.inf)
+    masked = jnp.where(feas_k, scores_k, neg)
+    best_c = jnp.argmax(masked, axis=-1)
+    best_val = jnp.max(masked, axis=-1)
+    site = jnp.take_along_axis(cand, best_c[:, None], axis=-1)[..., 0].astype(jnp.int32)
+    ok = queued & jnp.isfinite(best_val)
+    return jnp.where(ok, site, -1), ok
+
+
 def _init_state(
     jobs0: JobsState,
     sites0: SiteState,
@@ -242,6 +367,7 @@ def _init_state(
     ext0: dict,
     subsystems: tuple,
     log_rows: int,
+    topk: int | None = None,
 ) -> EngineState:
     """Build the round-loop carry: run policy/subsystem init hooks, allocate
     the frame ring buffer, seat the extension states."""
@@ -250,6 +376,18 @@ def _init_state(
     for sub in subsystems:
         if sub.init is not None:
             ext0[sub.name] = sub.init(sub, ext0[sub.name], jobs0, sites0)
+    if topk is not None:
+        # sparse-mode candidate index (DESIGN.md §12): engine-internal carry
+        # keys start with "~" and are dropped from SimResult.ext in _finalize
+        from .sparse import CAND_SALT, build_candidates
+
+        ext0["~cand"] = build_candidates(
+            jobs0, sites0, policy, policy_state0, jnp.float32(0.0),
+            jax.random.fold_in(rng, CAND_SALT), ext0, topk,
+        )
+    if _packed_order_ok(policy, jobs0.capacity, sites0.capacity):
+        # run-constant start-order key suffix (see _start_order_packed)
+        ext0["~srank"] = _static_start_rank(jobs0)
     log_extra0 = {}
     for sub in subsystems:
         if sub.log_spec is not None:
@@ -278,6 +416,8 @@ def _round_fns(
     monitor_every: int,
     quantum: float,
     phase_skip: bool,
+    topk: int | None = None,
+    topk_refresh: int = 0,
 ):
     """Build the engine while-loop's ``(cond, body)`` pair for one static
     configuration.  ``cond`` takes the horizon as a second (traced) argument
@@ -340,12 +480,25 @@ def _round_fns(
             if sub.completion_filter is not None:
                 comp = sub.completion_filter(sub, ctx, comp)
         comp_site = jnp.where(comp, jobs.site, S)  # padded segment for non-events
-        freed_cores = _site_sum(jnp.where(comp, jobs.cores, 0), comp_site, S)
         freed_mem = _site_sum(jnp.where(comp, jobs.memory, 0.0), comp_site, S)
         failed_now = comp & jobs.will_fail
         resubmit = failed_now & (jobs.retries < max_retries)
         perm_fail = failed_now & ~resubmit
         done_now = comp & ~jobs.will_fail
+        # one stacked scatter for the three int per-site completion reductions
+        comp_sums = _site_sum_stacked(
+            jnp.stack(
+                [
+                    jnp.where(comp, jobs.cores, 0),
+                    done_now.astype(jnp.int32),
+                    failed_now.astype(jnp.int32),
+                ],
+                axis=-1,
+            ),
+            comp_site,
+            S,
+        )
+        freed_cores = comp_sums[..., 0]
 
         new_state = jobs.state
         new_state = jnp.where(done_now, DONE, new_state)
@@ -360,10 +513,8 @@ def _round_fns(
         sites = sites._replace(
             free_cores=sites.free_cores + freed_cores,
             free_memory=sites.free_memory + freed_mem,
-            n_finished=sites.n_finished
-            + _site_sum(done_now.astype(jnp.int32), comp_site, S),
-            n_failed=sites.n_failed
-            + _site_sum(failed_now.astype(jnp.int32), comp_site, S),
+            n_finished=sites.n_finished + comp_sums[..., 1],
+            n_failed=sites.n_failed + comp_sums[..., 2],
         )
         ctx.jobs, ctx.sites = jobs, sites
         ctx.comp, ctx.done_now, ctx.failed_now = comp, done_now, failed_now
@@ -387,12 +538,38 @@ def _round_fns(
 
         # ---- 4+5. assignment & starts -----------------------------------------
         queued = jobs.state == QUEUED
-        # static feasibility: job can ever fit the site
-        ctx.feasible = (
-            sites.active[None, :]
-            & (jobs.cores[:, None] <= sites.cores[None, :])
-            & (jobs.memory[:, None] <= sites.memory[None, :])
-        )
+        if topk is not None and topk_refresh > 0:
+            # periodic candidate rebuild (DESIGN.md §12): O(J*S) behind a
+            # scalar cond so non-refresh rounds never touch dense shapes.
+            # ``_ensemble_any`` keeps the cond scalar under vmap — lanes of
+            # an ensemble therefore refresh on shared rounds (exact only at
+            # k >= S, where rebuilds are idempotent).
+            from .sparse import CAND_SALT, build_candidates
+
+            do_refresh = _ensemble_any(jnp.mod(st.round, topk_refresh) == 0)
+            ctx.ext["~cand"] = jax.lax.cond(
+                do_refresh,
+                lambda ops: build_candidates(
+                    ops[0], ops[1], policy, st.policy_state, clock,
+                    jax.random.fold_in(st.rng, CAND_SALT), ctx.ext, topk,
+                ),
+                lambda ops: ctx.ext["~cand"],
+                (jobs, sites),
+            )
+        if topk is None:
+            # static feasibility: job can ever fit the site
+            ctx.feasible = (
+                sites.active[None, :]
+                & (jobs.cores[:, None] <= sites.cores[None, :])
+                & (jobs.memory[:, None] <= sites.memory[None, :])
+            )
+        else:
+            # sparse mode: the static core/memory fit lives in the candidate
+            # index; per-round feasibility starts as a per-site [1, S] mask
+            # that pre_assign hooks compose with [None, :]-broadcast masks
+            # (availability does).  A hook may still write a full [J, S] —
+            # the gather below dispatches on the leading dim.
+            ctx.feasible = sites.active[None, :]
         ctx.start_cores = sites.free_cores
         ctx.sites_serv = sites
         for sub in subsystems:
@@ -409,8 +586,37 @@ def _round_fns(
             here is a masked no-op, which is what makes the phase-skip guard
             below bit-for-bit safe."""
             jobs, sites = ops
-            scores = policy.score(jobs, sites, pstate, clock, k_policy)  # [J, S]
-            site_pick, assigned_now = policy.assign(scores, queued, feasible, sites)
+            if topk is None:
+                scores = policy.score(jobs, sites, pstate, clock, k_policy)  # [J, S]
+                site_pick, assigned_now = policy.assign(scores, queued, feasible, sites)
+            else:
+                cand = ctx.ext["~cand"]                     # i32[J, K]
+                cand_c = jnp.minimum(cand, S - 1)
+                # re-check everything the dense mask carries, gathered at the
+                # candidates: validity, per-round dynamic feasibility, and the
+                # static core/memory fit (exact at k=S, where ``cand``
+                # enumerates every statically feasible site)
+                f_at = (
+                    feasible[0][cand_c]
+                    if feasible.shape[0] == 1
+                    else jnp.take_along_axis(feasible, cand_c, axis=-1)
+                )
+                feas_k = (
+                    (cand < S)
+                    & f_at
+                    & (jobs.cores[:, None] <= sites.cores[cand_c])
+                    & (jobs.memory[:, None] <= sites.memory[cand_c])
+                )
+                score_c = getattr(policy, "score_cand", None)
+                if score_c is not None:
+                    scores_k = score_c(jobs, sites, pstate, clock, k_policy, cand_c)
+                else:
+                    # exact fallback: dense score + gather (no memory win)
+                    scores_k = jnp.take_along_axis(
+                        policy.score(jobs, sites, pstate, clock, k_policy), cand_c, axis=-1
+                    )
+                assign_c = getattr(policy, "assign_cand", None) or default_assign_cand
+                site_pick, assigned_now = assign_c(scores_k, queued, feas_k, cand_c, sites)
             assigned_now = assigned_now & queued
             jobs = jobs._replace(
                 state=jnp.where(assigned_now, ASSIGNED, jobs.state),
@@ -425,14 +631,20 @@ def _round_fns(
 
             cand = jobs.state == ASSIGNED
             sort_site = jnp.where(cand, jobs.site, S).astype(jnp.int32)
-            # policy rank is a secondary start-order key: priority still
-            # dominates, rank breaks ties before arrival time (a rank-less
-            # policy contributes a constant key, which the stable lexsort ignores)
-            rank_val = (
-                jnp.zeros((J,), jnp.float32) if rank_fn is None
-                else rank_fn(jobs, sites, pstate, clock)
-            )
-            order = _start_order(sort_site, jobs.priority, rank_val, jobs.arrival)
+            if "~srank" in st.ext:
+                # packed fast path: one single-key sort, provably the same
+                # permutation as the 5-key lexsort (see _start_order_packed)
+                order = _start_order_packed(sort_site * J + ctx.ext["~srank"])
+            else:
+                # policy rank is a secondary start-order key: priority still
+                # dominates, rank breaks ties before arrival time (a rank-less
+                # policy contributes a constant key, which the stable lexsort
+                # ignores)
+                rank_val = (
+                    jnp.zeros((J,), jnp.float32) if rank_fn is None
+                    else rank_fn(jobs, sites, pstate, clock)
+                )
+                order = _start_order(sort_site, jobs.priority, rank_val, jobs.arrival)
             site_s = sort_site[order]
             cand_s = cand[order]
             cores_s = jnp.where(cand_s, jobs.cores[order], 0).astype(jnp.int32)
@@ -467,9 +679,16 @@ def _round_fns(
         ctx.jobs, ctx.sites = jobs, sites
 
         start_site = jnp.where(started, jobs.site, S)
-        used_cores = _site_sum(jnp.where(started, jobs.cores, 0), start_site, S)
+        start_sums = _site_sum_stacked(
+            jnp.stack(
+                [jnp.where(started, jobs.cores, 0), started.astype(jnp.int32)], axis=-1
+            ),
+            start_site,
+            S,
+        )
+        used_cores = start_sums[..., 0]
         used_mem = _site_sum(jnp.where(started, jobs.memory, 0.0), start_site, S)
-        n_start_per_site = _site_sum(started.astype(jnp.int32), start_site, S)
+        n_start_per_site = start_sums[..., 1]
         site_c = jnp.minimum(jobs.site, S - 1)
         share = n_start_per_site[site_c].astype(jnp.float32)
 
@@ -517,33 +736,48 @@ def _round_fns(
         if log_rows > 0:
             slot = jnp.mod(log.cursor, log_rows)
             write = jnp.mod(st.round, monitor_every) == 0
-            counts = jax.vmap(
-                lambda s: jnp.sum((jobs.state == s) & jobs.valid).astype(jnp.int32)
-            )(jnp.arange(N_STATES))
-            q_site = jnp.where(jobs.state == ASSIGNED, jobs.site, S)
-            r_site = jnp.where(jobs.state == RUNNING, jobs.site, S)
-            site_queued = _site_sum(jnp.ones((J,), jnp.int32), q_site, S)
-            site_running = _site_sum(jnp.ones((J,), jnp.int32), r_site, S)
 
-            def wr(buf, val):
-                return jnp.where(write, buf.at[slot].set(val), buf)
+            def _log_write(operand):
+                log, ext = operand
+                # branch-local ext: subsystem log hooks may update engine
+                # state (e.g. the data subsystem's between-writes WAN
+                # accumulator), so ext rides the cond carry
+                ctx.ext = dict(ext)
+                counts = jax.vmap(
+                    lambda s: jnp.sum((jobs.state == s) & jobs.valid).astype(jnp.int32)
+                )(jnp.arange(N_STATES))
+                q_site = jnp.where(jobs.state == ASSIGNED, jobs.site, S)
+                r_site = jnp.where(jobs.state == RUNNING, jobs.site, S)
+                site_queued = _site_sum(jnp.ones((J,), jnp.int32), q_site, S)
+                site_running = _site_sum(jnp.ones((J,), jnp.int32), r_site, S)
 
-            extra = dict(log.extra)
-            for sub in subsystems:
-                if sub.log_columns is not None:
-                    for k, v in sub.log_columns(sub, ctx, write).items():
-                        extra[k] = wr(extra[k], v)
-            log = EventLog(
-                time=wr(log.time, clock),
-                round_idx=wr(log.round_idx, st.round),
-                counts=wr(log.counts, counts),
-                n_started=wr(log.n_started, n_started.astype(jnp.int32)),
-                n_completed=wr(log.n_completed, n_completed.astype(jnp.int32)),
-                site_free=wr(log.site_free, sites.free_cores),
-                site_queued=wr(log.site_queued, site_queued),
-                site_running=wr(log.site_running, site_running),
-                extra=extra,
-                cursor=log.cursor + write.astype(jnp.int32),
+                def wr(buf, val):
+                    return jnp.where(write, buf.at[slot].set(val), buf)
+
+                extra = dict(log.extra)
+                for sub in subsystems:
+                    if sub.log_columns is not None:
+                        for k, v in sub.log_columns(sub, ctx, write).items():
+                            extra[k] = wr(extra[k], v)
+                return EventLog(
+                    time=wr(log.time, clock),
+                    round_idx=wr(log.round_idx, st.round),
+                    counts=wr(log.counts, counts),
+                    n_started=wr(log.n_started, n_started.astype(jnp.int32)),
+                    n_completed=wr(log.n_completed, n_completed.astype(jnp.int32)),
+                    site_free=wr(log.site_free, sites.free_cores),
+                    site_queued=wr(log.site_queued, site_queued),
+                    site_running=wr(log.site_running, site_running),
+                    extra=extra,
+                    cursor=log.cursor + write.astype(jnp.int32),
+                ), ctx.ext
+
+            # the log reductions (two segment sums + a per-state count sweep)
+            # are real per-round work at WLCG scale; behind a scalar cond,
+            # rounds between monitor samples skip them entirely (``wr`` still
+            # selects per lane, so a mixed-write ensemble batch stays exact)
+            log, ctx.ext = jax.lax.cond(
+                _ensemble_any(write), _log_write, lambda op: op, (log, dict(ctx.ext))
             )
 
         return EngineState(
@@ -565,7 +799,9 @@ def _finalize(st: EngineState, policy, subsystems: tuple) -> SimResult:
     """End-of-run hooks (policy ``on_end``, subsystem ``finalize``) plus
     SimResult assembly — shared by the one-shot jit and the segmented API."""
     pstate = policy.on_end(st.policy_state, st.jobs, st.sites, st.clock)
-    ext = dict(st.ext)
+    # "~"-prefixed keys are engine-internal carry (e.g. the sparse candidate
+    # index): dropped here so sparse results keep the dense pytree structure
+    ext = {k: v for k, v in st.ext.items() if not k.startswith("~")}
     result_fields = {}
     for sub in subsystems:
         if sub.finalize is not None:
@@ -594,6 +830,8 @@ def _finalize(st: EngineState, policy, subsystems: tuple) -> SimResult:
         "monitor_every",
         "quantum",
         "phase_skip",
+        "topk",
+        "topk_refresh",
     ),
 )
 def _simulate(
@@ -611,10 +849,14 @@ def _simulate(
     monitor_every: int = 1,
     quantum: float = 0.0,
     phase_skip: bool = True,
+    topk: int | None = None,
+    topk_refresh: int = 0,
 ) -> SimResult:
     """The jitted phase pipeline; ``subsystems`` is a static Subsystem tuple,
     ``ext0`` the matching name -> state pytree mapping (see subsystems.py)."""
-    st0 = _init_state(jobs0, sites0, policy, rng, ext0, subsystems, log_rows)
+    if topk is not None:
+        topk = min(int(topk), sites0.capacity)  # k >= S is exactly dense
+    st0 = _init_state(jobs0, sites0, policy, rng, ext0, subsystems, log_rows, topk)
     cond, body = _round_fns(
         policy,
         subsystems,
@@ -624,6 +866,8 @@ def _simulate(
         monitor_every=monitor_every,
         quantum=quantum,
         phase_skip=phase_skip,
+        topk=topk,
+        topk_refresh=topk_refresh,
     )
     st = jax.lax.while_loop(lambda s: cond(s, horizon), body, st0)
     return _finalize(st, policy, subsystems)
@@ -649,6 +893,8 @@ def simulate(
     monitor_every: int = 1,
     quantum: float = 0.0,
     phase_skip: bool = True,
+    topk: int | None = None,
+    topk_refresh: int = 0,
     recorder=None,
 ) -> SimResult:
     """Run the grid simulation to completion (or ``max_rounds``/``horizon``).
@@ -665,6 +911,15 @@ def simulate(
     skip the score matrix, start-order sort, and segmented prefix sums
     entirely, with bit-for-bit identical results (DESIGN.md §8).  ``False``
     forces the unguarded pipeline (the equivalence is property-tested).
+
+    ``topk`` switches assignment to the sparse candidate-set path
+    (DESIGN.md §12): scores are evaluated over a static ``i32[J, topk]``
+    candidate-site index instead of the dense ``[J, S]`` matrix — the
+    WLCG-scale lever (S=300, J=100k).  ``topk >= S`` is bit-for-bit equal to
+    the dense path; smaller k is a documented approximation.  The index is
+    built once at init from static feasibility, data locality, and the
+    policy pre-rank; ``topk_refresh=N`` rebuilds it every N rounds (0 =
+    never) so load/locality-sensitive pre-ranks stay current.
 
     ``quantum`` > 0 batches all events inside [t*, t* + quantum] into one
     round (SimGrid-style time-precision knob): timestamps quantize to the
@@ -721,6 +976,8 @@ def simulate(
         monitor_every=monitor_every,
         quantum=quantum,
         phase_skip=phase_skip,
+        topk=topk,
+        topk_refresh=topk_refresh,
     )
     if recorder is None:
         return _simulate(jobs0, sites0, policy, rng, ext0, **kw)
@@ -765,7 +1022,8 @@ class SimHandle(NamedTuple):
     state: EngineState
     policy: object
     subsystems: tuple
-    statics: tuple  # (max_rounds, log_rows, max_retries, monitor_every, quantum, phase_skip)
+    statics: tuple  # (max_rounds, log_rows, max_retries, monitor_every, quantum,
+    #                  phase_skip, topk, topk_refresh)
 
     @property
     def max_rounds(self) -> int:
@@ -791,6 +1049,8 @@ def init_sim(
     monitor_every: int = 1,
     quantum: float = 0.0,
     phase_skip: bool = True,
+    topk: int | None = None,
+    topk_refresh: int = 0,
 ) -> SimHandle:
     """Initialize a resumable simulation (same kwargs as ``simulate`` minus
     ``horizon``, which ``advance_sim`` takes per segment)."""
@@ -807,8 +1067,11 @@ def init_sim(
         jobs=jobs0,
         sites=sites0,
     )
-    st0 = _init_state(jobs0, sites0, policy, rng, ext0, subs, log_rows)
-    statics = (max_rounds, log_rows, max_retries, monitor_every, quantum, phase_skip)
+    if topk is not None:
+        topk = min(int(topk), sites0.capacity)
+    st0 = _init_state(jobs0, sites0, policy, rng, ext0, subs, log_rows, topk)
+    statics = (max_rounds, log_rows, max_retries, monitor_every, quantum, phase_skip,
+               topk, topk_refresh)
     return SimHandle(state=st0, policy=policy, subsystems=subs, statics=statics)
 
 
@@ -817,7 +1080,8 @@ def _segment_fn(policy, subsystems: tuple, statics: tuple):
     """The cached jitted segment runner: the exact engine while loop with the
     horizon as a *dynamic* argument, so every segment of every run with the
     same static configuration shares one compile."""
-    max_rounds, log_rows, max_retries, monitor_every, quantum, phase_skip = statics
+    (max_rounds, log_rows, max_retries, monitor_every, quantum, phase_skip,
+     topk, topk_refresh) = statics
     cond, body = _round_fns(
         policy,
         subsystems,
@@ -827,6 +1091,8 @@ def _segment_fn(policy, subsystems: tuple, statics: tuple):
         monitor_every=monitor_every,
         quantum=quantum,
         phase_skip=phase_skip,
+        topk=topk,
+        topk_refresh=topk_refresh,
     )
 
     def run(st: EngineState, horizon):

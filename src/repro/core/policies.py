@@ -20,6 +20,25 @@ queue*: ``rank(jobs, sites, state, clock) -> f32[J]`` is a secondary key in
 the engine's FIFO-with-capacity sort — after ``jobs.priority``, before
 arrival time, higher first — so user priorities always dominate.
 ``rank=None`` (the default) keeps the exact pre-workflow start order.
+
+Sparse top-k scoring (DESIGN.md §12): with ``simulate(..., topk=K)`` the
+engine evaluates scores only at a per-job candidate-site index ``i32[J, K]``
+instead of the dense ``[J, S]`` matrix.  Three optional hooks serve that
+mode, all ``None``-defaulting so existing policies keep working:
+
+- ``score_cand(jobs, sites, state, clock, rng, cand) -> f32[J, K]`` scores
+  each job at its candidate sites (``cand`` is clamped to valid site ids).
+  Must be float-identical to gathering ``score(...)`` at ``cand`` — every
+  built-in below satisfies this, so ``topk=S`` stays bit-for-bit equal to
+  the dense path.  ``None`` falls back to a dense score + gather (exact,
+  but without the memory win).
+- ``pre_rank(jobs, sites, state, clock, rng) -> f32[J, S]`` is the dense
+  pre-ranking the engine uses when *building* the candidate index (init
+  time / every ``topk_refresh`` rounds — off the per-round hot path).
+  ``None`` reuses ``score``.
+- ``assign_cand(scores_k, queued, feas_k, cand, sites) -> (site, mask)``
+  picks a site per job from candidate-set scores (the sparse analogue of
+  ``assign``).  ``None`` uses ``engine.default_assign_cand``.
 """
 from __future__ import annotations
 
@@ -42,6 +61,9 @@ class Policy(NamedTuple):
     on_step: Callable
     on_end: Callable
     rank: Callable | None = None  # start-order key within site queues (None = jobs.priority)
+    score_cand: Callable | None = None  # candidate-set score form (None = dense gather)
+    pre_rank: Callable | None = None    # dense pre-rank for candidate building (None = score)
+    assign_cand: Callable | None = None  # candidate-set assigner (None = default_assign_cand)
 
 
 def _no_state(jobs, sites):
@@ -53,7 +75,8 @@ def _keep_state(state, *_):
 
 
 def make_policy(
-    name: str, score: Callable, *, init=None, assign=None, on_step=None, on_end=None, rank=None
+    name: str, score: Callable, *, init=None, assign=None, on_step=None, on_end=None, rank=None,
+    score_cand=None, pre_rank=None, assign_cand=None,
 ) -> Policy:
     return Policy(
         name=name,
@@ -63,6 +86,9 @@ def make_policy(
         on_step=on_step or _keep_state,
         on_end=on_end or _keep_state,
         rank=rank,
+        score_cand=score_cand,
+        pre_rank=pre_rank,
+        assign_cand=assign_cand,
     )
 
 
@@ -95,33 +121,51 @@ def random_policy(seed_salt: int = 0) -> Policy:
 def round_robin() -> Policy:
     """Deterministic round-robin by job id (stateless, vmap-safe)."""
 
+    def _want(jobs, sites):
+        return jnp.mod(
+            jnp.maximum(jobs.job_id, 0), jnp.maximum(sites.active.sum(), 1)
+        )[:, None]
+
     def score(jobs, sites, state, clock, rng):
         S = sites.capacity
         idx = jnp.arange(S)[None, :]
-        want = jnp.mod(jnp.maximum(jobs.job_id, 0), jnp.maximum(sites.active.sum(), 1))[:, None]
-        return -jnp.mod(idx - want, S).astype(jnp.float32)
+        return -jnp.mod(idx - _want(jobs, sites), S).astype(jnp.float32)
 
-    return make_policy("round_robin", score)
+    def score_cand(jobs, sites, state, clock, rng, cand):
+        # integer mod is exact, so gather-then-compute ≡ compute-then-gather
+        return -jnp.mod(cand - _want(jobs, sites), sites.capacity).astype(jnp.float32)
+
+    return make_policy("round_robin", score, score_cand=score_cand)
 
 
 def fastest_site() -> Policy:
     def score(jobs, sites, state, clock, rng):
         return jnp.broadcast_to(sites.speed[None, :], (jobs.capacity, sites.capacity))
 
-    return make_policy("fastest_site", score)
+    def score_cand(jobs, sites, state, clock, rng, cand):
+        return sites.speed[cand]
+
+    return make_policy("fastest_site", score, score_cand=score_cand)
 
 
 def least_loaded() -> Policy:
     """Prefer the site with the most free-core headroom after its queue drains."""
 
-    def score(jobs, sites, state, clock, rng):
+    def _head(jobs, sites):
         q_cores, _ = site_backlog(jobs, sites)
-        head = (sites.free_cores.astype(jnp.float32) - q_cores) / jnp.maximum(
+        return (sites.free_cores.astype(jnp.float32) - q_cores) / jnp.maximum(
             sites.cores.astype(jnp.float32), 1.0
         )
-        return jnp.broadcast_to(head[None, :], (jobs.capacity, sites.capacity))
 
-    return make_policy("least_loaded", score)
+    def score(jobs, sites, state, clock, rng):
+        return jnp.broadcast_to(
+            _head(jobs, sites)[None, :], (jobs.capacity, sites.capacity)
+        )
+
+    def score_cand(jobs, sites, state, clock, rng, cand):
+        return _head(jobs, sites)[cand]
+
+    return make_policy("least_loaded", score, score_cand=score_cand)
 
 
 def data_locality() -> Policy:
@@ -131,23 +175,52 @@ def data_locality() -> Policy:
         t_in = sites.latency[None, :] + jobs.bytes_in[:, None] / sites.bw_in[None, :]
         return -t_in
 
-    return make_policy("data_locality", score)
+    def score_cand(jobs, sites, state, clock, rng, cand):
+        return -(sites.latency[cand] + jobs.bytes_in[:, None] / sites.bw_in[cand])
+
+    return make_policy("data_locality", score, score_cand=score_cand)
 
 
 def shortest_wait() -> Policy:
     """Greedy expected-completion-time (backlog drain + own service estimate)."""
 
-    def score(jobs, sites, state, clock, rng):
+    def _drain(jobs, sites):
         _, out_work = site_backlog(jobs, sites)
         cap_rate = sites.speed * jnp.maximum(sites.cores.astype(jnp.float32), 1.0)
-        drain = out_work / jnp.maximum(cap_rate, 1e-9)
+        return out_work / jnp.maximum(cap_rate, 1e-9)
+
+    def score(jobs, sites, state, clock, rng):
         mine = jobs.work[:, None] / jnp.maximum(
             sites.speed[None, :] * jobs.cores[:, None].astype(jnp.float32), 1e-9
         )
         stage = sites.latency[None, :] + jobs.bytes_in[:, None] / sites.bw_in[None, :]
-        return -(drain[None, :] + mine + stage)
+        return -(_drain(jobs, sites)[None, :] + mine + stage)
 
-    return make_policy("shortest_wait", score)
+    def score_cand(jobs, sites, state, clock, rng, cand):
+        mine = jobs.work[:, None] / jnp.maximum(
+            sites.speed[cand] * jobs.cores[:, None].astype(jnp.float32), 1e-9
+        )
+        stage = sites.latency[cand] + jobs.bytes_in[:, None] / sites.bw_in[cand]
+        return -(_drain(jobs, sites)[cand] + mine + stage)
+
+    return make_policy("shortest_wait", score, score_cand=score_cand)
+
+
+def panda_site_score(jobs, sites, w_speed=1.0, w_free=1.0, w_queue=2.0, w_fail=4.0):
+    """The PanDA brokerage score as a per-site vector ``f32[S]`` — shared by
+    the dense broadcast, the candidate gather, and the fused assignment
+    kernel's site-score input."""
+    q_cores, _ = site_backlog(jobs, sites)
+    cores_f = jnp.maximum(sites.cores.astype(jnp.float32), 1.0)
+    norm_speed = sites.speed / jnp.maximum(sites.speed.max(), 1e-9)
+    free_frac = sites.free_cores.astype(jnp.float32) / cores_f
+    queue_frac = q_cores / cores_f
+    return (
+        w_speed * norm_speed
+        + w_free * free_frac
+        - w_queue * queue_frac
+        - w_fail * sites.fail_rate
+    )
 
 
 def panda_dispatch(w_speed=1.0, w_free=1.0, w_queue=2.0, w_fail=4.0) -> Policy:
@@ -155,20 +228,13 @@ def panda_dispatch(w_speed=1.0, w_free=1.0, w_queue=2.0, w_fail=4.0) -> Policy:
     reliability) — the default policy for the ATLAS case study."""
 
     def score(jobs, sites, state, clock, rng):
-        q_cores, _ = site_backlog(jobs, sites)
-        cores_f = jnp.maximum(sites.cores.astype(jnp.float32), 1.0)
-        norm_speed = sites.speed / jnp.maximum(sites.speed.max(), 1e-9)
-        free_frac = sites.free_cores.astype(jnp.float32) / cores_f
-        queue_frac = q_cores / cores_f
-        s = (
-            w_speed * norm_speed
-            + w_free * free_frac
-            - w_queue * queue_frac
-            - w_fail * sites.fail_rate
-        )
+        s = panda_site_score(jobs, sites, w_speed, w_free, w_queue, w_fail)
         return jnp.broadcast_to(s[None, :], (jobs.capacity, sites.capacity))
 
-    return make_policy("panda_dispatch", score)
+    def score_cand(jobs, sites, state, clock, rng, cand):
+        return panda_site_score(jobs, sites, w_speed, w_free, w_queue, w_fail)[cand]
+
+    return make_policy("panda_dispatch", score, score_cand=score_cand)
 
 
 def crit_rank_fn(jobs, sites, state, clock):
@@ -197,6 +263,19 @@ def with_capacity_assign(policy: Policy, assign_fn) -> Policy:
         return assign_fn(scores, queued, feasible, sites)
 
     return policy._replace(name=policy.name + "+capacity", assign=assign)
+
+
+def with_fused_assign(policy: Policy, assign_cand_fn) -> Policy:
+    """Swap in a fused candidate-set assigner for sparse top-k mode
+    (``repro.kernels.assign.make_fused_capacity_assign``): rank + capacity
+    pick run in one kernel over ``[J, K]`` candidates instead of the dense
+    ``[J, S]`` matrix.  Only consulted when the engine runs with ``topk=``;
+    pair with :func:`with_capacity_assign` for the dense fallback."""
+
+    def assign_cand(scores_k, queued, feas_k, cand, sites):
+        return assign_cand_fn(scores_k, queued, feas_k, cand, sites)
+
+    return policy._replace(name=policy.name + "+fused", assign_cand=assign_cand)
 
 
 REGISTRY: dict[str, Callable[..., Policy]] = {

@@ -139,18 +139,26 @@ def nearest_source(rep: ReplicaState, net, dataset: jax.Array, dst: jax.Array) -
     ``latency[src, dst] + size / bw[src, dst]`` over sites holding a replica.
 
     Local replicas win automatically (the diagonal link is ~free).  Rows whose
-    dataset has no replica anywhere fall back to the pinned origin (which by
-    construction always holds one).
+    dataset has no *reachable* replica fall back to the pinned origin (which
+    by construction always holds one).
+
+    Unreachable sources — no-link sentinels like zero/NaN bandwidth or
+    non-finite latency — are masked out of both the cost *operands* and the
+    argmin, so the division never touches a sentinel and the whole selection
+    is NaN-free under ``jax.debug_nans`` regardless of link encoding.
     """
     D, S = rep.present.shape
     d = jnp.clip(dataset, 0, D - 1)
-    avail = rep.present[d]                      # [J, S]
     lat = net.latency[:, :].T[dst]              # [J, S] latency[src, dst_j]
     bw = net.bw[:, :].T[dst]                    # [J, S]
-    cost = lat + rep.size[d][:, None] / jnp.maximum(bw, 1e-9)
-    cost = jnp.where(avail, cost, INF)
+    reach = rep.present[d] & (bw > 0) & jnp.isfinite(lat)
+    # sentinel-proof operands: unreachable cells compute 0 + 0/1, never
+    # inf/inf or nan arithmetic; reachable cells see the exact original values
+    lat_s = jnp.where(reach, lat, 0.0)
+    bw_s = jnp.where(reach, jnp.maximum(bw, 1e-9), 1.0)
+    cost = jnp.where(reach, lat_s + rep.size[d][:, None] / bw_s, INF)
     src = jnp.argmin(cost, axis=-1).astype(jnp.int32)
-    return jnp.where(jnp.any(avail, axis=-1), src, rep.origin[d])
+    return jnp.where(jnp.any(reach, axis=-1), src, rep.origin[d])
 
 
 # --------------------------------------------------------------------------
@@ -163,15 +171,43 @@ def insert_mask(rep: ReplicaState, want: jax.Array, clock) -> ReplicaState:
     non-origin replicas per site to make room.  Sites that cannot fit a new
     replica even after evicting everything evictable skip the insertion, so
     ``disk_used <= disk_cap`` is an invariant (given a valid initial state).
+
+    The LRU machinery (a [D, S] argsort) only runs when some site is actually
+    over capacity: pressure-free rounds — the common case, and the only case
+    on adequately-provisioned WLCG catalogs — take a scalar-guarded fast path
+    that is value-identical (with ``need == 0`` the eviction mask below is
+    provably all-False and every insertion fits).
     """
     D, S = rep.present.shape
     size_col = rep.size[:, None]                       # [D, 1]
-    is_origin = (
-        jnp.arange(S)[None, :] == jnp.clip(rep.origin, 0, S - 1)[:, None]
-    )                                                  # [D, S]
     new = want & ~rep.present
     incoming = (new * size_col).sum(0)                 # f32[S]
     need = jnp.maximum(rep.disk_used + incoming - rep.disk_cap, 0.0)
+
+    def _fast(rep: ReplicaState) -> ReplicaState:
+        return rep._replace(
+            present=rep.present | new,
+            disk_used=rep.disk_used + incoming,
+            last_access=jnp.where(new, jnp.float32(clock), rep.last_access),
+        )
+
+    def _evict(rep: ReplicaState) -> ReplicaState:
+        return _insert_mask_evicting(rep, want, new, incoming, need, clock)
+
+    from .engine import _ensemble_any  # lazy: avoid import cycle at module load
+
+    return jax.lax.cond(_ensemble_any(jnp.any(need > 0.0)), _evict, _fast, rep)
+
+
+def _insert_mask_evicting(
+    rep: ReplicaState, want, new, incoming, need, clock
+) -> ReplicaState:
+    """The full LRU-eviction path of ``insert_mask`` (see its docstring)."""
+    D, S = rep.present.shape
+    size_col = rep.size[:, None]
+    is_origin = (
+        jnp.arange(S)[None, :] == jnp.clip(rep.origin, 0, S - 1)[:, None]
+    )                                                  # [D, S]
 
     # LRU eviction candidates: resident, not the pinned origin, not being
     # read/inserted this round.
@@ -215,12 +251,22 @@ def insert_replicas(
 
 
 def touch(rep: ReplicaState, dataset: jax.Array, site: jax.Array, mask: jax.Array, clock) -> ReplicaState:
-    """Refresh the LRU clock of replicas read this round (where present)."""
+    """Refresh the LRU clock of replicas read this round (where present).
+
+    Blocked access path (DESIGN.md §12): a row-wise scatter over the J
+    (dataset, site) pairs actually referenced this round — O(J) work — in
+    place of building a dense ``bool[D, S]`` touch mask.  Value-identical:
+    every touched cell receives the same clock, so scatter duplicates and
+    the old dense ``where`` agree bit-for-bit.
+    """
     D, S = rep.present.shape
     d = jnp.clip(dataset, 0, D - 1)
     s = jnp.clip(site, 0, S - 1)
-    touched = jnp.zeros((D, S), bool).at[d, s].max(mask) & rep.present
-    return rep._replace(last_access=jnp.where(touched, jnp.float32(clock), rep.last_access))
+    on = mask & rep.present[d, s]
+    dd = jnp.where(on, d, D)  # rows that miss (or are masked) drop out
+    return rep._replace(
+        last_access=rep.last_access.at[dd, s].set(jnp.float32(clock), mode="drop")
+    )
 
 
 def catalog_invariants(rep: ReplicaState) -> dict:
@@ -236,8 +282,17 @@ def catalog_invariants(rep: ReplicaState) -> dict:
     # origin < 0 = declared-but-never-materialized dataset (e.g. the producer
     # was cascade-cancelled): exempt from the pinned-copy check
     has_origin = origin_raw >= 0
+    # pinned-origin rows must survive eviction: the authoritative copy is
+    # present AND was never swept by the LRU (-inf last_access is the
+    # eviction sentinel — a pinned copy must never carry it)
+    rows = np.arange(present.shape[0])
+    last = np.asarray(rep.last_access)
+    origin_pinned_ok = bool(
+        (present[rows, origin][has_origin] & np.isfinite(last[rows, origin][has_origin])).all()
+    )
     return dict(
         capacity_ok=bool((used <= cap + 1e-2).all()),
         accounting_ok=bool(np.allclose(used, recomputed, rtol=1e-5, atol=1.0)),
         origins_ok=bool(present[np.arange(present.shape[0]), origin][has_origin].all()),
+        origin_pinned_ok=origin_pinned_ok,
     )

@@ -1,0 +1,114 @@
+"""Sparse top-k candidate scoring — the WLCG-scale perf path (DESIGN.md §12).
+
+At paper scale (S=300 sites, J=100k jobs) the dense per-round score matrix is
+the engine's memory wall: every event round materializes ``f32[J, S]`` scores
+plus a ``bool[J, S]`` feasibility mask (~150MB/round, several passes).  The
+sparse mode replaces both with a static-``k`` per-job *candidate-site index*
+``i32[J, K]`` built here — once at init (the default) or every
+``topk_refresh`` rounds — from three signals:
+
+  1. static feasibility (active, core/memory fit — constant over a run),
+  2. the policy's dense pre-rank (``Policy.pre_rank``, falling back to
+     ``Policy.score``),
+  3. data locality: sites holding a replica of the job's dataset, plus the
+     ``replicas.nearest_source`` pick for the pre-rank-best destination,
+     rank above equally-scored non-holders.
+
+Per round the engine then evaluates ``Policy.score_cand`` (or a dense-score
+gather) over ``[J, K]`` only.  Exactness contract: candidate rows are sorted
+ascending by site id with sentinel ``S`` padding, so at ``k >= S`` the index
+enumerates *all* statically feasible sites and the sparse argmax reproduces
+the dense first-max tie-break bit-for-bit; at ``k < S`` assignment is a
+documented approximation (gated by a ≤1% makespan-drift acceptance test).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# salt for the non-consuming candidate-build RNG stream: folding the round
+# carry key keeps the engine's own split(rng, 4) bitstream untouched, so a
+# sparse run draws identical failure/policy randomness to its dense twin
+CAND_SALT = 0x7093
+
+
+def static_feasibility(jobs, sites) -> jax.Array:
+    """``bool[J, S]`` — can this job *ever* fit this site (active, total
+    cores, total memory).  Time-invariant, so it can be baked into the
+    candidate index; dynamic per-round masks (availability windows, free
+    capacity) are re-applied at gather time by the engine."""
+    return (
+        sites.active[None, :]
+        & (jobs.cores[:, None] <= sites.cores[None, :])
+        & (jobs.memory[:, None] <= sites.memory[None, :])
+    )
+
+
+def build_candidates(jobs, sites, policy, pstate, clock, key, ext, k: int) -> jax.Array:
+    """Build the ``i32[J, K]`` candidate-site index (sentinel ``S`` = empty).
+
+    O(J*S) work — paid only at init / every ``topk_refresh`` rounds, never on
+    the per-round hot path.  Rows come out sorted ascending by site id with
+    the dense pre-rank argmax force-included, so (a) ``k >= S`` degenerates
+    to "all feasible sites in dense scan order" (bit-for-bit dense parity)
+    and (b) the candidate set provably contains the dense argmax site
+    whenever any site is feasible.
+    """
+    S = sites.capacity
+    k = min(int(k), S)
+    feas = static_feasibility(jobs, sites)
+    neg = jnp.float32(-jnp.inf)
+    pre_fn = getattr(policy, "pre_rank", None) or policy.score
+    masked = jnp.where(feas, pre_fn(jobs, sites, pstate, clock, key), neg)
+    best = jnp.argmax(masked, axis=-1).astype(jnp.int32)
+    best_val = jnp.max(masked, axis=-1)
+
+    sel = masked
+    if "data" in ext:
+        # data-locality bonus: replica holders of the job's dataset, plus the
+        # nearest WAN source toward the pre-rank-best destination, outrank
+        # equally-scored non-holders.  The bonus exceeds the row's finite
+        # score range, so it reorders *between* the groups, never within.
+        from .replicas import nearest_source
+
+        dext = ext["data"]
+        rep, net = dext.replicas, dext.network
+        D = rep.present.shape[-2]
+        has_ds = jobs.dataset >= 0
+        d_c = jnp.clip(jobs.dataset, 0, D - 1)
+        holders = rep.present[d_c]  # [J, S]
+        src = nearest_source(rep, net, jobs.dataset, best)  # [J]
+        local = holders | (jnp.arange(S)[None, :] == src[:, None])
+        row_max = jnp.max(jnp.where(feas, masked, neg), axis=-1)
+        row_min = jnp.min(jnp.where(feas, masked, jnp.float32(jnp.inf)), axis=-1)
+        span = jnp.where(
+            jnp.isfinite(row_max) & jnp.isfinite(row_min), row_max - row_min, 0.0
+        )
+        bonus = (span + 1.0)[:, None]
+        sel = jnp.where(feas & local & has_ds[:, None], masked + bonus, masked)
+
+    _, idx = jax.lax.top_k(sel, k)
+    idx = idx.astype(jnp.int32)
+    # force-include the dense pre-rank argmax: locality bonuses may push it
+    # past slot k, but the membership guarantee is what the k<S approximation
+    # is gated on (hypothesis-tested)
+    missing = jnp.isfinite(best_val) & ~jnp.any(idx == best[:, None], axis=-1)
+    idx = idx.at[..., -1].set(jnp.where(missing, best, idx[..., -1]))
+    # sentinel-out infeasible slots, then sort ascending by site id (sentinels
+    # sort last) — the dense-argmax tie-break order
+    vals = jnp.take_along_axis(masked, idx, axis=-1)
+    cand = jnp.where(jnp.isfinite(vals), idx, jnp.int32(S))
+    return jnp.sort(cand, axis=-1)
+
+
+def bytes_per_round(J: int, S: int, k: int | None) -> dict:
+    """The §12 memory model: per-round score-path bytes, dense vs sparse.
+
+    Dense rounds materialize the f32 score matrix, the bool feasibility mask,
+    and the masked-score intermediate; sparse rounds carry the i32 candidate
+    index plus f32 score/bool mask gathers over [J, K].
+    """
+    dense = J * S * (4 + 1 + 4)
+    sparse = None if k is None else J * min(k, S) * (4 + 4 + 1) + S
+    return dict(dense=dense, sparse=sparse,
+                ratio=None if sparse is None else dense / sparse)

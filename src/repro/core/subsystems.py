@@ -97,7 +97,11 @@ class RoundCtx:
       clock_prev, clock  round entry time / this round's event time
       comp, done_now, failed_now   completion masks (set by the engine, step 2)
       arrived            this round's arrival mask (engine, step 3)
-      feasible           bool[J, S] assignment feasibility (AND your mask in)
+      feasible           bool[J, S] assignment feasibility (AND your mask in);
+                         sparse top-k mode (``simulate(topk=)``) carries a
+                         broadcastable bool[1, S] site-level mask instead —
+                         per-job feasibility lives in the candidate index
+                         (DESIGN.md §12)
       start_cores        i32[S] cores the start phase may claim this round
       sites_serv         SiteState used for service-time pricing (speed mods)
       started, site_c, share, start_site   start-phase masks (engine, step 5)

@@ -127,7 +127,9 @@ class EngineState(NamedTuple):
     policy_state: object    # policy-defined pytree
     log: EventLog
     halted: jax.Array       # bool[] no further progress possible
-    ext: dict               # {subsystem name: subsystem-defined state pytree}
+    ext: dict               # {subsystem name: subsystem-defined state pytree};
+                            # "~"-prefixed keys are engine-internal carries
+                            # (e.g. "~cand", "~srank") stripped at finalize
 
 
 class SimResult(NamedTuple):

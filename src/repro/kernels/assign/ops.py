@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from .assign import assign_pallas
+from .fused import fused_assign_pallas, fused_assign_ref
 from .ref import assign_ref
 
 # interpret=True on CPU (this container); compiled Mosaic on real TPU.
@@ -52,6 +53,50 @@ def make_capacity_assign(
         return jnp.where(ok, idx[:, 0], -1), ok
 
     return assign_fn
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "use_kernel"))
+def fused_topk_assign(scores_k, cand, sizes, caps, *, block_n: int = 256, use_kernel: bool = True):
+    """Fused candidate-set rank + capacity pick (see fused.py for semantics)."""
+    if use_kernel:
+        return fused_assign_pallas(
+            scores_k, cand, sizes, caps, block_n=block_n, interpret=_INTERPRET
+        )
+    return fused_assign_ref(scores_k, cand, sizes, caps, block_n=block_n)
+
+
+def make_fused_capacity_assign(
+    jobs_cores: jax.Array | None = None, *, use_kernel: bool | None = None, block_n: int = 256
+):
+    """Build an engine-compatible ``Policy.assign_cand`` fn for sparse top-k
+    mode (engine ``topk=``): rank the per-job candidate set and admit under
+    free-core capacity in one fused pass, without ever materializing the
+    dense ``[J, S]`` masked-score matrix that ``make_capacity_assign`` builds.
+
+    With candidates covering all feasible sites (``topk >= S``) the result is
+    bit-for-bit equal to the dense ``make_capacity_assign`` path.  Backend
+    dispatch matches ``make_capacity_assign``: ``use_kernel=None`` runs the
+    Mosaic kernel on TPU and the jnp oracle elsewhere; an explicit ``True``
+    on CPU runs the kernel in interpret mode (the CI smoke configuration).
+    """
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+
+    def assign_cand(scores_k, queued, feas_k, cand, sites):
+        S = sites.capacity
+        cand_eff = jnp.where(feas_k & queued[:, None], cand, S).astype(jnp.int32)
+        sizes = jnp.ones((scores_k.shape[0],), jnp.float32) if jobs_cores is None else (
+            jobs_cores.astype(jnp.float32)
+        )
+        sizes = jnp.where(queued, sizes, 0.0)
+        caps = jnp.where(sites.active, sites.free_cores, 0).astype(jnp.float32)
+        site, admit = fused_topk_assign(
+            scores_k, cand_eff, sizes, caps, block_n=block_n, use_kernel=use_kernel
+        )
+        ok = admit & queued
+        return jnp.where(ok, site, -1), ok
+
+    return assign_cand
 
 
 @functools.partial(jax.jit, static_argnames=("k", "capacity", "use_kernel", "block_n"))

@@ -389,3 +389,62 @@ def test_monitor_storage_and_network_columns():
     assert nt.sum() == pytest.approx(float(res.replicas.bytes_moved), rel=1e-4)
     txt = render_frame(frames[-1], np.asarray(res.sites.cores), disk_cap=np.asarray(rep.disk_cap))
     assert "disk|" in txt and "net_in=" in txt
+
+
+# --------------------------------------------------------------------------
+# nearest_source sentinel handling + pinned-origin invariant (ISSUE 9)
+# --------------------------------------------------------------------------
+
+
+def test_nearest_source_masks_unreachable_links():
+    """Sources behind zero-bandwidth or non-finite-latency links must be
+    masked out *before* the argmin — an unreachable holder never wins, and a
+    dataset whose every holder is unreachable falls back to the origin."""
+    sizes = np.array([1e9, 1e9])
+    rep = make_replicas(sizes, disk_capacity=np.full(3, 1e10), origin=[0, 0])
+    # dataset 0 also lives at site 1; dataset 1 only at its origin
+    rep = insert_mask(rep, jnp.array([[True, True, False], [True, False, False]]), 0.0)
+    bw = np.full((3, 3), 1e8)
+    bw[1, 2] = 0.0  # site 1 -> 2: dead link (zero bandwidth sentinel)
+    lat = np.zeros((3, 3))
+    lat[0, 2] = np.inf  # site 0 -> 2: dead link (inf latency sentinel)
+    net = matrix_network(bw, lat)
+    src = nearest_source(rep, net, jnp.array([0]), jnp.array([1]))
+    assert int(src[0]) == 1  # local replica at dst wins (diagonal free link)
+    # dst=2: dataset 0's holders are sites 0 (inf latency) and 1 (zero bw) —
+    # all unreachable -> pinned-origin fallback, not an argmin over NaN/inf
+    src = nearest_source(rep, net, jnp.array([0, 1]), jnp.array([2, 2]))
+    assert int(src[0]) == 0  # fallback = origin
+    assert int(src[1]) == 0  # single unreachable holder -> origin fallback
+
+
+def test_nearest_source_is_nan_free_under_debug_nans():
+    """The masked-operand formulation never divides by a sentinel, so the
+    whole selection runs clean under jax.debug_nans."""
+    sizes = np.array([1e9])
+    rep = make_replicas(sizes, disk_capacity=np.full(3, 1e10), origin=[0])
+    bw = np.full((3, 3), 1e8)
+    bw[0, 2] = 0.0
+    lat = np.zeros((3, 3))
+    lat[0, 1] = np.inf
+    net = matrix_network(bw, lat)
+    with jax.debug_nans(True):
+        src = jax.jit(nearest_source)(rep, net, jnp.array([0, 0]), jnp.array([1, 2]))
+        jax.block_until_ready(src)
+    assert (np.asarray(src) == 0).all()  # origin fallback on both dead paths
+
+
+def test_origin_pinned_survives_eviction_pressure():
+    """catalog_invariants' origin_pinned_ok: the authoritative copy survives
+    sustained LRU churn (tiny caches, many datasets) through a full run."""
+    jobs = data_jobs(64, n_datasets=16, seed=7)
+    sites = grid(4)
+    net = uniform_network(4, bw=1e9, latency=0.001)
+    rep = make_replicas(
+        zipf_dataset_sizes(16, seed=8, mean_bytes=1e9),
+        disk_capacity=np.array([1e12, 2.2e9, 2.2e9, 2.2e9]),
+        origin=np.zeros(16, np.int32),
+    )
+    res = run_with("cache_on_read", jobs, sites, net, rep)
+    inv = catalog_invariants(res.replicas)
+    assert inv["origin_pinned_ok"] and inv["origins_ok"] and inv["capacity_ok"]

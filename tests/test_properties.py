@@ -570,3 +570,18 @@ def test_calibrate_platform_respects_bounds(seed, factor):
         lo = np.asarray(getattr(bounds.lo, f))
         hi = np.asarray(getattr(bounds.hi, f))
         assert (x >= lo - 1e-6 * lo).all() and (x <= hi + 1e-6 * hi).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    k=st.integers(1, 6),
+    policy=st.sampled_from(["data_locality", "fastest_site", "least_loaded"]),
+)
+def test_sparse_candidates_contain_dense_argmax(seed, k, policy):
+    """Sparse top-k membership guarantee (DESIGN.md §12): the candidate index
+    always contains the dense pre-rank argmax site whenever any site is
+    feasible — the property the k<S approximation gate rests on."""
+    from test_sparse_topk import check_candidates_contain_dense_argmax
+
+    check_candidates_contain_dense_argmax(seed, k, policy)
