@@ -1,0 +1,133 @@
+"""Fault-injection subsystem cost (DESIGN.md §13): per-round overhead of an
+armed-but-inert faults state vs ``faults=None`` (the exactness contract says
+the *results* are byte-identical; this row prices the extra round work), the
+cost with every channel firing, and the blacklist-recovery win on the
+blackhole-site scenario.  ``--tiny`` runs a seconds-sized smoke for CI.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    flaky_grid,
+    get_policy,
+    lossy_links,
+    make_faults,
+    simulate,
+    synthetic_panda_jobs,
+)
+
+from .common import csv_row
+
+
+def timed(jobs, sites, *, faults=None, iters=2, seed0=0, **kw):
+    res = simulate(jobs, sites, get_policy("least_loaded"),
+                   jax.random.PRNGKey(seed0), faults=faults, **kw)
+    jax.block_until_ready(res.makespan)
+    ts = []
+    for i in range(iters):
+        t0 = time.perf_counter()
+        res = simulate(jobs, sites, get_policy("least_loaded"),
+                       jax.random.PRNGKey(seed0 + i), faults=faults, **kw)
+        jax.block_until_ready(res.makespan)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), int(res.rounds), res
+
+
+def flaky_workload(n_jobs, n_sites, *, arrival_span, seed=7):
+    """The blackhole-site scenario (examples/chaos_day.py): homogeneous small
+    sites plus trickle arrivals, so ``least_loaded`` chases the flaky site."""
+    sites, flaky_idx = flaky_grid(
+        n_sites, n_flaky=1, seed=12, cores_range=(8, 8), speed_range=(10.0, 10.0)
+    )
+    rng = np.random.default_rng(seed)
+    jobs = synthetic_panda_jobs(n_jobs, seed=seed, capacity=n_jobs + 3)
+    jobs = jobs._replace(
+        arrival=jnp.asarray(
+            np.pad(np.sort(rng.uniform(0.0, arrival_span, n_jobs)), (0, 3),
+                   constant_values=np.inf),
+            jnp.float32,
+        ),
+        work=jnp.asarray(
+            np.pad(rng.lognormal(np.log(800.0), 0.6, n_jobs), (0, 3)), jnp.float32
+        ),
+        cores=jnp.ones((jobs.capacity,), jnp.int32),
+        memory=jnp.full((jobs.capacity,), 2.0),
+    )
+    return jobs, sites, flaky_idx
+
+
+def main():
+    tiny = "--tiny" in sys.argv
+    if tiny:
+        n_jobs, n_sites = 200, 4
+        flaky_jobs, span = 120, 400.0
+    else:
+        n_jobs, n_sites = 1500, 8
+        flaky_jobs, span = 600, 2000.0
+
+    # 1. armed-but-inert round overhead vs faults=None — the price of the
+    # fifth phase pipeline stage when every channel is off
+    jobs = synthetic_panda_jobs(n_jobs, seed=0, duration=3600.0)
+    sites, _ = flaky_grid(n_sites, n_flaky=0, seed=1)
+    inert = make_faults(n_sites, jobs.capacity)
+    wall_on, rounds_on, _ = timed(jobs, sites, faults=inert)
+    wall_off, rounds_off, _ = timed(jobs, sites, faults=None)
+    us_on = wall_on / max(rounds_on, 1) * 1e6
+    us_off = wall_off / max(rounds_off, 1) * 1e6
+    print("# inert faults state vs faults=None (results are byte-identical)")
+    print(csv_row(
+        "faults_round_overhead", us_on,
+        f"off_us={us_off:.1f};ratio={us_on / max(us_off, 1e-9):.2f};"
+        f"rounds_on={rounds_on};rounds_off={rounds_off}",
+    ))
+
+    # 2. every channel armed and firing
+    armed = make_faults(
+        n_sites, jobs.capacity,
+        link_fail_p=lossy_links(n_sites, p=0.05, seed=3),
+        xfer_backoff=30.0, job_backoff=60.0, walltime=4 * 3600.0,
+        replica_loss=[(600.0, 0, s) for s in range(1, n_sites)],
+        blacklist_threshold=0.7,
+    )
+    wall_all, rounds_all, res = timed(jobs, sites, faults=armed, max_retries=4)
+    fs = res.ext["faults"]
+    print("# all four channels armed")
+    print(csv_row(
+        "faults_all_channels", wall_all / max(rounds_all, 1) * 1e6,
+        f"rounds={rounds_all};n_kills={int(fs.n_kills)};"
+        f"time_lost_s={float(fs.time_lost):.0f}",
+    ))
+
+    # 3. blacklist recovery: the breaker must beat the blackhole site
+    jobs, sites, flaky_idx = flaky_workload(flaky_jobs, 4, arrival_span=span)
+    base = dict(job_backoff=120.0)
+    fl_off = make_faults(4, jobs.capacity, **base)
+    fl_on = make_faults(4, jobs.capacity, blacklist_threshold=0.6,
+                        blacklist_alpha=0.5, blacklist_cooldown=600.0, **base)
+    kw = dict(max_retries=6, iters=1, seed0=1)
+    _, _, r_off = timed(jobs, sites, faults=fl_off, **kw)
+    _, _, r_on = timed(jobs, sites, faults=fl_on, **kw)
+    mk_off, mk_on = float(r_off.makespan), float(r_on.makespan)
+    win_pct = 100.0 * (1.0 - mk_on / mk_off)
+    print("# blacklist recovery on the blackhole-site scenario")
+    print(csv_row(
+        "faults_blacklist_recovery", mk_on,
+        f"no_blacklist_makespan_s={mk_off:.0f};win_pct={win_pct:.1f};"
+        f"trips={int(r_on.ext['faults'].n_bl_trips)};"
+        f"flaky_fails={int(np.asarray(r_on.sites.n_failed)[flaky_idx[0]])}",
+    ))
+    if win_pct <= 0.0:
+        raise SystemExit(
+            f"blacklisting did not improve the flaky-grid makespan "
+            f"({mk_on:.0f}s vs {mk_off:.0f}s)"
+        )
+
+
+if __name__ == "__main__":
+    main()

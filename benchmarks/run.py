@@ -25,6 +25,7 @@ from . import (
     bench_engine_rounds,
     bench_ensemble,
     bench_events,
+    bench_faults,
     bench_job_scaling,
     bench_site_scaling,
     bench_transfers,
@@ -43,6 +44,7 @@ SUITES = {
     "ensemble_vmap": bench_ensemble.main,
     "data_movement": bench_data_movement.main,
     "transfers": bench_transfers.main,
+    "faults": bench_faults.main,
     "availability": bench_availability.main,
     "workflow": bench_workflow.main,
     "wlcg_scale": bench_wlcg_scale.main,

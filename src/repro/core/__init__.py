@@ -124,6 +124,15 @@ from .transfers import (  # noqa: F401
     make_transfers,
     transfers_subsystem,
 )
+from .faults import (  # noqa: F401
+    BL_CLOSED,
+    BL_HALF_OPEN,
+    BL_TRIPPED,
+    FaultState,
+    FaultsConfig,
+    faults_subsystem,
+    make_faults,
+)
 from .platform import (  # noqa: F401
     ExecutionParams,
     apply_site_params,
@@ -131,6 +140,7 @@ from .platform import (  # noqa: F401
     deactivate_sites,
     dump_platform,
     load_availability,
+    load_faults,
     load_platform,
 )
 from .policies import (  # noqa: F401
@@ -144,10 +154,13 @@ from .policies import (  # noqa: F401
     with_fused_assign,
 )
 from .workload import (  # noqa: F401
+    flaky_grid,
     flaky_sites,
     from_records,
     lm_job_records,
+    lossy_links,
     maintenance_calendar,
+    replica_loss_calendar,
     rolling_brownout,
     synthetic_panda_jobs,
 )

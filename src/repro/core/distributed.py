@@ -86,6 +86,7 @@ def _prepare_subsystems(kw: dict, jobs, sites, mesh: Mesh, old_capacity: int) ->
         availability=kw.pop("availability", None),
         workflow=kw.pop("workflow", None),
         transfers=kw.pop("transfers", None),
+        faults=kw.pop("faults", None),
         subsystems=kw.pop("subsystems", ()),
         jobs=jobs,
         sites=sites,

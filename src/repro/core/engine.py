@@ -385,7 +385,12 @@ def _init_state(
             jobs0, sites0, policy, policy_state0, jnp.float32(0.0),
             jax.random.fold_in(rng, CAND_SALT), ext0, topk,
         )
-    if _packed_order_ok(policy, jobs0.capacity, sites0.capacity):
+    # the packed key assumes run-constant arrivals — a subsystem that pushes
+    # arrivals (faults resubmission backoff) disables the fast path statically
+    mutates_arrival = any(
+        getattr(sub.config, "mutates_arrival", False) for sub in subsystems
+    )
+    if not mutates_arrival and _packed_order_ok(policy, jobs0.capacity, sites0.capacity):
         # run-constant start-order key suffix (see _start_order_packed)
         ext0["~srank"] = _static_start_rank(jobs0)
     log_extra0 = {}
@@ -705,7 +710,10 @@ def _round_fns(
         t_serv = ctx.t_serv
 
         u_fail = jax.random.uniform(k_fail, (J,))
-        will_fail = started & (u_fail < sites.fail_rate[jnp.minimum(jobs.site, S - 1)])
+        # clip (not minimum): unassigned rows carry site == -1, and minimum
+        # would map them to the *last* site's fail rate — masked by `started`
+        # today, but an OOB/NaN-hygiene hazard under refactors
+        will_fail = started & (u_fail < sites.fail_rate[jnp.clip(jobs.site, 0, S - 1)])
         # a failing attempt dies partway through its service time
         frac = jax.random.uniform(k_frac, (J,), minval=0.05, maxval=1.0)
         t_fin = clock + jnp.where(will_fail, t_serv * frac, t_serv)
@@ -885,6 +893,7 @@ def simulate(
     availability=None,
     workflow=None,
     transfers=None,
+    faults=None,
     subsystems=(),
     max_rounds: int = 100_000,
     horizon: float = float("inf"),
@@ -951,6 +960,12 @@ def simulate(
       when the data subsystem is on — each completing parent materializes its
       ``jobs.out_dataset`` into the replica catalog at the site it ran on.
 
+    - ``faults=`` (a ``FaultState`` from ``make_faults``, DESIGN.md §13) adds
+      fault injection and recovery: per-link transfer failures with
+      exponential-backoff re-enqueue, resubmission backoff, walltime kills, a
+      replica-loss calendar, and adaptive site blacklisting with a half-open
+      circuit breaker.  The default-constructed state is inert.
+
     ``subsystems=((Subsystem, state0), ...)`` appends custom subsystems after
     the built-ins (see ``examples/custom_subsystem.py``).  Every ``None``/
     absent subsystem costs nothing: specialization is static, so such runs
@@ -963,6 +978,7 @@ def simulate(
         availability=availability,
         workflow=workflow,
         transfers=transfers,
+        faults=faults,
         subsystems=subsystems,
         jobs=jobs0,
         sites=sites0,
@@ -1042,6 +1058,7 @@ def init_sim(
     availability=None,
     workflow=None,
     transfers=None,
+    faults=None,
     subsystems=(),
     max_rounds: int = 100_000,
     log_rows: int = 0,
@@ -1063,6 +1080,7 @@ def init_sim(
         availability=availability,
         workflow=workflow,
         transfers=transfers,
+        faults=faults,
         subsystems=subsystems,
         jobs=jobs0,
         sites=sites0,

@@ -234,6 +234,41 @@ def availability_rows(result: SimResult, site_names=None) -> list[dict]:
     return rows
 
 
+_BL_NAMES = {0: "closed", 1: "tripped", 2: "half-open"}
+
+
+def fault_rows(result: SimResult, site_names=None) -> list[dict]:
+    """One row per site from the faults subsystem (DESIGN.md §13): the final
+    EWMA failure score, circuit-breaker state, and how many replica-loss
+    events hit the site — plus the run-level fault counters repeated on each
+    row (like ``availability_rows``' cumulative ``n_preempted``).  A run
+    without ``faults=`` produces no rows.
+    """
+    fs = (getattr(result, "ext", None) or {}).get("faults")
+    if fs is None:
+        return []
+    score = np.asarray(fs.score)
+    bl = np.asarray(fs.bl_state)
+    loss_s = np.asarray(fs.loss_s)
+    loss_done = np.asarray(fs.loss_done)
+    name = lambda s: (site_names[s] if site_names else f"site{s}")
+    rows = []
+    for s in range(score.shape[-1]):
+        rows.append(
+            dict(
+                site=name(s),
+                fault_score=round(float(score[s]), 4),
+                blacklist=_BL_NAMES.get(int(bl[s]), "?"),
+                loss_events=int(((loss_s == s) & loss_done).sum()),
+                n_kills=int(fs.n_kills),
+                n_xfer_fail=int(fs.n_xfer_fail),
+                n_bl_trips=int(fs.n_bl_trips),
+                time_lost=round(float(fs.time_lost), 3),
+            )
+        )
+    return rows
+
+
 def to_csv(rows: list[dict]) -> str:
     if not rows:
         return ""
@@ -274,6 +309,14 @@ def _ml_context(result: SimResult) -> dict:
         # subsystem ran, preserving byte-identity of existing exports
         ctx["net_bw"] = np.asarray(ext["data"].network.bw, np.float64)
         names = names + ["xfer_queue_wait", "xfer_queue_depth", "src_link_log_bw"]
+    ctx["faults_bw"] = None
+    if "faults" in ext:
+        # fault features (DESIGN.md §13): the job's cumulative backoff wait
+        # and retry count, and its final site's EWMA failure score — what a
+        # surrogate needs to learn failure-shaped walltime tails
+        ctx["faults_bw"] = np.asarray(ext["faults"].backoff_wait, np.float64)
+        ctx["fault_score"] = np.asarray(ext["faults"].score, np.float64)
+        names = names + ["fault_backoff_wait", "fault_retries", "site_fault_score"]
     ctx["names"] = names
     return ctx
 
@@ -332,6 +375,16 @@ def _ml_block(ctx: dict, sl: slice = slice(None)) -> dict[str, np.ndarray]:
                 jobs["xfer_wait"],
                 jobs["xfer_qdepth"].astype(np.float64),
                 np.where(src >= 0, np.log1p(ctx["net_bw"][src_c, sid]), 0.0),
+            ],
+            axis=-1,
+        )[done]
+        feats = np.concatenate([feats, extra], axis=-1)
+    if ctx["faults_bw"] is not None:
+        extra = np.stack(
+            [
+                ctx["faults_bw"][sl],
+                jobs["retries"].astype(np.float64),
+                ctx["fault_score"][sid],
             ],
             axis=-1,
         )[done]
@@ -516,6 +569,7 @@ _STREAMS = {
     "transfer": (transfer_rows, True),
     "workflow": (workflow_rows, False),
     "availability": (availability_rows, True),
+    "fault": (fault_rows, True),
 }
 
 

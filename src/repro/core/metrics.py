@@ -34,6 +34,14 @@ class Metrics(NamedTuple):
     p50_xfer_time: jax.Array   # transfer duration of the last stage-in
     p95_xfer_time: jax.Array
     p99_xfer_time: jax.Array
+    # fault-channel tails (DESIGN.md §13) — 0 when faults are off
+    time_lost_failures: jax.Array  # core-attempt seconds burned by failures/kills
+    p50_retries: jax.Array         # retry counts over terminated jobs
+    p95_retries: jax.Array
+    p99_retries: jax.Array
+    p50_backoff_wait: jax.Array    # cumulative resubmission backoff per job
+    p95_backoff_wait: jax.Array
+    p99_backoff_wait: jax.Array
 
 
 def _masked_percentile(values: jax.Array, mask: jax.Array, n: jax.Array, q: float):
@@ -77,6 +85,25 @@ def compute_metrics(result: SimResult) -> Metrics:
     moved = done & (jobs.xfer_bytes > 0)
     n_moved = moved.sum()
 
+    # fault tails: retry counts always exist; backoff waits / time lost come
+    # from the faults subsystem state when it ran (static python branch, so
+    # faults-off runs trace identically to before).
+    term = done | failed
+    n_term = term.sum()
+    retries_f = jobs.retries.astype(jnp.float32)
+    fs = (getattr(result, "ext", None) or {}).get("faults")
+    if fs is not None:
+        time_lost = fs.time_lost
+        bwait = fs.backoff_wait
+        waited = term & (bwait > 0)
+        n_waited = waited.sum()
+        p50_bw = _masked_percentile(bwait, waited, n_waited, 0.50)
+        p95_bw = _masked_percentile(bwait, waited, n_waited, 0.95)
+        p99_bw = _masked_percentile(bwait, waited, n_waited, 0.99)
+    else:
+        time_lost = jnp.float32(0.0)
+        p50_bw = p95_bw = p99_bw = jnp.float32(0.0)
+
     return Metrics(
         makespan=result.makespan,
         n_done=n_done,
@@ -99,6 +126,13 @@ def compute_metrics(result: SimResult) -> Metrics:
         p50_xfer_time=_masked_percentile(jobs.xfer_time, moved, n_moved, 0.50),
         p95_xfer_time=_masked_percentile(jobs.xfer_time, moved, n_moved, 0.95),
         p99_xfer_time=_masked_percentile(jobs.xfer_time, moved, n_moved, 0.99),
+        time_lost_failures=time_lost,
+        p50_retries=_masked_percentile(retries_f, term, n_term, 0.50),
+        p95_retries=_masked_percentile(retries_f, term, n_term, 0.95),
+        p99_retries=_masked_percentile(retries_f, term, n_term, 0.99),
+        p50_backoff_wait=p50_bw,
+        p95_backoff_wait=p95_bw,
+        p99_backoff_wait=p99_bw,
     )
 
 
@@ -116,5 +150,10 @@ def summary_str(m: Metrics) -> str:
         f"xfer_wait_p50/95/99={float(m.p50_xfer_wait):.1f}/{float(m.p95_xfer_wait):.1f}/"
         f"{float(m.p99_xfer_wait):.1f}s "
         f"xfer_time_p50/95/99={float(m.p50_xfer_time):.1f}/{float(m.p95_xfer_time):.1f}/"
-        f"{float(m.p99_xfer_time):.1f}s"
+        f"{float(m.p99_xfer_time):.1f}s "
+        f"time_lost={float(m.time_lost_failures):.1f}s "
+        f"retries_p50/95/99={float(m.p50_retries):.0f}/{float(m.p95_retries):.0f}/"
+        f"{float(m.p99_retries):.0f} "
+        f"backoff_p50/95/99={float(m.p50_backoff_wait):.1f}/{float(m.p95_backoff_wait):.1f}/"
+        f"{float(m.p99_backoff_wait):.1f}s"
     )

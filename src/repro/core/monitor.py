@@ -309,6 +309,18 @@ def availability_timeline(result: SimResult) -> np.ndarray:
     return extra_timeline(result, "site_avail", default=1.0)
 
 
+def fault_score_timeline(result: SimResult) -> np.ndarray:
+    """[T, S] EWMA fault score per logged frame (DESIGN.md §13) — watch a
+    flaky site's score climb toward the blacklist threshold."""
+    return extra_timeline(result, "site_fault_score")
+
+
+def blacklist_timeline(result: SimResult) -> np.ndarray:
+    """[T, S] circuit-breaker state per logged frame (0 closed, 1 tripped,
+    2 half-open) — the trip/cooldown/probe cycle as a step chart."""
+    return extra_timeline(result, "site_blacklist")
+
+
 def workflow_timeline(result: SimResult) -> tuple[np.ndarray, np.ndarray]:
     """Per-workflow stage-completion matrix (DESIGN.md §6 dashboard feed).
 

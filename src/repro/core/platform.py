@@ -168,6 +168,68 @@ def load_availability(spec: dict | str, names=None, *, n_sites: int | None = Non
     return make_availability(n_sites, windows)
 
 
+def load_faults(spec: dict | str, names=None, *, n_sites: int | None = None,
+                job_capacity: int | None = None):
+    """Build a ``FaultState`` from a CGSim-style JSON payload.
+
+    spec: {"link_fail_p"?: {"default": p, "links": [{"src": <name or idx>,
+                                                     "dst": ..., "p": p}]},
+           "xfer_backoff"?: s, "max_xfer_attempts"?: n,
+           "job_backoff"?: s, "walltime"?: s,
+           "replica_loss"?: [{"t": s, "dataset": d, "site": <name or idx>}],
+           "blacklist"?: {"threshold": x, "alpha"?: a, "cooldown"?: s}}
+
+    Site names resolve through ``names`` (the ``load_platform`` name list);
+    ``n_sites`` defaults to ``len(names)``.  ``job_capacity`` must match the
+    run's ``JobsState`` (also accepts the state itself).
+    """
+    from .faults import make_faults
+
+    if isinstance(spec, str):
+        spec = json.loads(spec)
+    if n_sites is None:
+        if names is None:
+            raise ValueError("load_faults needs names= or n_sites=")
+        n_sites = len(names)
+    if job_capacity is None:
+        raise ValueError("load_faults needs job_capacity= (int or JobsState)")
+    index = {nm: i for i, nm in enumerate(names or [])}
+
+    def site_idx(site):
+        if isinstance(site, str):
+            if site not in index:
+                raise ValueError(f"unknown site name {site!r}")
+            return index[site]
+        return int(site)
+
+    kw = {}
+    lf = spec.get("link_fail_p")
+    if lf is not None:
+        if isinstance(lf, dict):
+            mat = np.full((n_sites, n_sites), float(lf.get("default", 0.0)), np.float32)
+            for link in lf.get("links", []):
+                mat[site_idx(link["src"]), site_idx(link["dst"])] = float(link["p"])
+            kw["link_fail_p"] = mat
+        else:
+            kw["link_fail_p"] = float(lf)
+    for key in ("xfer_backoff", "max_xfer_attempts", "job_backoff", "walltime"):
+        if key in spec:
+            kw[key] = spec[key]
+    if "replica_loss" in spec:
+        kw["replica_loss"] = [
+            (float(ev["t"]), int(ev["dataset"]), site_idx(ev["site"]))
+            for ev in spec["replica_loss"]
+        ]
+    bl = spec.get("blacklist")
+    if bl is not None:
+        kw["blacklist_threshold"] = float(bl["threshold"])
+        if "alpha" in bl:
+            kw["blacklist_alpha"] = float(bl["alpha"])
+        if "cooldown" in bl:
+            kw["blacklist_cooldown"] = float(bl["cooldown"])
+    return make_faults(n_sites, job_capacity, **kw)
+
+
 def deactivate_sites(sites: SiteState, down: jax.Array) -> SiteState:
     """Fault injection: mark sites inactive (jobs there keep running; nothing
     new is assigned — the dispatcher's feasibility mask reads ``active``)."""

@@ -37,10 +37,11 @@ trace-time ``RoundCtx``:
   capacity padding (host)    | pad_jobs(sub, state0, old_J, new_J) -> state0
 
 Hooks fire in subsystem-tuple order within each phase; the canonical order
-for the built-ins is (availability, workflow, data, transfers), which
+for the built-ins is (availability, workflow, data, transfers, faults), which
 reproduces the hand-written engine exactly: outage preemption before
 cascade-cancel, output materialization before replica-source selection,
-stage-in pricing before transfer-queue diversion (DESIGN.md §11).
+stage-in pricing before transfer-queue diversion, and fault recovery last so
+it observes every other subsystem's transitions (DESIGN.md §11, §13).
 """
 from __future__ import annotations
 
@@ -170,6 +171,7 @@ def resolve_subsystems(
     availability=None,
     workflow=None,
     transfers=None,
+    faults=None,
     subsystems=(),
     jobs=None,
     sites=None,
@@ -178,11 +180,11 @@ def resolve_subsystems(
     """Normalize the engine's keyword API into ``(static tuple, ext0 dict)``.
 
     The legacy kwargs (``availability=``, ``workflow=``, ``data_policy=`` +
-    ``network=``/``replicas=``, ``transfers=``) map onto the built-in
-    subsystems in canonical order — availability, workflow, data, transfers —
-    followed by any explicit ``subsystems=((Subsystem, state0), ...)`` pairs
-    in caller order.  Host-side ``validate`` hooks run here, before anything
-    is traced.
+    ``network=``/``replicas=``, ``transfers=``, ``faults=``) map onto the
+    built-in subsystems in canonical order — availability, workflow, data,
+    transfers, faults — followed by any explicit
+    ``subsystems=((Subsystem, state0), ...)`` pairs in caller order.
+    Host-side ``validate`` hooks run here, before anything is traced.
     """
     pairs: list[tuple[Subsystem, Any]] = []
     if availability is not None:
@@ -208,6 +210,12 @@ def resolve_subsystems(
         from .transfers import transfers_subsystem
 
         pairs.append((transfers_subsystem(), transfers))
+    if faults is not None:
+        from .faults import faults_subsystem
+
+        # the static channel flags are derived host-side from the concrete
+        # state here, before anything is traced (FaultsConfig docstring)
+        pairs.append((faults_subsystem(faults), faults))
     for entry in subsystems:
         if isinstance(entry, Subsystem):
             raise TypeError(

@@ -300,6 +300,16 @@ def _tr_on_completions(sub, ctx):
     fin = act & (ts.t_done <= ctx.clock) & staging
     cancel = (ts.stat > T_IDLE) & ~staging
 
+    # fault injection (static specialization, like the data subsystem's
+    # defer branch): would-complete flows may fail with per-link probability
+    # before release — failed rows clear like cancels but land on the fault
+    # ledger (n_enq == n_done + n_cancel + faults.n_xfer_fail)
+    xfail = jnp.zeros((J,), bool)
+    if "faults" in ctx.ext:
+        from .faults import inject_transfer_failures
+
+        fin, xfail, jobs = inject_transfer_failures(ctx, ts, fin, jobs)
+
     # release: price the post-staging remainder into t_finish so the job
     # rejoins the round clock.  The engine's partial-failure fraction was
     # consumed by the staging gate's inf, so failing attempts re-draw it
@@ -314,12 +324,12 @@ def _tr_on_completions(sub, ctx):
     # deferred landing: replica materialization + WAN counters at the dst
     ctx.ext["data"] = land_deferred(dext, ctx.jobs, fin, ts.cache, ctx.clock, S)
 
-    clear = fin | cancel
+    clear = fin | cancel | xfail
     ts = ts._replace(
         stat=jnp.where(clear, T_IDLE, ts.stat),
         rem=jnp.where(clear, 0.0, rem),
         t_done=jnp.where(clear, INF, ts.t_done),
-        active=ts.active - _link_count(fin | (cancel & act), lc, L),
+        active=ts.active - _link_count(fin | xfail | (cancel & act), lc, L),
         n_done=ts.n_done + fin.sum().astype(jnp.int32),
         n_cancel=ts.n_cancel + cancel.sum().astype(jnp.int32),
         bytes_done=ts.bytes_done + jnp.where(fin, jobs.xfer_bytes, 0.0).sum(),

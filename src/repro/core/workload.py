@@ -185,6 +185,96 @@ def rolling_brownout(
     return make_availability(n_sites, windows)
 
 
+# --------------------------------------------------------------------------
+# fault-injection scenario builders (DESIGN.md §13)
+# --------------------------------------------------------------------------
+
+
+def lossy_links(
+    n_sites: int,
+    *,
+    p: float = 0.05,
+    hot=None,
+    hot_p: float = 0.3,
+    seed: int = 0,
+) -> np.ndarray:
+    """Per-link transfer-failure probabilities for ``make_faults(link_fail_p=)``.
+
+    Every WAN link (``src != dst``) fails with probability ``p``; links
+    touching a ``hot`` site (index list, or an int count of sites sampled by
+    ``seed``) fail with ``hot_p`` — the degraded-storage-endpoint scenario
+    where one SE times out most third-party copies.  Local links never fail.
+    """
+    mat = np.full((n_sites, n_sites), float(p), np.float32)
+    if hot is not None:
+        if np.ndim(hot) == 0:
+            rng = np.random.default_rng(seed)
+            hot = rng.choice(n_sites, size=int(hot), replace=False)
+        for s in np.asarray(hot, np.int64).ravel():
+            mat[s, :] = hot_p
+            mat[:, s] = hot_p
+    np.fill_diagonal(mat, 0.0)
+    return mat
+
+
+def replica_loss_calendar(
+    n_datasets: int,
+    n_sites: int,
+    *,
+    horizon: float,
+    rate: float = 1.0 / (24 * 3600.0),
+    seed: int = 0,
+    sites=None,
+) -> list[tuple[float, int, int]]:
+    """Sampled ``(t, dataset, site)`` loss events for ``make_faults(replica_loss=)``.
+
+    Each candidate site loses a uniformly-chosen dataset replica as a Poisson
+    process with ``rate`` events/second — disk crashes and SE corruptions that
+    force readers back to the origin over the WAN.  ``n_datasets`` also
+    accepts a ``ReplicaState``.  Origin-pinned copies are immune at
+    application time, so sampling the origin site is harmless.
+    """
+    sz = getattr(n_datasets, "size", None)
+    D = sz.shape[-1] if getattr(sz, "ndim", 0) else int(n_datasets)
+    rng = np.random.default_rng(seed)
+    chosen = range(n_sites) if sites is None else sites
+    events = []
+    for s in chosen:
+        t = float(rng.exponential(1.0 / rate))
+        while t < horizon:
+            events.append((t, int(rng.integers(0, D)), int(s)))
+            t += float(rng.exponential(1.0 / rate))
+    events.sort()
+    return events
+
+
+def flaky_grid(
+    n_sites: int,
+    *,
+    n_flaky: int = 1,
+    flaky_fail_rate: float = 0.9,
+    base_fail_rate: float = 0.02,
+    seed: int = 0,
+    **platform_kw,
+):
+    """Flaky-grid platform: an ``atlas_like_platform`` where ``n_flaky``
+    sites fail almost every job they run (``flaky_fail_rate``) while the
+    rest stay healthy — the scenario where adaptive blacklisting
+    (``make_faults(blacklist_threshold=)``) pays off (see
+    ``examples/chaos_day.py``).  Returns ``(sites, flaky_idx)``.
+    """
+    from .platform import atlas_like_platform
+
+    sites = atlas_like_platform(n_sites, seed=seed, fail_rate=base_fail_rate, **platform_kw)
+    rng = np.random.default_rng(seed + 1)
+    flaky_idx = np.sort(rng.choice(n_sites, size=int(n_flaky), replace=False))
+    fr = np.asarray(sites.fail_rate).copy()
+    fr[flaky_idx] = flaky_fail_rate
+    import jax.numpy as jnp
+
+    return sites._replace(fail_rate=jnp.asarray(fr, jnp.float32)), flaky_idx
+
+
 _FIELDS = ("job_id", "arrival", "work", "cores", "memory", "bytes_in", "bytes_out", "priority")
 
 

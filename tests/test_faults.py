@@ -1,0 +1,470 @@
+"""Fault injection & recovery subsystem (ISSUE 10, DESIGN.md §13).
+
+Pins the subsystem's contract from four sides:
+
+- exactness: a default-constructed (all-channels-off) ``FaultState`` is
+  bit-for-bit identical to ``faults=None`` — alone and with the other four
+  built-in subsystems attached;
+- channel behavior: lossy links fail and re-enqueue FTS flows under the
+  extended conservation ledger, exhausted stage-ins take the engine's retry
+  path, resubmission backoff pushes arrivals, walltime kills bound DONE
+  durations, the loss calendar drops only non-pinned replicas, and the
+  blacklist circuit breaker trips / probes / recovers;
+- the acceptance demo: adaptive blacklisting beats no-blacklisting on a
+  ``flaky_grid`` when failures cost backoff time;
+- composition: lane ≡ solo under ``simulate_many`` and sharded ≡ vmapped
+  with all five subsystems attached, plus metrics/rows/ML-export schemas.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DONE,
+    FAILED,
+    BL_CLOSED,
+    BL_HALF_OPEN,
+    BL_TRIPPED,
+    Scenario,
+    catalog_invariants,
+    compute_metrics,
+    flaky_grid,
+    get_data_policy,
+    get_policy,
+    load_faults,
+    lossy_links,
+    make_faults,
+    make_replicas,
+    make_transfers,
+    replica_loss_calendar,
+    simulate,
+    simulate_many,
+    summary_str,
+    synthetic_panda_jobs,
+    uniform_network,
+    zipf_dataset_sizes,
+)
+from repro.core.events import fault_rows, log_frames, ml_dataset
+from repro.core.faults import faults_subsystem
+from repro.core.monitor import blacklist_timeline, fault_score_timeline
+from repro.core.platform import atlas_like_platform
+
+from test_ensemble_lanes import lane, tree_equal
+from test_transfers import hot_link_scenario, quad_scenarios, run
+
+
+def _terminated(res):
+    valid = np.asarray(res.jobs.valid)
+    state = np.asarray(res.jobs.state)[valid]
+    return np.isin(state, [DONE, FAILED]).all()
+
+
+# --------------------------------------------------------------------------
+# exactness: zeroed config ≡ faults off, bit for bit
+# --------------------------------------------------------------------------
+
+
+def test_default_state_is_bitstream_inert():
+    jobs = synthetic_panda_jobs(80, seed=3)
+    sites = atlas_like_platform(4, seed=12, fail_rate=0.1)
+    pol = get_policy("panda_dispatch")
+    key = jax.random.PRNGKey(0)
+    off = simulate(jobs, sites, pol, key)
+    on = simulate(jobs, sites, pol, key, faults=make_faults(4, jobs))
+    assert tree_equal(off.jobs, on.jobs) == []
+    assert tree_equal(off.sites, on.sites) == []
+    assert float(off.makespan) == float(on.makespan)
+    assert int(off.rounds) == int(on.rounds)
+    # the inert run really did carry the subsystem (and injected nothing —
+    # time_lost still observes the engine's own fail_rate failures)
+    fs = on.ext["faults"]
+    for c in ("n_xfer_fail", "n_kills", "n_lost_replicas", "n_bl_trips"):
+        assert int(getattr(fs, c)) == 0
+    assert float(fs.time_lost) > 0.0
+
+
+def test_default_state_inert_with_all_subsystems():
+    """Five-subsystem stack: a zeroed faults state changes nothing about an
+    availability+workflow+data+transfers run."""
+    scens, _, solo_kw = quad_scenarios(K=1)
+    s = scens[0]
+    pol = get_policy("panda_dispatch")
+    key = jax.random.PRNGKey(5)
+    off = simulate(s.jobs, s.sites, pol, key, **solo_kw[0])
+    on = simulate(s.jobs, s.sites, pol, key,
+                  faults=make_faults(3, s.jobs), **solo_kw[0])
+    assert tree_equal(off.jobs, on.jobs) == []
+    assert tree_equal(off.sites, on.sites) == []
+    assert tree_equal(off.replicas, on.replicas) == []
+    assert tree_equal(off.ext["transfers"], on.ext["transfers"]) == []
+    assert float(off.makespan) == float(on.makespan)
+    assert int(off.rounds) == int(on.rounds)
+
+
+# --------------------------------------------------------------------------
+# channel 1: transfer-failure injection + exponential backoff
+# --------------------------------------------------------------------------
+
+
+def test_lossy_links_extend_transfer_ledger():
+    jobs, sites, net, rep = hot_link_scenario(n_jobs=16, n_sites=3, cores_per_site=32)
+    fl = make_faults(3, jobs, link_fail_p=lossy_links(3, p=0.4, seed=1),
+                     xfer_backoff=30.0, max_xfer_attempts=4)
+    res = run(jobs, sites, net, rep,
+              transfers=make_transfers(3, jobs.capacity, max_active=2), faults=fl)
+    fs, ts = res.ext["faults"], res.ext["transfers"]
+    assert int(fs.n_xfer_fail) > 0
+    assert int(fs.n_xfer_retry) > 0
+    # conservation: every enqueue completes, cancels, or was failed by us
+    assert int(ts.n_enq) == int(ts.n_done) + int(ts.n_cancel) + int(fs.n_xfer_fail)
+    # queues drained, no retry left pending, workload finished
+    assert (np.asarray(ts.stat) == 0).all()
+    assert (np.asarray(ts.active) == 0).all()
+    assert not np.isfinite(np.asarray(fs.retry_at)).any()
+    assert _terminated(res)
+    # injected failures delayed staging: jobs waited out backoff windows
+    assert float(np.asarray(fs.backoff_wait).sum()) > 0.0
+
+
+def test_exhausted_transfers_fail_the_job_attempt():
+    """p=1 links: every stage-in burns through max_xfer_attempts and fails
+    the attempt; engine retries re-stage until the job goes terminal."""
+    jobs, sites, net, rep = hot_link_scenario(n_jobs=6, n_sites=2, cores_per_site=16)
+    fl = make_faults(2, jobs, link_fail_p=1.0, xfer_backoff=5.0, max_xfer_attempts=2)
+    res = run(jobs, sites, net, rep,
+              transfers=make_transfers(2, jobs.capacity, max_active=2), faults=fl)
+    fs, ts = res.ext["faults"], res.ext["transfers"]
+    valid = np.asarray(res.jobs.valid)
+    assert (np.asarray(res.jobs.state)[valid] == FAILED).all()
+    assert int(fs.n_xfer_exhaust) > 0
+    assert int(ts.n_done) == 0
+    assert int(ts.n_enq) == int(ts.n_cancel) + int(fs.n_xfer_fail)
+    # each engine attempt consumed exactly max_xfer_attempts transfer failures
+    retries = np.asarray(res.jobs.retries)[valid]
+    assert int(fs.n_xfer_fail) == 2 * (int(retries.sum()) + int(valid.sum()))
+
+
+# --------------------------------------------------------------------------
+# channel 2: resubmission backoff
+# --------------------------------------------------------------------------
+
+
+def test_job_backoff_pushes_resubmission_arrivals():
+    jobs = synthetic_panda_jobs(60, seed=3)
+    sites = atlas_like_platform(4, seed=12, fail_rate=0.25)
+    pol = get_policy("least_loaded")
+    key = jax.random.PRNGKey(0)
+    fl = make_faults(4, jobs, job_backoff=120.0)
+    res = simulate(jobs, sites, pol, key, faults=fl)
+    fs = res.ext["faults"]
+    valid = np.asarray(res.jobs.valid)
+    retried = (np.asarray(res.jobs.retries) > 0) & valid
+    assert retried.any()
+    assert _terminated(res)
+    # scheduled delays accumulated, and each retried job's arrival moved
+    assert float(np.asarray(fs.backoff_wait).sum()) > 0.0
+    arr0 = np.asarray(jobs.arrival)
+    arr1 = np.asarray(res.jobs.arrival)
+    assert (arr1[retried] > arr0[retried]).all()
+    assert (arr1[~retried & valid] == arr0[~retried & valid]).all()
+    # jobs still start only after their (pushed) arrival
+    s = np.asarray(res.jobs.t_start)[valid]
+    assert (arr1[valid] <= s + 1e-5).all()
+
+
+# --------------------------------------------------------------------------
+# walltime kills
+# --------------------------------------------------------------------------
+
+
+def test_walltime_kills_bound_done_durations():
+    jobs = synthetic_panda_jobs(60, seed=3)
+    sites = atlas_like_platform(4, seed=12)
+    pol = get_policy("least_loaded")
+    fl = make_faults(4, jobs, walltime=600.0)
+    res = simulate(jobs, sites, pol, jax.random.PRNGKey(0), faults=fl)
+    fs = res.ext["faults"]
+    assert int(fs.n_kills) > 0
+    assert float(fs.time_lost) > 0.0
+    assert _terminated(res)
+    valid = np.asarray(res.jobs.valid)
+    # kills are preemptions (not machine failures): the per-job counter
+    # accounts for every one, and resources came back (free cores == cores)
+    assert int(np.asarray(res.jobs.preempted)[valid].sum()) == int(fs.n_kills)
+    np.testing.assert_array_equal(
+        np.asarray(res.sites.free_cores), np.asarray(sites.cores)
+    )
+    # no DONE attempt exceeded the limit
+    done = (np.asarray(res.jobs.state) == DONE) & valid
+    dur = (np.asarray(res.jobs.t_finish) - np.asarray(res.jobs.t_start))[done]
+    assert (dur <= 600.0 * (1 + 1e-5)).all()
+
+
+# --------------------------------------------------------------------------
+# channel 3: replica-loss calendar
+# --------------------------------------------------------------------------
+
+
+def test_replica_loss_drops_only_unpinned_copies():
+    jobs = synthetic_panda_jobs(120, seed=3, n_datasets=8)
+    sites = atlas_like_platform(4, seed=12)
+    net = uniform_network(4, bw=1e6, latency=0.05)  # slow WAN: caches matter
+    sizes = zipf_dataset_sizes(8, seed=3, mean_bytes=2e9)
+    rep = make_replicas(sizes, disk_capacity=np.full(4, 1e13),
+                        origin=np.zeros(8, np.int32))
+    events = [(5000.0, d, s) for d in range(8) for s in (1, 2, 3)]
+    fl = make_faults(4, jobs, replica_loss=events)
+    res = simulate(
+        jobs, sites, get_policy("least_loaded"), jax.random.PRNGKey(0),
+        data_policy=get_data_policy("cache_on_read"), network=net, replicas=rep,
+        faults=fl,
+    )
+    fs = res.ext["faults"]
+    assert int(fs.n_lost_replicas) > 0
+    # every finite calendar entry fired
+    lt = np.asarray(fs.loss_t)
+    assert np.asarray(fs.loss_done)[np.isfinite(lt)].all()
+    # catalog stays exact and origins stay pinned
+    inv = catalog_invariants(res.replicas)
+    assert inv["capacity_ok"] and inv["accounting_ok"] and inv["origins_ok"]
+    present = np.asarray(res.replicas.present)
+    origin = np.asarray(res.replicas.origin)
+    assert present[np.arange(8), origin].all()
+    assert _terminated(res)
+
+
+def test_replica_loss_calendar_builder():
+    cal = replica_loss_calendar(8, 4, horizon=1e5, rate=1e-4, seed=2)
+    assert cal and cal == sorted(cal)
+    assert all(0 <= d < 8 and 0 <= s < 4 and 0 <= t < 1e5 for t, d, s in cal)
+    # accepts a ReplicaState for the dataset axis
+    rep = make_replicas(zipf_dataset_sizes(8, seed=3), np.full(4, 1e13),
+                        origin=np.zeros(8, np.int32))
+    cal2 = replica_loss_calendar(rep, 4, horizon=1e5, rate=1e-4, seed=2)
+    assert cal2 == cal
+    # the calendar feeds make_faults directly
+    make_faults(4, 16, replica_loss=cal)
+
+
+# --------------------------------------------------------------------------
+# channel 4: adaptive blacklisting (circuit breaker)
+# --------------------------------------------------------------------------
+
+
+def _flaky_run(blacklist, *, n_jobs=120, n_sites=4, seed=7, log_rows=0,
+               job_backoff=0.0, cooldown=600.0):
+    # homogeneous small sites + trickle arrivals: least_loaded is attracted
+    # to the flaky site because failing fast looks like draining fast (the
+    # classic blackhole-site dynamic blacklisting exists to break)
+    sites, flaky_idx = flaky_grid(n_sites, n_flaky=1, seed=12,
+                                  cores_range=(8, 8), speed_range=(10.0, 10.0))
+    rng = np.random.default_rng(seed)
+    jobs = synthetic_panda_jobs(n_jobs, seed=seed, capacity=n_jobs + 3)
+    jobs = jobs._replace(
+        arrival=jnp.asarray(
+            np.pad(np.sort(rng.uniform(0, 400.0, n_jobs)), (0, 3),
+                   constant_values=np.inf), jnp.float32),
+        work=jnp.asarray(
+            np.pad(rng.lognormal(np.log(800.0), 0.6, n_jobs), (0, 3)),
+            jnp.float32),
+        cores=jnp.ones((jobs.capacity,), jnp.int32),
+        memory=jnp.full((jobs.capacity,), 2.0),
+    )
+    kw = dict(job_backoff=job_backoff)
+    if blacklist:
+        kw.update(blacklist_threshold=0.6, blacklist_alpha=0.5,
+                  blacklist_cooldown=cooldown)
+    fl = make_faults(n_sites, jobs, **kw)
+    res = simulate(jobs, sites, get_policy("least_loaded"),
+                   jax.random.PRNGKey(1), max_retries=6, faults=fl,
+                   log_rows=log_rows)
+    return res, flaky_idx
+
+
+def test_blacklist_trips_and_probes():
+    # cooldown well under the run length so half-open probes fire mid-run
+    res, flaky_idx = _flaky_run(True, log_rows=8192, cooldown=150.0)
+    fs = res.ext["faults"]
+    assert int(fs.n_bl_trips) >= 1
+    assert int(fs.n_probes) >= 1
+    assert _terminated(res)
+    # the breaker tripped on the flaky site, and its score actually climbed
+    bl = blacklist_timeline(res)
+    score = fault_score_timeline(res)
+    s = int(flaky_idx[0])
+    assert (bl[:, s] == BL_TRIPPED).any()
+    assert score[:, s].max() >= 0.6
+    # healthy sites never trip
+    healthy = [i for i in range(bl.shape[1]) if i != s]
+    assert (bl[:, healthy] == BL_CLOSED).all()
+
+    # zero starts while tripped: across consecutive logged rounds that both
+    # end TRIPPED, the site's running count can only drain (the log ring did
+    # not wrap, so this covers the whole run)
+    assert int(np.asarray(res.log.cursor)) <= 8192
+    frames = log_frames(res)
+    running = np.asarray([f["site_running"] for f in frames])
+    both = (bl[:-1, s] == BL_TRIPPED) & (bl[1:, s] == BL_TRIPPED)
+    assert both.any()
+    assert (running[1:, s][both] <= running[:-1, s][both]).all()
+
+
+def test_blacklist_probe_resolution_leaves_legal_state():
+    """The breaker re-opens mid-run and admits probes; the flaky site's
+    probes mostly fail (fail_rate 0.9) and re-trip it, but the run
+    terminates with every breaker accounted for in a legal state."""
+    res, flaky_idx = _flaky_run(True, cooldown=150.0)
+    fs = res.ext["faults"]
+    assert int(fs.n_probes) >= 1
+    bl_end = np.asarray(fs.bl_state)
+    assert np.isin(bl_end, [BL_CLOSED, BL_TRIPPED, BL_HALF_OPEN]).all()
+    # a closed breaker carries no cooldown timer; a tripped one always does
+    until = np.asarray(fs.bl_until)
+    assert not np.isfinite(until[bl_end == BL_CLOSED]).any()
+    assert np.isfinite(until[bl_end == BL_TRIPPED]).all()
+
+
+def test_blacklisting_improves_flaky_grid_makespan():
+    """The acceptance demo: when failures cost real time (resubmission
+    backoff), routing around the flaky site wins the makespan."""
+    off, _ = _flaky_run(False, job_backoff=120.0)
+    on, flaky_idx = _flaky_run(True, job_backoff=120.0)
+    assert _terminated(off) and _terminated(on)
+    assert float(on.makespan) < float(off.makespan)
+    # and it won by sending less work into the woodchipper
+    s = int(flaky_idx[0])
+    assert int(on.sites.n_failed[s]) < int(off.sites.n_failed[s])
+
+
+# --------------------------------------------------------------------------
+# ensembles: five-subsystem lane ≡ solo, sharded ≡ vmapped
+# --------------------------------------------------------------------------
+
+
+def quint_scenarios(K=3):
+    """quad_scenarios plus a per-lane faults state — all five built-ins."""
+    scens, subs, solo_kw = quad_scenarios(K=K)
+    subs = subs + (faults_subsystem(job_backoff=True, blacklist=True),)
+    out = []
+    for k, s in enumerate(scens):
+        fl = make_faults(
+            3, s.jobs, link_fail_p=0.15 + 0.1 * k, xfer_backoff=20.0,
+            job_backoff=30.0, walltime=5000.0 + 500.0 * k,
+            replica_loss=[(400.0 * (k + 1), 1 + k, (k + 1) % 3)],
+            blacklist_threshold=0.7, blacklist_alpha=0.4,
+            blacklist_cooldown=400.0,
+        )
+        out.append(Scenario(s.jobs, s.sites, {**s.ext, "faults": fl}))
+        solo_kw[k]["faults"] = fl
+    return out, subs, solo_kw
+
+
+def test_five_subsystem_lanes_equal_solo():
+    scens, subs, solo_kw = quint_scenarios()
+    pol = get_policy("least_loaded")
+    keys = jax.random.split(jax.random.PRNGKey(4), len(scens))
+    res = simulate_many(scens, pol, jax.random.PRNGKey(4), subsystems=subs)
+    for i, s in enumerate(scens):
+        solo = simulate(s.jobs, s.sites, pol, keys[i], **solo_kw[i])
+        assert tree_equal(lane(res, i), solo) == []
+    # the lanes actually exercised the fault channels
+    assert int(np.asarray(res.ext["faults"].n_xfer_fail).sum()) > 0
+
+
+def test_five_subsystem_sharded_equals_vmapped():
+    from repro.core.distributed import simulate_many_sharded
+
+    scens, subs, _ = quint_scenarios()
+    pol = get_policy("least_loaded")
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    r_v = simulate_many(scens, pol, jax.random.PRNGKey(4), subsystems=subs)
+    r_s = simulate_many_sharded(scens, pol, jax.random.PRNGKey(4), mesh,
+                                subsystems=subs)
+    assert tree_equal(r_s, r_v) == []
+
+
+# --------------------------------------------------------------------------
+# metrics / events / export schema / JSON loader
+# --------------------------------------------------------------------------
+
+
+def test_metrics_rows_and_ml_features():
+    sites, _ = flaky_grid(4, n_flaky=1, seed=12)
+    jobs = synthetic_panda_jobs(100, seed=3)
+    fl = make_faults(4, jobs, job_backoff=90.0, walltime=2500.0,
+                     blacklist_threshold=0.6, blacklist_alpha=0.5,
+                     blacklist_cooldown=500.0)
+    pol = get_policy("least_loaded")
+    r_on = simulate(jobs, sites, pol, jax.random.PRNGKey(0), faults=fl)
+    r_off = simulate(jobs, sites, pol, jax.random.PRNGKey(0))
+
+    m_on, m_off = compute_metrics(r_on), compute_metrics(r_off)
+    assert float(m_on.time_lost_failures) > 0.0
+    assert float(m_on.p99_backoff_wait) > 0.0
+    assert float(m_on.p50_retries) <= float(m_on.p95_retries) <= float(m_on.p99_retries)
+    # defined (0) when the subsystem is off; retry tails exist regardless
+    assert float(m_off.time_lost_failures) == 0.0
+    assert float(m_off.p99_backoff_wait) == 0.0
+    assert float(m_off.p99_retries) >= 0.0
+    assert "time_lost=" in summary_str(m_on)
+
+    rows_on, rows_off = fault_rows(r_on), fault_rows(r_off)
+    assert rows_off == []
+    assert len(rows_on) == 4
+    assert {"site", "fault_score", "blacklist", "n_kills", "time_lost"} <= set(rows_on[0])
+    assert {r["blacklist"] for r in rows_on} <= {"closed", "tripped", "half-open"}
+
+    ds_on, ds_off = ml_dataset(r_on), ml_dataset(r_off)
+    base = list(ds_off["feature_names"])
+    assert "fault_backoff_wait" not in base
+    assert list(ds_on["feature_names"]) == base + [
+        "fault_backoff_wait", "fault_retries", "site_fault_score"
+    ]
+    assert ds_on["features"].shape[1] == len(ds_on["feature_names"])
+    assert ds_on["features"][:, len(base)].max() > 0.0  # backoff waits recorded
+
+
+def test_load_faults_json():
+    names = ["CERN", "BNL", "FZK"]
+    spec = {
+        "link_fail_p": {"default": 0.01,
+                        "links": [{"src": "CERN", "dst": "BNL", "p": 0.5},
+                                  {"src": 2, "dst": 0, "p": 0.25}]},
+        "xfer_backoff": 45.0,
+        "max_xfer_attempts": 5,
+        "job_backoff": 30.0,
+        "walltime": 7200.0,
+        "replica_loss": [{"t": 100.0, "dataset": 2, "site": "FZK"}],
+        "blacklist": {"threshold": 0.5, "alpha": 0.3, "cooldown": 900.0},
+    }
+    fl = load_faults(spec, names, job_capacity=16)
+    p = np.asarray(fl.link_fail_p).reshape(3, 3)
+    assert p[0, 1] == np.float32(0.5) and p[2, 0] == np.float32(0.25)
+    assert p[1, 2] == np.float32(0.01)
+    assert float(fl.xfer_backoff) == 45.0
+    assert int(fl.max_xfer_attempts) == 5
+    assert float(fl.job_backoff) == 30.0
+    assert (np.asarray(fl.walltime) == 7200.0).all()
+    assert float(fl.loss_t[0]) == 100.0 and int(fl.loss_s[0]) == 2
+    assert float(fl.bl_threshold) == 0.5
+    with pytest.raises(ValueError, match="job_capacity"):
+        load_faults(spec, names)
+    with pytest.raises(ValueError, match="unknown site"):
+        load_faults({"replica_loss": [{"t": 1.0, "dataset": 0, "site": "nope"}]},
+                    names, job_capacity=4)
+
+
+def test_validation_errors():
+    with pytest.raises(ValueError, match="link_fail_p"):
+        make_faults(3, 8, link_fail_p=np.zeros((2, 2)))
+    with pytest.raises(ValueError, match=r"\[0, 1\]"):
+        make_faults(3, 8, link_fail_p=1.5)
+    with pytest.raises(ValueError, match="out of range"):
+        make_faults(3, 8, replica_loss=[(1.0, 0, 7)])
+    jobs = synthetic_panda_jobs(10, seed=0)
+    sites = atlas_like_platform(3, seed=0)
+    wrong = make_faults(3, jobs.capacity + 5)
+    with pytest.raises(ValueError, match="sized for"):
+        simulate(jobs, sites, get_policy("least_loaded"), jax.random.PRNGKey(0),
+                 faults=wrong)

@@ -26,6 +26,7 @@ from repro.core import (
     get_data_policy,
     get_policy,
     make_availability,
+    make_faults,
     make_replicas,
     make_transfers,
     make_workflow,
@@ -130,6 +131,19 @@ def _snapshot_combo(res) -> dict:
             n_cancel=int(ts.n_cancel),
             bytes_done=float(ts.bytes_done),
         )
+    # fault counters likewise only appear when the faults subsystem ran
+    fs = (getattr(res, "ext", None) or {}).get("faults")
+    if fs is not None:
+        snap["faults"] = dict(
+            n_xfer_fail=int(fs.n_xfer_fail),
+            n_xfer_retry=int(fs.n_xfer_retry),
+            n_xfer_exhaust=int(fs.n_xfer_exhaust),
+            n_kills=int(fs.n_kills),
+            n_lost_replicas=int(fs.n_lost_replicas),
+            n_bl_trips=int(fs.n_bl_trips),
+            n_probes=int(fs.n_probes),
+            time_lost=float(fs.time_lost),
+        )
     return snap
 
 
@@ -212,6 +226,31 @@ def compute_matrix_snapshot() -> dict:
         jobs, kw = combo_kwargs(scn, True, avail, wf)
         kw["transfers"] = make_transfers(4, jobs.capacity, max_active=2)
         out[name] = _snapshot_combo(simulate(jobs, scn["sites"], pol, key, **kw))
+    # fault-injection combos (ISSUE 10): all four channels armed at once —
+    # flaky WAN links, resubmission backoff, walltime kills, replica loss
+    # targeting cached (non-origin) copies, and the circuit breaker
+    def faults_state(jobs):
+        return make_faults(
+            4, jobs.capacity,
+            link_fail_p=0.3, xfer_backoff=120.0, max_xfer_attempts=3,
+            job_backoff=60.0, walltime=4000.0,
+            replica_loss=[(3000.0, 1, 1), (3000.0, 1, 2), (6000.0, 2, 3)],
+            blacklist_threshold=0.5, blacklist_alpha=0.5,
+            blacklist_cooldown=1800.0,
+        )
+    for combo in ((False, False, False), (False, True, False),
+                  (True, False, False), (True, True, True)):
+        data, avail, wf = combo
+        name = "+".join(
+            n for n, on in (("data", data), ("tr", data), ("avail", avail),
+                            ("wf", wf)) if on
+        )
+        name = f"{name}+faults" if name else "faults"
+        jobs, kw = combo_kwargs(scn, data, avail, wf)
+        if data:
+            kw["transfers"] = make_transfers(4, jobs.capacity, max_active=2)
+        kw["faults"] = faults_state(jobs)
+        out[name] = _snapshot_combo(simulate(jobs, scn["sites"], pol, key, **kw))
     return out
 
 
@@ -232,7 +271,8 @@ def test_golden_matrix_is_sensitive():
     assert set(expected) == {
         "plain", "data", "avail", "wf", "data+avail", "data+wf", "avail+wf",
         "data+avail+wf", "data+tr", "data+tr+avail", "data+tr+wf",
-        "data+tr+avail+wf",
+        "data+tr+avail+wf", "faults", "avail+faults", "data+tr+faults",
+        "data+tr+avail+wf+faults",
     }
     # availability preempts; data moves bytes; the coupled combo materializes
     assert sum(expected["avail"]["n_preempted"]) > 0
@@ -245,6 +285,14 @@ def test_golden_matrix_is_sensitive():
         assert ts["n_enq"] == ts["n_done"] + ts["n_cancel"]
     # transfers-off rows never grow the counter block
     assert "transfers" not in expected["data"]
+    # fault channels leave fingerprints: backoff shifts retries into waits,
+    # flaky links fail transfers, and the extended ledger still balances
+    assert "faults" not in expected["plain"]
+    assert expected["faults"]["faults"]["time_lost"] > 0
+    for name in ("data+tr+faults", "data+tr+avail+wf+faults"):
+        ts, fs = expected[name]["transfers"], expected[name]["faults"]
+        assert fs["n_xfer_fail"] > 0
+        assert ts["n_enq"] == ts["n_done"] + ts["n_cancel"] + fs["n_xfer_fail"]
     # subsystems genuinely interact: no two combos collapse to the same run
     spans = {k: (v["makespan"], v["rounds"]) for k, v in expected.items()}
     assert len(set(spans.values())) == len(spans)

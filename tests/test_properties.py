@@ -326,6 +326,96 @@ def test_transfer_conservation_laws(n_jobs, seed, cap, fail_rate, with_avail):
 
 
 # --------------------------------------------------------------------------
+# fault-injection conservation laws (ISSUE 10): the attempt ledger extended
+# by walltime kills, the transfer ledger extended by injected failures, and
+# every backed-off job still terminating
+# --------------------------------------------------------------------------
+from repro.core import make_faults  # noqa: E402
+
+
+def assert_fault_laws(res, jobs0, sites0):
+    """The ISSUE-2 laws restated for runs with the faults subsystem on:
+    walltime kills join preemptions on the unsuccessful-attempt side, and
+    injected transfer failures join the FTS ledger."""
+    valid = np.asarray(res.jobs.valid)
+    state = np.asarray(res.jobs.state)[valid]
+    fs = res.ext["faults"]
+    # 1. termination — backed-off and killed jobs still drain
+    assert np.isin(state, [DONE, FAILED]).all()
+    assert (np.asarray(res.jobs.state)[~valid] == DONE).all()
+    # 2. resources restored
+    np.testing.assert_array_equal(
+        np.asarray(res.sites.free_cores), np.asarray(sites0.cores)
+    )
+    np.testing.assert_allclose(
+        np.asarray(res.sites.free_memory), np.asarray(sites0.memory), rtol=1e-4, atol=1e-2
+    )
+    # 3. attempt ledger: every unsuccessful attempt is a machine failure, an
+    #    outage preemption, or a walltime kill — each a resubmission or
+    #    terminal; kills and preemptions share the per-job preempted counter
+    n_term_failed = int((state == FAILED).sum())
+    retries = int(np.asarray(res.jobs.retries)[valid].sum())
+    n_pre = int(np.asarray(res.avail.n_preempted).sum()) if res.avail is not None else 0
+    n_kills = int(fs.n_kills)
+    assert int((state == DONE).sum()) == int(np.asarray(res.sites.n_finished).sum())
+    assert (
+        int(np.asarray(res.sites.n_failed).sum()) + n_pre + n_kills
+        == retries + n_term_failed
+    )
+    assert n_pre + n_kills == int(np.asarray(res.jobs.preempted)[valid].sum())
+    # 4. transfer ledger extended by injected failures; queues drained and no
+    #    backoff retry left pending
+    ts = (res.ext or {}).get("transfers")
+    if ts is not None:
+        assert int(ts.n_enq) == int(ts.n_done) + int(ts.n_cancel) + int(fs.n_xfer_fail)
+        assert (np.asarray(ts.stat) == 0).all()
+        assert (np.asarray(ts.active) == 0).all()
+    assert not np.isfinite(np.asarray(fs.retry_at)).any()
+    # 5. loss calendar applied up to the horizon (events after the last
+    #    finish never fire — the engine stops with the work); catalog exact
+    lt = np.asarray(fs.loss_t)
+    assert np.asarray(fs.loss_done)[np.isfinite(lt) & (lt < float(res.makespan))].all()
+    if res.replicas is not None:
+        inv = catalog_invariants(res.replicas)
+        assert inv["capacity_ok"] and inv["accounting_ok"] and inv["origins_ok"]
+    # 6. timestamps ordered against the (possibly backoff-pushed) arrival
+    a = np.asarray(res.jobs.arrival)[valid]
+    s = np.asarray(res.jobs.t_start)[valid]
+    f = np.asarray(res.jobs.t_finish)[valid]
+    assert (a <= s + 1e-5).all() and (s < f).all()
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    n_jobs=st.integers(10, 40),
+    seed=st.integers(0, 2**16),
+    link_p=st.sampled_from([0.0, 0.3]),
+    job_backoff=st.sampled_from([0.0, 50.0]),
+    walltime=st.sampled_from([np.inf, 1500.0]),
+    with_blacklist=st.booleans(),
+)
+def test_fault_conservation_laws(n_jobs, seed, link_p, job_backoff, walltime,
+                                 with_blacklist):
+    """All five subsystems on (availability + workflow via the DAG-free
+    degenerate case is covered elsewhere; here: avail + data + transfers +
+    faults) with every fault channel randomly armed."""
+    fl = make_faults(
+        N_SITES, n_jobs + 3,
+        link_fail_p=link_p, xfer_backoff=40.0, max_xfer_attempts=3,
+        job_backoff=job_backoff, walltime=float(walltime),
+        replica_loss=[(200.0, 1, 1), (600.0, 3, 2)],
+        blacklist_threshold=0.7 if with_blacklist else None,
+        blacklist_alpha=0.5, blacklist_cooldown=300.0,
+    )
+    res, jobs0, sites0, _ = build_scenario(
+        n_jobs, seed, "least_loaded", fail_rate=0.15,
+        with_avail=True, with_data=True, with_transfers=True,
+        faults=fl,
+    )
+    assert_fault_laws(res, jobs0, sites0)
+
+
+# --------------------------------------------------------------------------
 # subsystem-API equivalence (ISSUE 4): the legacy kwargs surface and an
 # explicit subsystems=(...) tuple are the same engine, bit for bit
 # --------------------------------------------------------------------------
